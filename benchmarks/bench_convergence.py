@@ -1,0 +1,55 @@
+"""Paper Figure 5 (and 7b): convergence rate at a fixed cluster size.
+
+Records the loss-vs-master-updates curve per algorithm at N workers and
+checks the paper's relative claim: DANA-DC >= DANA-Slim > the rest in
+convergence speed (area under the eval-loss curve).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from .common import PAPER_ALGOS, classifier_setup, print_csv, run_algo, \
+    save_json
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--grads", type=int, default=2000)
+    ap.add_argument("--algos", nargs="*", default=list(PAPER_ALGOS))
+    ap.add_argument("--out", default="results/bench_convergence.json")
+    args = ap.parse_args(argv)
+
+    setup = classifier_setup()
+    curves = {}
+    rows = []
+    for name in args.algos:
+        hist, s = run_algo(name, setup, num_workers=args.workers,
+                           total_grads=args.grads, eval_every=100)
+        curves[name] = {"step": hist.eval_step, "loss": hist.eval_loss}
+        auc = float(np.trapezoid(hist.eval_loss, hist.eval_step)) \
+            / max(hist.eval_step[-1], 1)
+        rows.append({"algo": name, "workers": args.workers,
+                     "final_loss": s["final_loss"], "loss_auc": auc,
+                     "mean_gap": s["mean_gap"]})
+        print(f"# {name}: auc={auc:.4f} final={s['final_loss']:.4f}",
+              flush=True)
+
+    print_csv(rows, ["algo", "workers", "final_loss", "loss_auc",
+                     "mean_gap"])
+    by = {r["algo"]: r for r in rows}
+    dana_auc = min(by[a]["loss_auc"] for a in ("dana-slim", "dana-dc",
+                                               "dana-zero") if a in by)
+    others = [by[a]["loss_auc"] for a in by
+              if not a.startswith("dana")]
+    claims = {"dana_fastest_convergence":
+              bool(others and dana_auc <= min(others) * 1.02)}
+    print("claims:", claims)
+    save_json(args.out, {"rows": rows, "curves": curves, "claims": claims})
+    return rows, claims
+
+
+if __name__ == "__main__":
+    main()

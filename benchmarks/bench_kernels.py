@@ -1,0 +1,91 @@
+"""Kernel-level benchmark: the fused DANA master update (paper Sec. C.1
+"above 20 workers the master becomes a bottleneck") + the model hot-spot
+kernels.
+
+On this CPU container wall-clock timings of the Pallas path are
+meaningless (interpret mode); what we CAN measure/report:
+
+  * correctness: pallas(interpret) == ref to tight tolerance;
+  * the HBM-traffic model: bytes moved per master round, fused vs unfused
+    (the roofline-relevant number — the master is bandwidth-bound);
+  * wall time of the *reference* path (the XLA fallback that ops.py
+    dispatches on CPU), as a sanity number.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dana_update.ops import dana_master_update_leaf
+from repro.kernels.dana_update.ref import dana_master_update_ref
+from repro.roofline.analysis import HBM_BW
+
+from .common import print_csv, save_json
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def master_update_row(k: int, dtype=jnp.float32):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    theta, vi, v0, g = (jax.random.normal(kk, (k,), dtype) for kk in ks)
+    lr, gamma = 0.1, 0.9
+
+    ref = jax.jit(lambda *a: dana_master_update_ref(*a, lr, gamma))
+    t_ref = _time(ref, theta, vi, v0, g)
+
+    # interpret-mode correctness of the fused kernel
+    outs_k = dana_master_update_leaf(theta, vi, v0, g, lr, gamma,
+                                     use_pallas=True)
+    outs_r = dana_master_update_ref(theta, vi, v0, g, lr, gamma)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(outs_k, outs_r))
+
+    nbytes = np.dtype(np.float32).itemsize * k
+    fused_bytes = 8 * nbytes           # 4 reads + 4 writes
+    # unfused (one HLO op per line of Alg. 4): v'=gv+g (3), v0'=v0-v+v' (4),
+    # th'=th-lr v' (3), hat=th'-lr g v0' (3)  => ~13 stream passes
+    unfused_bytes = 13 * nbytes
+    return {
+        "kernel": "dana_update", "k": k,
+        "max_err": err,
+        "ref_cpu_ms": t_ref * 1e3,
+        "fused_bytes": fused_bytes,
+        "unfused_bytes": unfused_bytes,
+        "traffic_ratio": unfused_bytes / fused_bytes,
+        "tpu_roundtrip_us_fused": fused_bytes / HBM_BW * 1e6,
+        "tpu_roundtrip_us_unfused": unfused_bytes / HBM_BW * 1e6,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="*",
+                    default=[1 << 16, 1 << 20, 1 << 22])
+    ap.add_argument("--out", default="results/bench_kernels.json")
+    args = ap.parse_args(argv)
+
+    rows = [master_update_row(k) for k in args.sizes]
+    print_csv(rows, ["kernel", "k", "max_err", "ref_cpu_ms",
+                     "traffic_ratio", "tpu_roundtrip_us_fused",
+                     "tpu_roundtrip_us_unfused"])
+    claims = {"fused_correct": all(r["max_err"] < 1e-5 for r in rows),
+              "traffic_saving_x": rows[-1]["traffic_ratio"]}
+    print("claims:", claims)
+    save_json(args.out, {"rows": rows, "claims": claims})
+    return rows, claims
+
+
+if __name__ == "__main__":
+    main()

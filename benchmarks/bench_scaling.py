@@ -1,0 +1,95 @@
+"""Paper Figure 4 / Tables 2-4 (and Fig. 7 / Table 5 with --preset lm):
+final test error vs number of asynchronous workers, per algorithm.
+
+Paper claims reproduced (relative, on the synthetic tasks):
+  * DANA-Slim / DANA-DC hold the baseline loss to much larger N than
+    NAG-ASGD / DC-ASGD / Multi-ASGD.
+  * NAG-ASGD degrades sharply beyond ~12-16 workers.
+  * Multi-ASGD (the ablation) scales better than NAG-ASGD but worse than
+    DANA: per-worker momentum alone is NOT sufficient — the look-ahead is
+    what closes the gap.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .common import (PAPER_ALGOS, classifier_setup, lm_setup, print_csv,
+                     run_algo, save_json)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["classifier", "lm"],
+                    default="classifier")
+    ap.add_argument("--workers", type=int, nargs="*",
+                    default=[1, 4, 8, 16, 24])
+    ap.add_argument("--grads", type=int, default=2000)
+    ap.add_argument("--algos", nargs="*", default=list(PAPER_ALGOS))
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--heterogeneous", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    out = args.out or (f"results/bench_scaling_{args.preset}"
+                       + ("_hetero" if args.heterogeneous else "") + ".json")
+
+    setup = classifier_setup() if args.preset == "classifier" else lm_setup()
+    lr = args.lr if args.lr is not None else (
+        0.05 if args.preset == "classifier" else 0.1)
+
+    rows = []
+    # single-worker baseline (the paper's dashed line): plain NAG
+    _, base = run_algo("dana-zero", setup, num_workers=1,
+                       total_grads=args.grads, lr=lr,
+                       record_telemetry=False)
+    rows.append({"algo": "baseline(N=1 NAG)", "workers": 1,
+                 "final_loss": base["final_loss"],
+                 "mean_gap": 0.0, "sim_time": base["sim_time"]})
+
+    for name in args.algos:
+        for n in args.workers:
+            if n == 1:
+                continue
+            _, s = run_algo(name, setup, num_workers=n,
+                            total_grads=args.grads, lr=lr,
+                            heterogeneous=args.heterogeneous,
+                            record_telemetry=True)
+            rows.append({"algo": name, "workers": n,
+                         "final_loss": s["final_loss"],
+                         "mean_gap": s["mean_gap"],
+                         "sim_time": s["sim_time"]})
+            print(f"# {name} N={n}: final_loss={s['final_loss']:.4f} "
+                  f"gap={s['mean_gap']:.4g}", flush=True)
+
+    print_csv(rows, ["algo", "workers", "final_loss", "mean_gap",
+                     "sim_time"])
+    claims = _claims(rows, base["final_loss"], max(args.workers))
+    print("claims:", claims)
+    save_json(out, {"rows": rows, "baseline": base["final_loss"],
+                    "claims": claims})
+    return rows, claims
+
+
+def _claims(rows, baseline, nmax):
+    import math
+
+    def final(algo, n):
+        for r in rows:
+            if r["algo"] == algo and r["workers"] == n:
+                v = r["final_loss"]
+                # divergence (NaN/Inf) counts as infinitely bad
+                return float("inf") if not math.isfinite(v) else v
+        return float("inf")
+
+    dana = min(final("dana-slim", nmax), final("dana-zero", nmax))
+    return {
+        "dana_beats_nag_at_max_N": dana < final("nag-asgd", nmax),
+        "dana_beats_multi_at_max_N": dana < final("multi-asgd", nmax),
+        "dana_slim_loss_at_max_N": final("dana-slim", nmax),
+        "nag_loss_at_max_N": final("nag-asgd", nmax),
+        "multi_loss_at_max_N": final("multi-asgd", nmax),
+        "baseline_loss": baseline,
+    }
+
+
+if __name__ == "__main__":
+    main()

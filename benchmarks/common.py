@@ -1,0 +1,123 @@
+"""Shared harness for the paper-table benchmarks.
+
+Every ``bench_*`` module reproduces one paper table/figure on the
+discrete-event simulator (the paper's own Sec. 5 methodology) with the
+synthetic tasks from ``repro.data.synthetic`` (offline container — see
+DESIGN.md Sec. 8: we reproduce the paper's *relative* claims).
+
+Output convention: every benchmark prints a CSV block to stdout and (when
+``--out`` is given) writes a JSON artifact under results/ for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.algorithms import make_algorithm
+from repro.core.engine import SimulationConfig, run_simulation
+from repro.core.gamma import GammaModel
+from repro.core.schedules import Schedule
+from repro.core.types import HyperParams
+from repro.data.synthetic import ClassificationTask, LMTask
+from repro.models.toy import make_classifier_fns
+
+# The paper's Sec. 5 algorithm roster (LWP included from Table 5).
+PAPER_ALGOS = ("nag-asgd", "multi-asgd", "dc-asgd", "lwp",
+               "dana-zero", "dana-slim", "dana-dc")
+FAST_ALGOS = ("nag-asgd", "multi-asgd", "dana-zero", "dana-slim")
+
+
+def classifier_setup(seed: int = 0, dim: int = 32, num_classes: int = 10,
+                     batch_size: int = 64, width: int = 64):
+    """The CIFAR stand-in: MLP classifier on the Gaussian-mixture task."""
+    task = ClassificationTask(dim=dim, num_classes=num_classes,
+                              batch_size=batch_size, seed=seed)
+    init, grad_fn, make_eval = make_classifier_fns(
+        [dim, width, width, num_classes])
+    params0 = init(jax.random.PRNGKey(seed))
+    eval_fn = make_eval(task.eval_batch())
+    return params0, grad_fn, task.batch, eval_fn
+
+
+def lm_setup(seed: int = 0, vocab: int = 128, seq: int = 64,
+             batch_size: int = 8, d_model: int = 64):
+    """The ImageNet/transformer stand-in: tiny transformer LM on the
+    synthetic markov task (uses the reduced qwen2-family model)."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models.api import build_model
+    import dataclasses
+    cfg = get_config("qwen2-1.5b").reduced()
+    cfg = dataclasses.replace(cfg, vocab_size=vocab, d_model=d_model,
+                              num_heads=4, num_kv_heads=2, head_dim=32,
+                              d_ff=4 * d_model)
+    model = build_model(cfg)
+    task = LMTask(vocab_size=vocab, seq_len=seq, batch_size=batch_size,
+                  seed=seed)
+    params0 = model.init(jax.random.PRNGKey(seed))
+
+    def grad_fn(params, tokens):
+        return jax.grad(lambda p: model.loss(p, {"tokens": tokens}))(params)
+
+    ev = task.eval_batch(8)
+
+    def eval_fn(params):
+        return model.loss(params, {"tokens": ev})
+
+    return params0, grad_fn, task.batch, eval_fn
+
+
+def run_algo(algo_name: str, setup, *, num_workers: int, total_grads: int,
+             lr: float = 0.05, momentum: float = 0.9,
+             heterogeneous: bool = False, seed: int = 0,
+             warmup_frac: float = 0.05, milestones=(0.5, 0.75),
+             record_telemetry: bool = True, eval_every: int = 200):
+    """One (algorithm, cluster-size) simulation with the paper's schedule
+    recipe (warm-up from lr/N + step decay + momentum correction)."""
+    params0, grad_fn, next_batch, eval_fn = setup
+    sched = Schedule(
+        base_lr=lr, num_workers=num_workers,
+        warmup_steps=int(warmup_frac * total_grads),
+        decay_factor=0.1,
+        milestones=tuple(int(m * total_grads) for m in milestones))
+    hp = HyperParams(lr=lr, momentum=momentum)
+    algo = make_algorithm(algo_name, hp, sched)
+    gm = (GammaModel.heterogeneous_env(seed=seed) if heterogeneous
+          else GammaModel.homogeneous(seed=seed))
+    cfg = SimulationConfig(num_workers=num_workers, total_grads=total_grads,
+                           eval_every=eval_every, exec_model=gm,
+                           record_telemetry=record_telemetry)
+    t0 = time.time()
+    hist = run_simulation(algo, grad_fn, params0, next_batch, cfg, eval_fn)
+    s = hist.summary()
+    s.update(algo=algo_name, workers=num_workers, wall_s=time.time() - t0,
+             heterogeneous=heterogeneous)
+    return hist, s
+
+
+def print_csv(rows: list[dict], cols: list[str]):
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def save_json(path: str, obj):
+    if not path:
+        return
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=lambda o: float(o)
+                  if isinstance(o, (np.floating,)) else str(o))
+    print(f"[saved] {path}")

@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from results/*.json artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report            # print tables
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def roofline_table(path="results/dryrun_results.json", mesh=None):
+    with open(path) as f:
+        d = json.load(f)
+    lines = ["| arch | shape | mesh | compute s | memory s | coll s | "
+             "dominant | MODEL/HLO flops | GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for k in sorted(d):
+        v = d[k]
+        if mesh and v.get("mesh") != mesh:
+            continue
+        if v.get("status") == "skipped":
+            lines.append(f"| {v['arch']} | {v['shape']} | {v['mesh']} | "
+                         f"skipped | — | — | — | — | — |")
+            continue
+        if v.get("status") != "ok":
+            lines.append(f"| {v['arch']} | {v['shape']} | {v['mesh']} | "
+                         f"ERROR | | | | | |")
+            continue
+        lines.append(
+            f"| {v['arch']} | {v['shape']} | {v['mesh']} | "
+            f"{fmt_s(v['compute_s'])} | {fmt_s(v['memory_s'])} | "
+            f"{fmt_s(v['collective_s'])} | **{v['dominant']}** | "
+            f"{v['useful_ratio']:.3f} | {v['per_device_mem_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def claims_summary():
+    out = []
+    for name in ("bench_gap", "bench_scaling_classifier", "bench_scaling_lm",
+                 "bench_convergence", "bench_heterogeneous",
+                 "bench_speedup", "bench_gamma", "bench_kernels"):
+        try:
+            with open(f"results/{name}.json") as f:
+                data = json.load(f)
+        except OSError:
+            continue
+        claims = data.get("claims") if isinstance(data, dict) else None
+        if claims:
+            out.append(f"* **{name}**: " + ", ".join(
+                f"{k}={_round(v)}" for k, v in claims.items()))
+        elif isinstance(data, list):
+            out.append(f"* **{name}**: " + "; ".join(
+                str({kk: _round(vv) for kk, vv in r.items()})
+                for r in data))
+    return "\n".join(out)
+
+
+def _round(v):
+    return round(v, 4) if isinstance(v, float) else v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--file", default="results/dryrun_results.json",
+                    help="baseline or results/dryrun_results_optimized.json")
+    args = ap.parse_args()
+    print(f"## Roofline table ({args.file})\n")
+    print(roofline_table(path=args.file, mesh=args.mesh))
+    print("\n## Claims\n")
+    print(claims_summary())
+
+
+if __name__ == "__main__":
+    main()

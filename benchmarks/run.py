@@ -1,0 +1,78 @@
+"""Run every paper-table benchmark (one module per table/figure).
+
+  PYTHONPATH=src python -m benchmarks.run             # default (fast) sizes
+  PYTHONPATH=src python -m benchmarks.run --full      # paper-scale sweeps
+  PYTHONPATH=src python -m benchmarks.run --only gap scaling
+
+Artifacts land in results/*.json; EXPERIMENTS.md cites them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_convergence, bench_gamma, bench_gap,
+               bench_heterogeneous, bench_kernels, bench_optimizers,
+               bench_scaling, bench_speedup)
+
+SUITES = {
+    "gamma": (bench_gamma, [], []),                       # Fig. 3
+    "speedup": (bench_speedup, [], []),                   # Fig. 12
+    "kernels": (bench_kernels, [], []),                   # Sec. C.1
+    "gap": (bench_gap, ["--grads", "800"],                # Fig. 2 / 11
+            ["--grads", "3000", "--workers-sweep", "2", "4", "8", "16",
+             "32"]),
+    "convergence": (bench_convergence, ["--grads", "1200"],   # Fig. 5
+                    ["--grads", "4000"]),
+    "scaling": (bench_scaling,                            # Fig. 4 / Tab. 2-4
+                ["--grads", "1200", "--workers", "1", "4", "8", "16",
+                 "--algos", "nag-asgd", "multi-asgd", "dana-zero",
+                 "dana-slim"],
+                ["--grads", "4000", "--lr", "0.1", "--workers", "1", "4", "8",
+                 "16", "24", "32"]),
+    "heterogeneous": (bench_heterogeneous,                # Fig. 6 / Tab. 6
+                      ["--grads", "1200", "--workers", "8",
+                       "--algos", "nag-asgd", "dana-slim", "dana-hetero"],
+                      ["--grads", "4000", "--workers", "8", "16", "24"]),
+    "optimizers": (bench_optimizers,                     # Sec. 7 extension
+                   ["--grads", "1000", "--workers", "4", "8"],
+                   ["--grads", "3000", "--workers", "4", "8", "16", "24"]),
+    "scaling-lm": (bench_scaling,                         # Fig. 7 / Tab. 5
+                   ["--preset", "lm", "--grads", "600", "--workers", "1",
+                    "4", "8", "--algos", "nag-asgd", "dana-slim"],
+                   ["--preset", "lm", "--grads", "2000", "--workers", "1",
+                    "8", "16", "32"]),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweep sizes")
+    ap.add_argument("--only", nargs="*", default=None,
+                    choices=list(SUITES))
+    args = ap.parse_args(argv)
+
+    names = args.only or list(SUITES)
+    failures = []
+    for name in names:
+        mod, fast, full = SUITES[name]
+        argv_i = (full if args.full else fast)
+        print(f"\n===== {name} {' '.join(argv_i)} =====", flush=True)
+        t0 = time.time()
+        try:
+            mod.main(argv_i)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"[FAILED] {name}: {e!r}", flush=True)
+        print(f"===== {name} done in {time.time() - t0:.1f}s =====",
+              flush=True)
+    if failures:
+        print("\nFAILURES:", failures)
+        sys.exit(1)
+    print("\nall benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: DANA in 40 lines.
+
+Trains the same classifier asynchronously on 8 simulated workers with
+NAG-ASGD (the naive way to add momentum to ASGD) and DANA-Slim (the
+paper's method).  Watch the gap and the final loss.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.algorithms import make_algorithm
+from repro.core.engine import SimulationConfig, run_simulation
+from repro.core.types import HyperParams
+from repro.data.synthetic import ClassificationTask
+from repro.models.toy import make_classifier_fns
+
+WORKERS, GRADS = 8, 1500
+
+task = ClassificationTask(dim=32, num_classes=10, batch_size=64)
+init, grad_fn, make_eval = make_classifier_fns([32, 64, 64, 10])
+params0 = init(jax.random.PRNGKey(0))
+eval_fn = make_eval(task.eval_batch())
+
+for name in ("nag-asgd", "dana-slim"):
+    algo = make_algorithm(name, HyperParams(lr=0.05, momentum=0.9))
+    cfg = SimulationConfig(num_workers=WORKERS, total_grads=GRADS,
+                           eval_every=250)
+    hist = run_simulation(algo, grad_fn, params0, task.batch, cfg, eval_fn)
+    s = hist.summary()
+    print(f"{name:>10}: final_loss={s['final_loss']:.4f} "
+          f"mean_gap={s['mean_gap']:.5f} mean_lag={s['mean_lag']:.1f}")
+
+print("\nSame lag — but DANA's look-ahead keeps the gap (and loss) small.")

@@ -1,0 +1,60 @@
+"""Minimal dependency-free pytree checkpointing (npz + json treedef).
+
+Checkpoints cover model params AND the async algorithm state (per-worker
+momentum vectors, running sum v0, schedule counters) so that an interrupted
+asynchronous run restarts with its staleness-mitigation state intact — the
+per-worker momenta are part of the master's state in DANA-Zero/DC and are
+NOT reconstructible from the weights.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [jax.tree_util.keystr(path) for path, _ in flat]
+    leaves = [np.asarray(leaf) for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+def save_pytree(path: str, tree) -> None:
+    """Atomically save a pytree of arrays to ``path`` (.npz)."""
+    keys, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": leaf for i, leaf in enumerate(leaves)}
+    manifest = json.dumps(keys)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __manifest__=manifest, **arrays)
+        # np.savez appends .npz to the filename it writes
+        os.replace(tmp + ".npz", path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_pytree(path: str, like):
+    """Load a checkpoint into the structure of ``like`` (shape-checked)."""
+    with np.load(path, allow_pickle=False) as data:
+        keys = json.loads(str(data["__manifest__"]))
+        leaves = [data[f"leaf_{i}"] for i in range(len(keys))]
+    like_keys, like_leaves, treedef = _flatten_with_paths(like)
+    if keys != like_keys:
+        raise ValueError(
+            f"checkpoint structure mismatch:\n saved={keys[:5]}...\n "
+            f"expected={like_keys[:5]}...")
+    for k, saved, expect in zip(keys, leaves, like_leaves):
+        if saved.shape != expect.shape:
+            raise ValueError(f"shape mismatch at {k}: "
+                             f"{saved.shape} vs {expect.shape}")
+    import jax.numpy as jnp
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(l) for l in leaves])

@@ -1,0 +1,17 @@
+"""DANA core: algorithms, discrete-event async engine, telemetry."""
+from .algorithms import (ASGD, DCASGD, LWP, REGISTRY, Algorithm, DanaDC,
+                         DanaHetero, DanaSlim, DanaZero, MultiASGD, NagASGD,
+                         SSGD, YellowFin, make_algorithm)
+from .engine import SimulationConfig, run_simulation
+from .gamma import GammaModel
+from .metrics import History
+from .schedules import Schedule, constant, momentum_correction
+from .types import HyperParams, tree_gap
+
+__all__ = [
+    "ASGD", "DCASGD", "LWP", "REGISTRY", "Algorithm", "DanaDC", "DanaHetero",
+    "DanaSlim", "DanaZero", "MultiASGD", "NagASGD", "SSGD", "YellowFin",
+    "make_algorithm", "SimulationConfig", "run_simulation", "GammaModel",
+    "History", "Schedule", "constant", "momentum_correction", "HyperParams",
+    "tree_gap",
+]

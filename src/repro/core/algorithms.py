@@ -1,0 +1,717 @@
+"""The paper's asynchronous algorithms as pure functional update rules.
+
+Every algorithm is a (init, send, receive) triple over pytrees:
+
+  * ``init(params, num_workers)``       -> state
+  * ``send(state, i)``                  -> (view, state)   # params worker i
+                                                           # computes grads on
+  * ``receive(state, i, grad, now)``    -> state           # master applies
+                                                           # worker i's message
+  * ``master_params(state)``            -> deployable params
+
+The discrete-event engine (``repro.core.engine``) decides *when* send and
+receive happen; the algorithms never know about time except through the
+optional ``now`` argument (used only by the rate-weighted DANA extension).
+
+Implemented (paper algorithm numbers in brackets):
+  asgd          plain ASGD, no momentum                      [Alg. 1+2]
+  nag-asgd      single shared momentum at the master         [Alg. 8, fn. 1]
+  multi-asgd    per-worker momentum at the master            [Alg. 9]
+  dc-asgd       delay compensation (Zheng et al. 2017)       [Alg. 10]
+  lwp           linear weight prediction (Kosson et al.)     [Alg. 3]
+  dana-zero     per-worker momentum + global look-ahead      [Alg. 4]
+  dana-slim     Bengio-style, zero master overhead           [Alg. 6]
+  dana-dc       DANA-Zero + delay compensation               [Alg. 7]
+  dana-hetero   rate-weighted look-ahead (paper Sec. 3,
+                "monitoring the rate of each worker's
+                updates and weighting them accordingly")     [extension]
+  ssgd          synchronous baseline (engine-driven barrier)
+  yellowfin     simplified closed-loop autotuner             [baseline]
+
+Note on NAG vs heavy-ball at the master: Appendix Algs. 8/9 print the
+heavy-ball update ``theta <- theta - eta*v`` while footnote 1 and the text
+("a separate NAG optimizer for each worker") prescribe Nesterov.  We follow
+the text (Bengio-NAG update ``theta <- theta - eta*(gamma*v_new + g)``) by
+default and expose ``nesterov=False`` for the literal appendix variant.
+DANA-Zero/DANA-DC use the literal Alg. 4/7 master update (plain ``-eta*v``)
+because there the Nesterov look-ahead lives in the *send* path — that is the
+paper's point.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import Schedule, constant, momentum_correction
+from .types import (HyperParams, Pytree, tree_add, tree_axpy, tree_cast,
+                    tree_index, tree_lincomb, tree_mul, tree_scale,
+                    tree_set_index, tree_stack, tree_sub, tree_zeros_like,
+                    tree_set_index as _tsi)
+
+
+def _stacked_zeros(params: Pytree, n: int) -> Pytree:
+    return jax.tree.map(
+        lambda l: jnp.zeros((n,) + l.shape, l.dtype), params)
+
+
+def _stacked_broadcast(params: Pytree, n: int) -> Pytree:
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), params)
+
+
+class Algorithm:
+    """Base class. Subclasses override _send/_receive on plain pytrees."""
+
+    name: str = "base"
+    uses_momentum = True
+
+    def __init__(self, hp: HyperParams = HyperParams(),
+                 schedule: Schedule | None = None, nesterov: bool = True):
+        self.hp = hp
+        self.schedule = schedule if schedule is not None else constant(hp.lr)
+        self.nesterov = nesterov
+
+    # -- common state plumbing ------------------------------------------
+    def _base_state(self, params: Pytree, num_workers: int) -> dict:
+        return {
+            "theta0": tree_cast(params, jnp.float32),
+            "t": jnp.zeros((), jnp.int32),
+            "lr_prev": jnp.asarray(self.schedule(0), jnp.float32),
+        }
+
+    def init(self, params: Pytree, num_workers: int) -> dict:
+        raise NotImplementedError
+
+    def send(self, state: dict, i) -> tuple[Pytree, dict]:
+        return state["theta0"], state
+
+    def receive(self, state: dict, i, grad: Pytree, now=0.0) -> dict:
+        raise NotImplementedError
+
+    def master_params(self, state: dict) -> Pytree:
+        return state["theta0"]
+
+    # momentum correction (Goyal et al. 2017): rescale momentum buffers
+    # when the schedule moves the learning rate.
+    def _lr_and_correction(self, state: dict):
+        lr = self.schedule(state["t"])
+        factor = momentum_correction(None, lr, state["lr_prev"])
+        return lr, factor
+
+
+class ASGD(Algorithm):
+    """Plain asynchronous SGD (Algorithms 1 + 2), no momentum."""
+
+    name = "asgd"
+    uses_momentum = False
+
+    def init(self, params, num_workers):
+        return self._base_state(params, num_workers)
+
+    def receive(self, state, i, grad, now=0.0):
+        lr, _ = self._lr_and_correction(state)
+        state = dict(state)
+        state["theta0"] = tree_axpy(-lr, grad, state["theta0"])
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class NagASGD(Algorithm):
+    """Single shared momentum vector at the master (NAG-ASGD)."""
+
+    name = "nag-asgd"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = tree_zeros_like(s["theta0"])
+        return s
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        v = tree_scale(corr, state["v"])
+        v = tree_axpy(g, v, grad)                     # v <- gamma*v + g
+        if self.nesterov:
+            upd = tree_axpy(g, v, grad)               # gamma*v_new + g
+        else:
+            upd = v
+        state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
+        state["v"] = v
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class MultiASGD(Algorithm):
+    """Per-worker momentum vectors at the master (Algorithm 9).
+
+    The paper's ablation: momentum-per-worker WITHOUT the DANA look-ahead.
+    The master update is the literal Alg. 9 heavy-ball step
+    ``theta <- theta - eta*v_i`` and the master sends theta (no
+    look-ahead).  NOTE: applying the Bengio-NAG update here instead
+    (``theta <- theta - eta*(gamma*v_i + g)``) is *algebraically identical
+    to DANA-Slim* — that is exactly the paper's Eq. 16 insight, and
+    ``tests/test_algorithms.py::test_multi_asgd_bengio_is_dana_slim``
+    asserts it.  Keeping the literal update preserves the ablation.
+    """
+
+    name = "multi-asgd"
+
+    def __init__(self, hp: HyperParams = HyperParams(),
+                 schedule: Schedule | None = None, nesterov: bool = False):
+        super().__init__(hp, schedule, nesterov)
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        vs = tree_scale(corr, state["v"])
+        vi = tree_index(vs, i)
+        vi = tree_axpy(g, vi, grad)
+        upd = tree_axpy(g, vi, grad) if self.nesterov else vi
+        state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
+        state["v"] = tree_set_index(vs, i, vi)
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        return s
+
+
+class DCASGD(Algorithm):
+    """Delay-compensated ASGD (Zheng et al. 2017), Algorithm 10.
+
+    ghat = g + lambda * g (.) g (.) (theta0 - theta_sent_i)
+    """
+
+    name = "dc-asgd"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
+        return s
+
+    def send(self, state, i):
+        state = dict(state)
+        state["sent"] = tree_set_index(state["sent"], i, state["theta0"])
+        return state["theta0"], state
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        lam = self.hp.dc_lambda
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        sent_i = tree_index(state["sent"], i)
+        delta = tree_sub(state["theta0"], sent_i)
+        ghat = tree_add(grad, tree_scale(lam, tree_mul(tree_mul(grad, grad),
+                                                       delta)))
+        vs = tree_scale(corr, state["v"])
+        vi = tree_axpy(g, tree_index(vs, i), ghat)
+        state["theta0"] = tree_axpy(-lr, vi, state["theta0"])
+        state["v"] = tree_set_index(vs, i, vi)
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class LWP(Algorithm):
+    """Linear Weight Prediction (Kosson et al. 2020), Algorithm 3.
+
+    Master keeps a single momentum vector and sends the tau-step linear
+    extrapolation theta0 - tau*eta*v.
+    """
+
+    name = "lwp"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = tree_zeros_like(s["theta0"])
+        tau = self.hp.lwp_tau if self.hp.lwp_tau is not None \
+            else float(max(num_workers - 1, 1))
+        s["tau"] = jnp.asarray(tau, jnp.float32)
+        return s
+
+    def send(self, state, i):
+        lr = self.schedule(state["t"])
+        view = tree_axpy(-state["tau"] * lr, state["v"], state["theta0"])
+        return view, state
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        v = tree_axpy(g, tree_scale(corr, state["v"]), grad)
+        state["theta0"] = tree_axpy(-lr, v, state["theta0"])
+        state["v"] = v
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class DanaZero(Algorithm):
+    """DANA-Zero (Algorithm 4) with the O(k) running-sum trick (App. A.2).
+
+    Master keeps a momentum vector per worker plus v0 = sum_j v^j, updated
+    incrementally: v0 <- v0 - v_i_old + v_i_new.  The send path returns the
+    estimated future position  theta_hat = theta0 - eta*gamma*v0.
+    """
+
+    name = "dana-zero"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        s["v0"] = tree_zeros_like(s["theta0"])
+        return s
+
+    def send(self, state, i):
+        lr = self.schedule(state["t"])
+        view = tree_axpy(-lr * self.hp.momentum, state["v0"], state["theta0"])
+        return view, state
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        vs = tree_scale(corr, state["v"])
+        v0 = tree_scale(corr, state["v0"])
+        vi_old = tree_index(vs, i)
+        vi = tree_axpy(g, vi_old, grad)                   # v_i <- g*v_i + grad
+        # O(k) incremental sum maintenance (Appendix A.2)
+        v0 = tree_add(tree_sub(v0, vi_old), vi)
+        state["theta0"] = tree_axpy(-lr, vi, state["theta0"])
+        state["v"] = tree_set_index(vs, i, vi)
+        state["v0"] = v0
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class DanaSlim(Algorithm):
+    """DANA-Slim (Algorithm 6): the master is a plain ASGD master over Theta;
+    each *worker* keeps its own momentum and sends u = gamma*v_new + g.
+
+    In the single-process simulator the worker momentum lives in the same
+    state dict (keyed per worker) but is only ever touched on the worker's
+    own receive path — exactly the paper's placement.  ``master_params`` is
+    Theta, the NAG-shifted iterate (the deployable parameters, as in any
+    Bengio-NAG implementation).
+    """
+
+    name = "dana-slim"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = _stacked_zeros(s["theta0"], num_workers)   # worker-side
+        return s
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        vs = tree_scale(corr, state["v"])
+        vi = tree_axpy(g, tree_index(vs, i), grad)          # worker-side
+        u = tree_axpy(g, vi, grad)                          # send gamma*v + g
+        state["theta0"] = tree_axpy(-lr, u, state["theta0"])  # ASGD master
+        state["v"] = tree_set_index(vs, i, vi)
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class DanaDC(DanaZero):
+    """DANA-DC (Algorithm 7): DANA-Zero + delay compensation."""
+
+    name = "dana-dc"
+
+    def init(self, params, num_workers):
+        s = super().init(params, num_workers)
+        s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
+        return s
+
+    def send(self, state, i):
+        view, state = super().send(state, i)
+        state = dict(state)
+        state["sent"] = tree_set_index(state["sent"], i, view)
+        return view, state
+
+    def receive(self, state, i, grad, now=0.0):
+        lam = self.hp.dc_lambda
+        sent_i = tree_index(state["sent"], i)
+        delta = tree_sub(state["theta0"], sent_i)
+        ghat = tree_add(grad, tree_scale(lam, tree_mul(tree_mul(grad, grad),
+                                                       delta)))
+        return super().receive(state, i, ghat, now)
+
+
+class DanaHetero(DanaZero):
+    """Rate-weighted DANA look-ahead (beyond-paper extension the paper
+    itself suggests: "monitoring the rate of each worker's updates and
+    weighting them accordingly").
+
+    The master tracks an EMA of each worker's update rate r_j.  Worker i's
+    look-ahead weights each v^j by the expected number of worker-j updates
+    during one of worker i's computation intervals, r_j / r_i:
+
+        theta_hat_i = theta0 - eta*gamma * sum_j (r_j / r_i) v^j
+    """
+
+    name = "dana-hetero"
+    RATE_EMA = 0.8
+
+    def init(self, params, num_workers):
+        s = super().init(params, num_workers)
+        s["last_t"] = jnp.zeros((num_workers,), jnp.float32)
+        s["interval"] = jnp.ones((num_workers,), jnp.float32)
+        return s
+
+    def send(self, state, i):
+        lr = self.schedule(state["t"])
+        rates = 1.0 / jnp.maximum(state["interval"], 1e-6)   # [N]
+        w = rates / jnp.maximum(rates[i], 1e-6)              # r_j / r_i
+        # weighted sum of per-worker momentum vectors
+        weighted = jax.tree.map(
+            lambda vstack: jnp.tensordot(w, vstack, axes=1), state["v"])
+        view = tree_axpy(-lr * self.hp.momentum, weighted, state["theta0"])
+        return view, state
+
+    def receive(self, state, i, grad, now=0.0):
+        state = dict(state)
+        now = jnp.asarray(now, jnp.float32)
+        dt = jnp.maximum(now - state["last_t"][i], 1e-6)
+        ema = self.RATE_EMA
+        state["interval"] = state["interval"].at[i].set(
+            ema * state["interval"][i] + (1 - ema) * dt)
+        state["last_t"] = state["last_t"].at[i].set(now)
+        return super().receive(state, i, grad, now)
+
+
+class SSGD(Algorithm):
+    """Synchronous baseline: the engine gathers one gradient per worker at a
+    barrier and calls ``receive_all`` with their mean (Bengio-NAG update)."""
+
+    name = "ssgd"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = tree_zeros_like(s["theta0"])
+        return s
+
+    def receive_all(self, state, mean_grad):
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        v = tree_axpy(g, tree_scale(corr, state["v"]), mean_grad)
+        upd = tree_axpy(g, v, mean_grad) if self.nesterov else v
+        state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
+        state["v"] = v
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+    def receive(self, state, i, grad, now=0.0):  # engine uses receive_all
+        return self.receive_all(state, grad)
+
+
+class YellowFin(Algorithm):
+    """Simplified closed-loop YellowFin (Zhang & Mitliagkas 2019).
+
+    Tracks EMA estimates of curvature range (h_min, h_max) from squared
+    gradient norms, gradient variance C, and distance-to-optimum D, then
+    solves the paper's one-dimensional robustness problem for the momentum
+    coefficient:   sqrt(mu) >= max( (sqrt(h_max/h_min)-1)/(sqrt(h_max/h_min)+1),
+                                     1 - sqrt(lr * ||g||^2 / D) )
+    This is a *baseline* (the paper uses YellowFin only for comparison), so
+    we favor clarity over the reference implementation's full generality.
+    """
+
+    name = "yellowfin"
+    BETA = 0.999
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = tree_zeros_like(s["theta0"])
+        s["h_min"] = jnp.asarray(1e12, jnp.float32)
+        s["h_max"] = jnp.asarray(1e-12, jnp.float32)
+        s["g2_ema"] = jnp.zeros((), jnp.float32)
+        s["g_norm_ema"] = jnp.zeros((), jnp.float32)
+        s["dist_ema"] = jnp.zeros((), jnp.float32)
+        s["mu"] = jnp.asarray(0.0, jnp.float32)
+        s["lr_yf"] = jnp.asarray(self.hp.lr, jnp.float32)
+        return s
+
+    def receive(self, state, i, grad, now=0.0):
+        from .types import tree_sq_l2
+        state = dict(state)
+        b = self.BETA
+        g2 = tree_sq_l2(grad)
+        debias = 1.0 - b ** jnp.maximum(state["t"].astype(jnp.float32) + 1, 1)
+        g2_ema = b * state["g2_ema"] + (1 - b) * g2
+        gn_ema = b * state["g_norm_ema"] + (1 - b) * jnp.sqrt(g2)
+        h = g2
+        h_min = jnp.minimum(b * state["h_min"] + (1 - b) * h, h)
+        h_max = jnp.maximum(b * state["h_max"] + (1 - b) * h, h)
+        dist = b * state["dist_ema"] + (1 - b) * (gn_ema / jnp.maximum(
+            g2_ema, 1e-12))
+        ratio = jnp.sqrt(jnp.maximum(h_max, 1e-12) /
+                         jnp.maximum(h_min, 1e-12))
+        mu_curv = ((ratio - 1.0) / (ratio + 1.0)) ** 2
+        lr = state["lr_yf"]
+        mu_noise = jnp.square(1.0 - jnp.sqrt(jnp.clip(
+            lr * g2 / jnp.maximum(dist / debias, 1e-12), 0.0, 1.0)))
+        mu = jnp.clip(jnp.maximum(mu_curv, mu_noise), 0.0, 0.99)
+        v = tree_axpy(mu, state["v"], tree_scale(lr, grad))
+        state["theta0"] = tree_sub(state["theta0"], v)
+        state.update(v=v, g2_ema=g2_ema, g_norm_ema=gn_ema, h_min=h_min,
+                     h_max=h_max, dist_ema=dist, mu=mu,
+                     t=state["t"] + 1, lr_prev=lr)
+        return state
+
+
+REGISTRY: dict[str, type[Algorithm]] = {
+    cls.name: cls for cls in
+    [ASGD, NagASGD, MultiASGD, DCASGD, LWP, DanaZero, DanaSlim, DanaDC,
+     DanaHetero, SSGD, YellowFin]
+}
+
+
+def make_algorithm(name: str, hp: HyperParams = HyperParams(),
+                   schedule: Schedule | None = None, **kw) -> Algorithm:
+    if name not in REGISTRY:
+        raise ValueError(f"unknown algorithm {name!r}; "
+                         f"choose from {sorted(REGISTRY)}")
+    return REGISTRY[name](hp, schedule, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper extensions (the paper's own future-work list, Sec. 7):
+# "we plan on adapting DANA to newer optimizers, such as Nadam, and to
+#  more recent asynchronous algorithms, in particular EASGD"
+# ---------------------------------------------------------------------------
+class NadamASGD(Algorithm):
+    """Naive async Nadam: ONE shared (m, u) moment pair at the master —
+    the adaptive-optimizer analogue of NAG-ASGD (baseline for DANA-Nadam).
+
+    Simplified Nadam (no bias correction, like the momentum algorithms
+    here):  m <- b1*m + (1-b1)*g ; u <- b2*u + (1-b2)*g^2
+            theta <- theta - lr * (b1*m + (1-b1)*g) / (sqrt(u)+eps)
+    """
+
+    name = "nadam-asgd"
+    B2 = 0.999
+    EPS = 1e-8
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["m"] = tree_zeros_like(s["theta0"])
+        s["u"] = tree_zeros_like(s["theta0"])
+        return s
+
+    def _apply(self, state, m_new, grad, u_new, lr):
+        b1 = self.hp.momentum
+        upd = jax.tree.map(
+            lambda m, g, u: (b1 * m + (1 - b1) * g)
+            / (jnp.sqrt(u) + self.EPS), m_new, grad, u_new)
+        state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
+        return state
+
+    def receive(self, state, i, grad, now=0.0):
+        b1, b2 = self.hp.momentum, self.B2
+        lr = self.schedule(state["t"])
+        state = dict(state)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                         state["m"], grad)
+        u = jax.tree.map(lambda uu, g: b2 * uu + (1 - b2) * g * g,
+                         state["u"], grad)
+        state = self._apply(state, m, grad, u, lr)
+        state.update(m=m, u=u, t=state["t"] + 1, lr_prev=lr)
+        return state
+
+
+class DanaNadam(NadamASGD):
+    """DANA-Nadam: per-worker first moments m^i with the O(k) running sum
+    m0 = sum_j m^j, shared second moment u, and the DANA look-ahead in
+    the adaptive geometry:
+
+        send:  theta_hat = theta - lr * b1 * m0 / (sqrt(u) + eps)
+
+    i.e. the estimated future position after every worker's momentum is
+    applied through the SAME preconditioner the master will use — the
+    direct transcription of Eq. 11 to Nadam.  Reduces to sequential Nadam
+    at N=1 (tested).
+    """
+
+    name = "dana-nadam"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["m"] = _stacked_zeros(s["theta0"], num_workers)
+        s["m0"] = tree_zeros_like(s["theta0"])
+        s["u"] = tree_zeros_like(s["theta0"])
+        return s
+
+    def send(self, state, i):
+        b1 = self.hp.momentum
+        lr = self.schedule(state["t"])
+        view = jax.tree.map(
+            lambda t, m0, u: t - lr * b1 * m0 / (jnp.sqrt(u) + self.EPS),
+            state["theta0"], state["m0"], state["u"])
+        return view, state
+
+    def receive(self, state, i, grad, now=0.0):
+        b1, b2 = self.hp.momentum, self.B2
+        lr = self.schedule(state["t"])
+        state = dict(state)
+        mi_old = tree_index(state["m"], i)
+        mi = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g,
+                          mi_old, grad)
+        m0 = tree_add(tree_sub(state["m0"], mi_old), mi)   # O(k), App. A.2
+        u = jax.tree.map(lambda uu, g: b2 * uu + (1 - b2) * g * g,
+                         state["u"], grad)
+        state = self._apply(state, mi, grad, u, lr)
+        state.update(m=tree_set_index(state["m"], i, mi), m0=m0, u=u,
+                     t=state["t"] + 1, lr_prev=lr)
+        return state
+
+
+class EASGD(Algorithm):
+    """Elastic Averaging SGD (Zhang et al. 2015): each worker trains its
+    OWN replica with momentum SGD; master and replica pull toward each
+    other with elastic force alpha every update.
+
+    state: center theta0 (the deployable params), per-worker replicas
+    x^i and momenta v^i.  receive applies worker i's local momentum step
+    and one elastic exchange (the tau=1 "EAMSGD" variant).
+    """
+
+    name = "easgd"
+
+    def __init__(self, hp: HyperParams = HyperParams(),
+                 schedule: Schedule | None = None, nesterov: bool = True,
+                 alpha: float = 0.1):
+        super().__init__(hp, schedule, nesterov)
+        self.alpha = alpha
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["x"] = _stacked_broadcast(s["theta0"], num_workers)
+        s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        return s
+
+    def send(self, state, i):
+        return tree_index(state["x"], i), state
+
+    def _center_target(self, state, i):
+        return state["theta0"]
+
+    def receive(self, state, i, grad, now=0.0):
+        g = self.hp.momentum
+        a = self.alpha
+        lr = self.schedule(state["t"])
+        state = dict(state)
+        xi = tree_index(state["x"], i)
+        vi = tree_axpy(g, tree_index(state["v"], i), grad)
+        upd = tree_axpy(g, vi, grad) if self.nesterov else vi
+        xi = tree_axpy(-lr, upd, xi)
+        # elastic exchange against the (possibly predicted) center
+        center = self._center_target(state, i)
+        diff = tree_sub(xi, center)
+        xi = tree_axpy(-a, diff, xi)
+        state["theta0"] = tree_axpy(+a, diff, state["theta0"])
+        state["x"] = tree_set_index(state["x"], i, xi)
+        state["v"] = tree_set_index(state["v"], i, vi)
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+class DanaEASGD(EASGD):
+    """DANA + EASGD: the elastic force pulls toward the PREDICTED future
+    center  theta_hat = theta0 + alpha * sum_j (x^j_future - theta0)
+    ~ theta0 - alpha * lr * gamma * sum_j v^j  — i.e. worker i measures
+    its elastic difference against where the center will be after the
+    other replicas' momenta push it, the DANA recipe applied to EASGD's
+    center variable (paper Sec. 7 future work).
+    """
+
+    name = "dana-easgd"
+
+    def _center_target(self, state, i):
+        g = self.hp.momentum
+        lr = self.schedule(state["t"])
+        vsum = jax.tree.map(lambda v: jnp.sum(v, axis=0), state["v"])
+        return tree_axpy(-self.alpha * lr * g, vsum, state["theta0"])
+
+
+for cls in (NadamASGD, DanaNadam, EASGD, DanaEASGD):
+    REGISTRY[cls.name] = cls
+
+
+class GapAware(Algorithm):
+    """Gap-Aware staleness mitigation (Barkai, Hakimi & Schuster 2020 —
+    the paper's companion work, referenced for App. C Fig. 12 "GA").
+
+    Simplified GA: the master penalizes each incoming gradient by the
+    ratio of worker i's gap to the running average step size — a stale
+    gradient that was computed far from the current parameters is damped
+    proportionally:
+
+        penalty_i = 1 + G(theta0 - theta_sent_i) / max(avg_step, eps)
+        ghat      = g / penalty_i
+
+    Uses per-worker momentum (like Multi-ASGD) on top.
+    """
+
+    name = "ga-asgd"
+    EMA = 0.99
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
+        s["avg_step"] = jnp.asarray(1e-8, jnp.float32)
+        return s
+
+    def send(self, state, i):
+        state = dict(state)
+        state["sent"] = tree_set_index(state["sent"], i, state["theta0"])
+        return state["theta0"], state
+
+    def receive(self, state, i, grad, now=0.0):
+        from .types import tree_gap, tree_size
+        g = self.hp.momentum
+        lr, corr = self._lr_and_correction(state)
+        state = dict(state)
+        sent_i = tree_index(state["sent"], i)
+        gap = tree_gap(state["theta0"], sent_i)
+        penalty = 1.0 + gap / jnp.maximum(state["avg_step"], 1e-12)
+        ghat = tree_scale(1.0 / penalty, grad)
+        vs = tree_scale(corr, state["v"])
+        vi = tree_axpy(g, tree_index(vs, i), ghat)
+        state["theta0"] = tree_axpy(-lr, vi, state["theta0"])
+        # track the RMS size of one master update (the gap unit)
+        k = tree_size(vi)
+        step_rms = lr * tree_l2_local(vi) / jnp.sqrt(
+            jnp.asarray(k, jnp.float32))
+        state["avg_step"] = self.EMA * state["avg_step"] \
+            + (1 - self.EMA) * step_rms
+        state["v"] = tree_set_index(vs, i, vi)
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
+def tree_l2_local(tree):
+    from .types import tree_l2
+    return tree_l2(tree)
+
+
+REGISTRY[GapAware.name] = GapAware

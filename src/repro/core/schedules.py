@@ -1,0 +1,59 @@
+"""Learning-rate schedules with the paper's warm-up + momentum correction.
+
+Paper App. A.5: "(we) divided the initial learning rate by the number of
+workers N and ramped it up linearly until it reached its original value
+after five epochs. We also used momentum correction (Goyal et al., 2017) in
+all algorithms to stabilize training when the learning rate changes."
+
+Schedules are pure functions of the master update counter ``t`` so that all
+algorithms (which consume them inside jitted update rules) share them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Step-decay schedule with linear warm-up (Goyal et al., 2017).
+
+    lr(t) = base_lr * warmup(t) * decay^(#milestones passed)
+    warm-up ramps linearly from base_lr/num_workers to base_lr over
+    ``warmup_steps`` master updates.
+    """
+    base_lr: float
+    num_workers: int = 1
+    warmup_steps: int = 0
+    decay_factor: float = 0.1
+    milestones: Sequence[int] = ()
+
+    def __call__(self, t):
+        t = jnp.asarray(t, jnp.float32)
+        lr = jnp.asarray(self.base_lr, jnp.float32)
+        if self.warmup_steps > 0 and self.num_workers > 1:
+            start = self.base_lr / self.num_workers
+            frac = jnp.clip(t / float(self.warmup_steps), 0.0, 1.0)
+            warm = start + (self.base_lr - start) * frac
+        else:
+            warm = lr
+        decay = jnp.asarray(1.0, jnp.float32)
+        for m in self.milestones:
+            decay = decay * jnp.where(t >= m, self.decay_factor, 1.0)
+        return warm * decay
+
+
+def constant(lr: float) -> Schedule:
+    return Schedule(base_lr=lr)
+
+
+def momentum_correction(v, lr_new, lr_prev):
+    """Goyal et al. (2017) momentum correction: when the learning rate
+    changes between updates, rescale the momentum buffer by eta_new/eta_prev
+    so that the *effective* update magnitude follows the new rate.
+
+    Implemented as a scalar factor applied by callers to the momentum pytree.
+    """
+    return jnp.where(lr_prev > 0, lr_new / jnp.maximum(lr_prev, 1e-20), 1.0)

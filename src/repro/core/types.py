@@ -1,0 +1,109 @@
+"""Pytree utilities shared across the DANA core.
+
+Everything in ``repro.core`` is functional: optimizer/algorithm state is a
+pytree, update rules are pure functions, and the discrete-event engine only
+orchestrates *when* those pure functions run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: s * x, tree)
+
+
+def tree_axpy(a, x: Pytree, y: Pytree) -> Pytree:
+    """a*x + y, elementwise over the pytree."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_lincomb(coeffs, trees) -> Pytree:
+    """sum_i coeffs[i] * trees[i]."""
+    def comb(*leaves):
+        out = coeffs[0] * leaves[0]
+        for c, l in zip(coeffs[1:], leaves[1:]):
+            out = out + c * l
+        return out
+    return jax.tree.map(comb, *trees)
+
+
+def tree_mul(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.multiply, a, b)
+
+
+def tree_sq_l2(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def tree_l2(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(tree_sq_l2(tree))
+
+
+def tree_size(tree: Pytree) -> int:
+    return sum(l.size for l in jax.tree.leaves(tree))
+
+
+def tree_gap(master: Pytree, view: Pytree) -> jax.Array:
+    """The paper's *gap*: RMSE between master params and the params the
+    worker computed its gradient on.  G(Δ) = ||Δ||_2 / sqrt(k)."""
+    delta = tree_sub(master, view)
+    k = tree_size(master)
+    return tree_l2(delta) / jnp.sqrt(jnp.asarray(k, jnp.float32))
+
+
+def tree_stack(trees) -> Pytree:
+    """Stack a list of pytrees along a new leading axis."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *trees)
+
+
+def tree_index(tree: Pytree, i) -> Pytree:
+    """tree[i] along the leading axis of every leaf (dynamic index ok)."""
+    return jax.tree.map(lambda l: jax.lax.dynamic_index_in_dim(l, i, axis=0,
+                                                               keepdims=False),
+                        tree)
+
+
+def tree_set_index(tree: Pytree, i, value: Pytree) -> Pytree:
+    """tree with tree[i] <- value along the leading axis (dynamic ok)."""
+    return jax.tree.map(
+        lambda l, v: jax.lax.dynamic_update_index_in_dim(l, v, i, axis=0),
+        tree, value)
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda l: l.astype(dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperParams:
+    """Shared hyper-parameters for the async algorithms (paper App. A.5)."""
+    lr: float = 0.1
+    momentum: float = 0.9          # gamma
+    weight_decay: float = 0.0
+    dc_lambda: float = 2.0         # DC-ASGD / DANA-DC lambda (Zheng et al.)
+    # LWP needs an estimate of the lag tau; with N equal workers the
+    # steady-state lag is N-1 (paper Sec. 3.1 uses "tau" directly).
+    lwp_tau: float | None = None
+
+
+GradFn = Callable[[Pytree, Any], Pytree]

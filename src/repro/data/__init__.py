@@ -1,0 +1,5 @@
+from .synthetic import (ClassificationTask, LMTask, classification_batches,
+                        lm_batches)
+
+__all__ = ["ClassificationTask", "LMTask", "classification_batches",
+           "lm_batches"]

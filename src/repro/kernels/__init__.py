@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (dispatches pallas-on-TPU /
+              interpret-or-reference elsewhere)
+  ref.py    — pure-jnp oracle used by the tests
+
+Kernels:
+  dana_update   fused DANA-Zero master round (the paper's Sec. C.1 master
+                bottleneck): one HBM pass for v/v0/theta/theta_hat
+  swa_attention sliding-window flash attention (recurrentgemma local
+                attention; dense long-context variant)
+  rglru_scan    RG-LRU recurrence (RecurrentGemma)
+  mamba_scan    Mamba-1 selective scan (falcon-mamba)
+"""

@@ -1,0 +1,3 @@
+from .ops import dana_master_update
+
+__all__ = ["dana_master_update"]

@@ -1,0 +1,53 @@
+"""Public wrapper: fused DANA master update over arbitrary pytrees.
+
+Flattens every leaf into (R, 128)-padded rows, runs the Pallas kernel
+(on TPU; interpret mode elsewhere), and reassembles the pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import LANES, dana_master_update_2d
+from .ref import dana_master_update_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to_rows(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANES)
+    pad = rows * LANES - n
+    return jnp.pad(flat, (0, pad)).reshape(rows, LANES), n
+
+
+def dana_master_update_leaf(theta, v_i, v0, g, lr, gamma, use_pallas=None):
+    """Single-array fused update; returns (theta', v_i', v0', theta_hat)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return dana_master_update_ref(theta, v_i, v0, g, lr, gamma)
+    shape = theta.shape
+    t2, n = _pad_to_rows(theta)
+    vi2, _ = _pad_to_rows(v_i)
+    v02, _ = _pad_to_rows(v0)
+    g2, _ = _pad_to_rows(g)
+    outs = dana_master_update_2d(t2, vi2, v02, g2, lr, gamma,
+                                 interpret=not _on_tpu())
+    return tuple(o.reshape(-1)[:n].reshape(shape) for o in outs)
+
+
+def dana_master_update(theta, v_i, v0, g, lr, gamma, use_pallas=None):
+    """Pytree version of the fused DANA-Zero master round."""
+    leaves_t, treedef = jax.tree.flatten(theta)
+    leaves_vi = treedef.flatten_up_to(v_i)
+    leaves_v0 = treedef.flatten_up_to(v0)
+    leaves_g = treedef.flatten_up_to(g)
+    outs = [dana_master_update_leaf(t, vi, v0_, g_, lr, gamma, use_pallas)
+            for t, vi, v0_, g_ in zip(leaves_t, leaves_vi, leaves_v0,
+                                      leaves_g)]
+    unpack = lambda i: jax.tree.unflatten(treedef, [o[i] for o in outs])
+    return unpack(0), unpack(1), unpack(2), unpack(3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused DANA-Zero master round (Alg. 4 + App. A.2).
+
+Given worker i's gradient g and the master state (theta, v_i, v0):
+
+    v_i' = gamma * v_i + g                  (momentum update, Eq. 10)
+    v0'  = v0 - v_i + v_i'                  (O(k) running sum, App. A.2)
+    th'  = theta - lr * v_i'                (master weight update)
+    hat  = th' - lr * gamma * v0'           (look-ahead sent to the worker)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dana_master_update_ref(theta, v_i, v0, g, lr, gamma):
+    lr = jnp.asarray(lr, theta.dtype)
+    gamma = jnp.asarray(gamma, theta.dtype)
+    v_new = gamma * v_i + g
+    v0_new = v0 - v_i + v_new
+    theta_new = theta - lr * v_new
+    theta_hat = theta_new - lr * gamma * v0_new
+    return theta_new, v_new, v0_new, theta_hat

@@ -1,0 +1,3 @@
+from .ops import mamba_scan
+
+__all__ = ["mamba_scan"]

@@ -1,0 +1,21 @@
+"""Public wrapper for the Mamba-1 selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import mamba_scan_pallas
+from .ref import mamba_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mamba_scan(x, delta, b, c, a, h0, use_pallas=None, interpret=None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return mamba_scan_ref(x, delta, b, c, a, h0)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return mamba_scan_pallas(x, delta, b, c, a, h0, interpret=interpret)

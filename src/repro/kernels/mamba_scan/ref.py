@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: Mamba-1 selective scan.
+
+h_t = exp(delta_t * A) * h_{t-1} + (delta_t * x_t) B_t
+y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, delta, b, c, a, h0):
+    """x, delta: (B,S,D); b, c: (B,S,N); a: (D,N); h0: (B,D,N).
+    Returns (y (B,S,D), h_last (B,D,N))."""
+    def step(h, inp):
+        x_t, d_t, b_t, c_t = inp                 # (B,D) (B,D) (B,N) (B,N)
+        abar = jnp.exp(d_t[..., None] * a)       # (B,D,N)
+        h = abar * h + (d_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+    h_last, ys = jax.lax.scan(
+        step, h0, (jnp.moveaxis(x, 1, 0), jnp.moveaxis(delta, 1, 0),
+                   jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h_last

@@ -1,0 +1,22 @@
+"""Public wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rglru_scan_pallas
+from .ref import rglru_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rglru_scan(a, x, h0, use_pallas=None, interpret=None):
+    """h_t = a_t * h_{t-1} + x_t over axis 1.  a,x: (B,S,D); h0: (B,D)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return rglru_scan_ref(a, x, h0)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return rglru_scan_pallas(a, x, h0, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: RG-LRU linear recurrence h_t = a_t h_{t-1} + x_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, x, h0):
+    """a, x: (B, S, D); h0: (B, D).  Returns (h_all (B,S,D), h_last)."""
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+    h_last, hs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,3 @@
+from .ops import swa_attention
+
+__all__ = ["swa_attention"]

@@ -1,0 +1,28 @@
+"""Public wrapper for sliding-window flash attention (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swa_attention_pallas
+from .ref import swa_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def swa_attention(q, k, v, window, use_pallas=None, interpret=None):
+    """q: (B,S,H,hd); k,v: (B,S,K,hd) with K | H (GQA)."""
+    h, kh = q.shape[2], k.shape[2]
+    if kh != h:                       # expand GQA groups for the kernel
+        rep = h // kh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return swa_attention_ref(q, k, v, window)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return swa_attention_pallas(q, k, v, window=window, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: causal sliding-window attention (naive, materializes
+the score matrix — small shapes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, window):
+    """q,k,v: (B, S, H, hd) (same head count — GQA expansion happens in the
+    caller).  Causal, keys restricted to (pos - window, pos]."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (qpos - kpos < window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, sharding rules, pjit step builders,
+multi-pod dry-run, train/serve CLIs."""

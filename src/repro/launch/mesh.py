@@ -1,0 +1,51 @@
+"""Mesh construction for the production topology.
+
+Single pod: v5e-256 as (16, 16) -> ("data", "model").
+Multi-pod:  2 pods = 512 chips as (2, 16, 16) -> ("pod", "data", "model").
+
+The "pod" axis is DANA's asynchronous-worker axis (DESIGN.md Sec. 2): each
+pod trains synchronously inside itself (data/model axes); the per-pod
+momentum vectors and the round collective live on "pod".
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} (see launch/dryrun.py)")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over whatever devices exist (CPU tests / examples)."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes that jointly shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

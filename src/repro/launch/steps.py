@@ -1,0 +1,225 @@
+"""pjit step builders: the DANA pod-round train step, prefill, decode.
+
+Multi-pod train step (DESIGN.md Sec. 2): pods are DANA's async workers.
+One lowered step is one master ROUND — each pod contributes a gradient
+taken at the shared look-ahead point theta_hat = theta - lr*gamma*v0, and
+the sequential master updates of the round collapse algebraically to
+
+    v_p'   = gamma * v_p + g_p          (per-pod, no cross-pod traffic)
+    S      = sum_p v_p'                 (THE cross-pod collective)
+    theta' = theta - lr * S
+    v0'    = S
+
+which reproduces Algorithm 4 + the O(k) running sum of Appendix A.2 (the
+identity v0 = sum_p v_p is a lowered invariant, checked in tests).  Per-pod
+gradients are expressed with a leading pod-sharded batch axis under
+``jax.vmap`` — GSPMD partitions the per-pod compute; the only cross-pod
+collective is the momentum-sum all-reduce, exactly the bytes the paper's
+parameter-server round moves.
+
+Single-pod (N=1) the same step IS Nesterov (paper Algorithm 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, InputShape
+from ..core.schedules import Schedule, constant
+from ..models.api import Model, cache_spec_for
+from ..models.common import logical_rules
+from .mesh import axis_size, dp_axes
+from .sharding import (batch_specs, cache_pspecs, logical_rules_for,
+                       param_pspecs, pod_stack_pspecs, to_shardings)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    lr: float = 1e-3
+    momentum: float = 0.9
+    fsdp: bool = True               # ZeRO-shard fp32 master state over data
+    aux_weight: float = 0.01
+    recipe: str = "auto"            # auto|tp|fsdp (sharding.default_recipe)
+    microbatches: int = 1           # gradient accumulation (paper Sec. 5.4)
+
+
+def init_train_state(model: Model, key, num_pods: int = 1):
+    params = model.init(key)
+
+    def stack(leaf):
+        return jnp.zeros((num_pods,) + leaf.shape, jnp.float32)
+    return {
+        "theta": jax.tree.map(lambda l: l.astype(jnp.float32), params),
+        "v": jax.tree.map(stack, params),
+        "v0": jax.tree.map(lambda l: jnp.zeros_like(l, jnp.float32), params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_specs(model: Model, state, mesh, fsdp=True, recipe="tp"):
+    theta_specs = param_pspecs(model.cfg, state["theta"], mesh, fsdp=fsdp,
+                               recipe=recipe)
+    return {
+        "theta": theta_specs,
+        "v": pod_stack_pspecs(theta_specs, mesh),
+        "v0": theta_specs,
+        "t": P(),
+    }
+
+
+def build_train_step(model: Model, mesh, settings: TrainSettings,
+                     schedule: Schedule | None = None,
+                     global_batch: int | None = None):
+    """Returns (step_fn, in_shardings, out_shardings) for
+    step(state, batch) -> (state, metrics).  The batch's leading dim is
+    reshaped to (num_pods, per_pod_batch, ...) inside.  ``global_batch``
+    lets the sharding rules pick batch-vs-sequence sharding."""
+    cfg = model.cfg
+    num_pods = axis_size(mesh, "pod")
+    sched = schedule if schedule is not None else constant(settings.lr)
+    recipe = settings.recipe
+    if recipe == "auto":
+        from .sharding import default_recipe
+        recipe = default_recipe(cfg, mesh, "train")
+    rules = logical_rules_for(mesh, recipe,
+                              shard_batch=global_batch // num_pods
+                              if global_batch else None)
+    state_shape = jax.eval_shape(
+        lambda k: init_train_state(model, k, num_pods),
+        jax.random.PRNGKey(0))
+    state_specs = train_state_specs(model, state_shape, mesh,
+                                    fsdp=settings.fsdp, recipe=recipe)
+    theta_shardings = to_shardings(mesh, state_specs["theta"])
+
+    def cast16(tree):
+        return jax.tree.map(
+            lambda l: l.astype(jnp.bfloat16)
+            if l.dtype == jnp.float32 else l, tree)
+
+    def loss_fn(params16, batch):
+        return model.loss(params16, batch)
+
+    def step(state, batch):
+        with logical_rules(rules, mesh):
+            lr = sched(state["t"])
+            gamma = settings.momentum
+            theta, v, v0 = state["theta"], state["v"], state["v0"]
+            # DANA look-ahead (Alg. 4 send path)
+            theta_hat = jax.tree.map(lambda t, s: t - lr * gamma * s,
+                                     theta, v0)
+            hat16 = cast16(theta_hat)
+            # anchor the bf16 cast BEFORE any ZeRO regather: without the
+            # barrier XLA sinks the convert into the layer loop and
+            # all-gathers the fp32 master copy — 2x the gather bytes
+            # (§Perf hillclimb 2).
+            hat16 = jax.lax.with_sharding_constraint(hat16,
+                                                     theta_shardings)
+            hat16 = jax.lax.optimization_barrier(hat16)
+            # per-pod batches: leading axis sharded over "pod"
+            pod_batch = jax.tree.map(
+                lambda l: l.reshape((num_pods, l.shape[0] // num_pods)
+                                    + l.shape[1:])
+                if l.ndim >= 2 and l.shape[0] % num_pods == 0
+                else jnp.broadcast_to(l[None], (num_pods,) + l.shape),
+                batch)
+            if cfg.rope == "mrope":
+                # positions are (3,B,S): move pod split to axis 1
+                pod_batch["positions"] = jnp.moveaxis(
+                    batch["positions"].reshape(
+                        3, num_pods, -1, batch["positions"].shape[-1]),
+                    1, 0)
+
+            def pod_grad(b):
+                mb = settings.microbatches
+                if mb <= 1:
+                    loss, g = jax.value_and_grad(loss_fn)(hat16, b)
+                    return loss, jax.tree.map(
+                        lambda x: x.astype(jnp.float32), g)
+                # gradient accumulation (paper Sec. 5.4): scan over
+                # microbatches, summing fp32 grads — activation memory
+                # scales with 1/mb.
+                split = {}
+                for kk, l in b.items():
+                    if kk == "positions" and l.ndim == 3:     # (3,B,S)
+                        split[kk] = jnp.moveaxis(
+                            l.reshape(3, mb, l.shape[1] // mb, l.shape[2]),
+                            1, 0)
+                    elif l.ndim >= 2 and l.shape[0] % mb == 0:
+                        split[kk] = l.reshape(
+                            (mb, l.shape[0] // mb) + l.shape[1:])
+                    else:
+                        split[kk] = jnp.broadcast_to(l[None],
+                                                     (mb,) + l.shape)
+
+                def mb_body(acc, bi):
+                    loss_acc, g_acc = acc
+                    loss, g = jax.value_and_grad(loss_fn)(hat16, bi)
+                    g_acc = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                    return (loss_acc + loss, g_acc), None
+
+                g0 = jax.tree.map(
+                    lambda l: jnp.zeros(l.shape, jnp.float32), hat16)
+                (loss_sum, g_sum), _ = jax.lax.scan(mb_body, (0.0, g0),
+                                                    split)
+                return loss_sum / mb, jax.tree.map(lambda x: x / mb, g_sum)
+
+            losses, g = jax.vmap(pod_grad)(pod_batch)    # (P,), (P, params)
+            # per-pod momentum update (no cross-pod traffic)
+            v_new = jax.tree.map(lambda vp, gp: gamma * vp + gp, v, g)
+            # THE round collective: sum over the pod axis
+            s = jax.tree.map(lambda x: jnp.sum(x, axis=0), v_new)
+            theta_new = jax.tree.map(lambda t, si: t - lr * si, theta, s)
+            new_state = {"theta": theta_new, "v": v_new, "v0": s,
+                         "t": state["t"] + 1}
+            metrics = {"loss": jnp.mean(losses), "lr": lr,
+                       "grad_norm": _tree_norm(g)}
+            return new_state, metrics
+
+    in_shardings = (to_shardings(mesh, state_specs), None)
+    out_shardings = (to_shardings(mesh, state_specs), None)
+    return step, state_specs, in_shardings, out_shardings
+
+
+def _tree_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+def build_prefill_step(model: Model, mesh, shape: InputShape):
+    cfg = model.cfg
+    spec = cache_spec_for(cfg, shape)
+    rules = logical_rules_for(mesh)
+    use_kernels = jax.default_backend() == "tpu"
+
+    def step(params, batch):
+        from ..models.common import kernel_dispatch
+        with logical_rules(rules, mesh), kernel_dispatch(use_kernels):
+            return model.prefill(params, batch, spec)
+
+    return step
+
+
+def build_decode_step(model: Model, mesh, shape: InputShape):
+    cfg = model.cfg
+    spec = cache_spec_for(cfg, shape)
+    rules = logical_rules_for(mesh)
+
+    def step(params, token, cache):
+        with logical_rules(rules, mesh):
+            return model.decode_step(params, token, cache, spec)
+
+    return step
+
+
+def serve_param_shardings(model: Model, mesh):
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_pspecs(model.cfg, params_shape, mesh, fsdp=False)
+    return specs, to_shardings(mesh, specs)

@@ -1,0 +1,1 @@
+"""Model zoo: assigned architectures (repro.models.api) + toy sim models."""

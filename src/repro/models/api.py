@@ -1,0 +1,134 @@
+"""Public model API: build a model from an ArchConfig, get loss/prefill/
+decode functions and (Shape)DtypeStruct input specs for every input shape.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for the dry-runs; ``make_batch`` returns real
+arrays for the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from .attention import CacheSpec
+from .lm import (decode_step, forward, init_cache, init_lm, lm_loss,
+                 prefill)
+
+
+def cache_spec_for(cfg: ArchConfig, shape: InputShape) -> CacheSpec:
+    """Cache geometry for a decode shape.  ``long_500k`` uses the arch's
+    sub-quadratic mechanism: native (SSM/local-attn) or the sliding-window
+    variant for dense archs (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k":
+        w = cfg.long_context_window
+        if w is not None:
+            return CacheSpec(capacity=w, window=w, quant=cfg.kv_quant)
+        # natively sub-quadratic: full-attn kinds absent; attn_local caps
+        # its own cache at cfg.window.
+        return CacheSpec(capacity=cfg.window or 1, window=cfg.window,
+                         quant=cfg.kv_quant)
+    return CacheSpec(capacity=shape.seq_len, window=None,
+                     quant=cfg.kv_quant)
+
+
+def supports_shape(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k":
+        if cfg.is_encdec:
+            return False, ("enc-dec speech model: 500k-token decode out of "
+                           "scope (DESIGN.md §Arch-applicability)")
+        if not cfg.subquadratic:
+            return False, "full-attention arch without sliding-window variant"
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- construction ----------------------------------------------------
+    def init(self, key):
+        return init_lm(key, self.cfg)
+
+    # -- train -------------------------------------------------------------
+    def loss(self, params, batch):
+        return lm_loss(params, self.cfg, batch)
+
+    def forward(self, params, batch):
+        return forward(params, self.cfg, batch)
+
+    # -- serve -------------------------------------------------------------
+    def prefill(self, params, batch, spec: CacheSpec):
+        return prefill(params, self.cfg, batch, spec)
+
+    def decode_step(self, params, token, cache, spec: CacheSpec):
+        return decode_step(params, self.cfg, token, cache, spec)
+
+    def init_cache(self, batch_size: int, spec: CacheSpec):
+        enc_len = self.cfg.max_encoder_len if self.cfg.is_encdec else 0
+        return init_cache(self.cfg, batch_size, spec, enc_len)
+
+    # -- input specs ---------------------------------------------------------
+    def _token_split(self, shape: InputShape) -> tuple[int, int]:
+        """(modality prefix length, token length) for a given total seq."""
+        p = self.cfg.modality_tokens if self.cfg.modality == "vision" else 0
+        return p, shape.seq_len - p
+
+    def input_specs(self, shape: InputShape | str) -> dict:
+        """ShapeDtypeStruct stand-ins for jit(...).lower(**specs)."""
+        if isinstance(shape, str):
+            shape = INPUT_SHAPES[shape]
+        cfg = self.cfg
+        b = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            p, s_tok = self._token_split(shape)
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+            if p:
+                batch["embeds"] = jax.ShapeDtypeStruct(
+                    (b, p, cfg.d_model), jnp.bfloat16)
+            if cfg.rope == "mrope":
+                batch["positions"] = jax.ShapeDtypeStruct(
+                    (3, b, shape.seq_len), jnp.int32)
+            if cfg.is_encdec:
+                enc = min(cfg.max_encoder_len, shape.seq_len)
+                batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                    (b, enc, cfg.d_model), jnp.bfloat16)
+            return {"batch": batch}
+        # decode: one token + cache
+        spec = cache_spec_for(cfg, shape)
+        cache = jax.eval_shape(lambda: self.init_cache(b, spec))
+        cache = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), cache)
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "cache": cache}
+
+    # -- concrete batches (smoke tests / examples) -------------------------
+    def make_batch(self, seq_len: int, batch_size: int, seed: int = 0):
+        cfg = self.cfg
+        rng = np.random.default_rng(seed)
+        p = cfg.modality_tokens if cfg.modality == "vision" else 0
+        s_tok = seq_len - p
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch_size, s_tok)),
+            jnp.int32)}
+        if p:
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(batch_size, p, cfg.d_model)) * 0.02,
+                jnp.bfloat16)
+        if cfg.rope == "mrope":
+            pos = np.broadcast_to(np.arange(seq_len)[None, None],
+                                  (3, batch_size, seq_len)).copy()
+            batch["positions"] = jnp.asarray(pos, jnp.int32)
+        if cfg.is_encdec:
+            enc = min(cfg.max_encoder_len, seq_len)
+            batch["enc_embeds"] = jnp.asarray(
+                rng.normal(size=(batch_size, enc, cfg.d_model)) * 0.02,
+                jnp.bfloat16)
+        return batch
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,295 @@
+"""GQA attention: chunked (flash-style) training/prefill path, unified
+full/sliding-window KV-cache decode path, RoPE variants, cross-attention.
+
+Memory discipline: the training/prefill path never materializes an SxS
+score matrix — it scans query chunks (rematerialized) and, inside, KV
+chunks with a running (max, sum, acc) softmax, i.e. the standard
+flash-attention recurrence expressed in pure JAX.  On TPU the sliding-
+window case is additionally served by the Pallas kernel in
+``repro.kernels.swa_attention`` (``ops.py`` dispatches); this jnp path is
+the oracle and the CPU/dry-run implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import (dense_init, default_mrope_sections, rope_1d,
+                     rope_2d_partial, rope_mrope, with_logical_constraint)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attention(key, d_model, num_heads, num_kv_heads, head_dim,
+                   qkv_bias=False, cross=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads, head_dim)),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads, head_dim)),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads, head_dim)),
+        "wo": dense_init(ks[3], (num_heads, head_dim, d_model),
+                         in_axes=(0, 1)),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads, head_dim))
+        p["bk"] = jnp.zeros((num_kv_heads, head_dim))
+        p["bv"] = jnp.zeros((num_kv_heads, head_dim))
+    return p
+
+
+def _project_qkv(params, x, x_kv=None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x_kv, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x_kv, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def apply_rope(q, k, rope, positions):
+    """rope: 'none'|'1d'|'2d'|'mrope'; positions: (B,S) or (3,B,S)."""
+    if rope == "none":
+        return q, k
+    if rope == "1d":
+        return rope_1d(q, positions), rope_1d(k, positions)
+    if rope == "2d":
+        return rope_2d_partial(q, positions), rope_2d_partial(k, positions)
+    if rope == "mrope":
+        sec = default_mrope_sections(q.shape[-1])
+        return (rope_mrope(q, positions, sec), rope_mrope(k, positions, sec))
+    raise ValueError(rope)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+def _chunk(x, size, axis):
+    n = x.shape[axis]
+    assert n % size == 0, (n, size)
+    shape = list(x.shape)
+    shape[axis:axis + 1] = [n // size, size]
+    return x.reshape(shape)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    q_chunk=256, kv_chunk=512, segments=None):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H = K*G.  Returns (B,S,H,hd).
+
+    Scans q chunks (outer, rematerialized) and kv chunks (inner, running
+    softmax).  ``window``: sliding-window causal attention; for windowed
+    attention only the kv chunks intersecting the band are visited.
+    ``segments``: (B,S) int segment ids for PACKED sequences
+    (repro.data.packing) — attention is masked to stay within a document
+    (0 = padding, attends nowhere).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+    qc = _chunk(q * scale, q_chunk, 1)            # (B,Nq,qc,H,hd)
+    kc = _chunk(k, kv_chunk, 1)                   # (B,Nk,kc,K,hd)
+    vc = _chunk(v, kv_chunk, 1)
+    nq, nk = qc.shape[1], kc.shape[1]
+    qc = qc.reshape(b, nq, q_chunk, kh, g, hd)
+    seg_q = seg_k = None
+    if segments is not None:
+        seg_q = _chunk(segments, q_chunk, 1)      # (B,Nq,qc)
+        seg_k = _chunk(segments[:, :t], kv_chunk, 1)  # (B,Nk,kc)
+    # SEQUENCE-PARALLEL attention (§Perf hillclimb 1): the q-chunk axis is
+    # a parallel dimension sharded over "model" ("attn_q" rule).  When the
+    # head count does not divide the model axis (qwen2-1.5b: 12 heads on a
+    # 16-wide axis) head-sharding is impossible and attention would
+    # otherwise run fully REPLICATED on every model shard; sharding the
+    # q-chunk axis keeps the quadratic work 1/model per device at the cost
+    # of a small GQA KV all-gather.
+    qc = with_logical_constraint(qc, "batch", "attn_q")
+
+    # for sliding windows only a band of kv chunks matters
+    band = nk
+    if window is not None and causal:
+        band = min(nk, window // kv_chunk + 2)
+
+    def q_body(qblk, qidx):
+        # qblk: (B,qc,K,G,hd); qidx: scalar chunk index
+        qpos = qidx * q_chunk + jnp.arange(q_chunk)
+        qseg = (jax.lax.dynamic_index_in_dim(seg_q, qidx, 1, keepdims=False)
+                if seg_q is not None else None)   # (B,qc)
+
+        first = 0 if window is None else \
+            jnp.maximum(qidx * q_chunk // kv_chunk - (band - 1), 0)
+
+        def kv_body(carry, j):
+            m, l, acc = carry
+            kidx = first + j if window is not None else j
+            kblk = jax.lax.dynamic_index_in_dim(kc, kidx, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, kidx, 1, keepdims=False)
+            kpos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s_ = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk,
+                            preferred_element_type=jnp.float32)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s_ = jnp.where(mask[None, None, None], s_, NEG_INF)
+            if qseg is not None:
+                kseg = jax.lax.dynamic_index_in_dim(seg_k, kidx, 1,
+                                                    keepdims=False)
+                segmask = (qseg[:, :, None] == kseg[:, None, :]) \
+                    & (qseg[:, :, None] > 0)      # (B,qc,kc)
+                s_ = jnp.where(segmask[:, None, None], s_, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, hd), jnp.float32)
+        steps = band if window is not None else nk
+        # checkpoint the kv step: backward recomputes the (qc, kc) score
+        # block from q/k instead of saving stacked probability tensors —
+        # the flash-attention backward discipline (§Perf hillclimb 1 it.3)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_body),
+                                      (m0, l0, a0), jnp.arange(steps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(
+            b, q_chunk, h, hd).astype(q.dtype)
+        return out
+
+    # all q chunks in parallel (vmap over the sharded chunk axis); remat
+    # the interior so only the (B,Nq,qc,H,hd) output is saved.
+    chunked = jax.checkpoint(
+        jax.vmap(q_body, in_axes=(1, 0), out_axes=1))
+    outs = chunked(qc, jnp.arange(nq))            # (B, Nq, qc, H, hd)
+    outs = with_logical_constraint(outs, "batch", "attn_q")
+    return outs.reshape(b, s, h, hd)
+
+
+def cross_attention(q, k, v):
+    """Non-causal attention against a fixed (encoder) memory."""
+    return flash_attention(q, k, v, causal=False, window=None)
+
+
+# ---------------------------------------------------------------------------
+# decode with a unified (full or ring-buffer) KV cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    capacity: int               # full seq len, or window size for SWA
+    window: int | None          # sliding window, None = full attention
+    quant: bool = False         # int8 KV cache (per-position/head scales)
+
+
+def init_kv_cache(batch, capacity, num_kv_heads, head_dim,
+                  dtype=jnp.bfloat16, quant=False):
+    if quant:
+        return {
+            "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim),
+                           jnp.int8),
+            "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim),
+                           jnp.int8),
+            "k_scale": jnp.zeros((batch, capacity, num_kv_heads),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((batch, capacity, num_kv_heads),
+                                 jnp.float32),
+            "pos": jnp.full((capacity,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),
+    }
+
+
+def quantize_kv(x):
+    """Symmetric int8 per-(batch, position, head): returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def decode_attention(params, x, cache, t, spec: CacheSpec, rope="1d",
+                     positions=None):
+    """One-token decode. x: (B,1,d); t: scalar absolute position.
+
+    Writes the new K/V at slot ``t % capacity`` (ring buffer: for full
+    caches capacity == max seq so the slot is just ``t``), then attends
+    over every valid slot.  Validity masks both unwritten slots and, for
+    sliding windows, slots older than ``t - window + 1``.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x)
+    if positions is None:
+        positions = jnp.full((b, 1), t, jnp.int32)
+    q, k_new = apply_rope(q, k_new, rope, positions)
+    slot = jnp.mod(t, spec.capacity)
+    new_cache = {}
+    if spec.quant:
+        k8, ks = quantize_kv(k_new)
+        v8, vs = quantize_kv(v_new)
+        kq = jax.lax.dynamic_update_slice_in_dim(cache["k"], k8, slot,
+                                                 axis=1)
+        vq = jax.lax.dynamic_update_slice_in_dim(cache["v"], v8, slot,
+                                                 axis=1)
+        ksc = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks,
+                                                  slot, axis=1)
+        vsc = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs,
+                                                  slot, axis=1)
+        k = dequantize_kv(kq, ksc)
+        v = dequantize_kv(vq, vsc)
+        new_cache.update(k=kq, v=vq, k_scale=ksc, v_scale=vsc)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        new_cache.update(k=k, v=v)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), t, jnp.int32), slot, axis=0)
+    new_cache["pos"] = pos
+
+    kh = k.shape[2]
+    g = q.shape[2] // kh
+    hd = q.shape[-1]
+    qh = q.reshape(b, kh, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(jnp.float32)
+    s_ = jnp.einsum("bkgh,btkh->bkgt", qh.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    valid = pos >= 0
+    valid &= pos <= t
+    if spec.window is not None:
+        valid &= pos > t - spec.window
+    s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    out = out.reshape(b, 1, kh * g, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def attention_block_output(params, attn_out, x_dtype):
+    return jnp.einsum("bshk,hkd->bsd", attn_out,
+                      params["wo"].astype(x_dtype))

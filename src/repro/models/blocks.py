@@ -1,0 +1,288 @@
+"""Residual blocks by kind + their KV/recurrent caches.
+
+Kinds: attn | attn_local | attn_bidir | attn_cross | mamba | rec
+(attn* blocks carry the FFN — dense MLP or MoE per config; mamba blocks
+are standalone as in Falcon-Mamba.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (CacheSpec, _project_qkv, apply_rope,
+                        decode_attention, flash_attention, init_attention,
+                        init_kv_cache)
+from .common import rms_norm, with_logical_constraint
+from .mlp import apply_mlp, apply_moe, init_mlp, init_moe
+from .recurrent import (apply_mamba, apply_rglru, init_mamba,
+                        init_mamba_state, init_rglru, init_rglru_state)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_ffn(key, cfg: ArchConfig):
+    if cfg.num_experts:
+        return {"moe": init_moe(key, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                shared_expert=cfg.shared_expert)}
+    return {"mlp": init_mlp(key, cfg.d_model, cfg.d_ff)}
+
+
+def init_block(key, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "attn_local", "attn_bidir"):
+        p = {
+            "ln1": jnp.zeros((d,)),
+            "attn": init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias),
+            "ln2": jnp.zeros((d,)),
+        }
+        p.update(_init_ffn(ks[1], cfg))
+        return p
+    if kind == "attn_cross":
+        p = {
+            "ln1": jnp.zeros((d,)),
+            "attn": init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.head_dim, cfg.qkv_bias),
+            "lnx": jnp.zeros((d,)),
+            "xattn": init_attention(ks[2], d, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.head_dim, False),
+            "ln2": jnp.zeros((d,)),
+        }
+        p.update(_init_ffn(ks[1], cfg))
+        return p
+    if kind == "mamba":
+        return {
+            "ln1": jnp.zeros((d,)),
+            "mamba": init_mamba(ks[0], d, cfg.d_inner, cfg.ssm_state,
+                                cfg.conv_width),
+        }
+    if kind == "rec":
+        return {
+            "ln1": jnp.zeros((d,)),
+            "rec": init_rglru(ks[0], d, cfg.d_inner,
+                              cfg.rglru_heads or cfg.num_heads,
+                              cfg.conv_width),
+            "ln2": jnp.zeros((d,)),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# ffn apply
+# ---------------------------------------------------------------------------
+def _apply_ffn(params, x, cfg: ArchConfig):
+    if "moe" in params:
+        return apply_moe(params["moe"], x, cfg.num_experts,
+                         cfg.experts_per_tok, cfg.moe_mode,
+                         cfg.capacity_factor)
+    return apply_mlp(params["mlp"], x), 0.0
+
+
+def _self_attention(params, x, cfg: ArchConfig, kind, positions,
+                    segments=None):
+    q, k, v = _project_qkv(params["attn"], x)
+    rope_pos = positions
+    q, k = apply_rope(q, k, cfg.rope, rope_pos)
+    causal = kind != "attn_bidir"
+    window = cfg.window if kind == "attn_local" else None
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          segments=segments)
+    return jnp.einsum("bshk,hkd->bsd", out,
+                      params["attn"]["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# train / prefill apply: returns (x, aux_loss, state_out)
+# state_out: recurrent state (mamba/rec) or kv cache written by prefill
+# ---------------------------------------------------------------------------
+def apply_block(params, x, kind: str, cfg: ArchConfig, ctx: dict,
+                want_cache: bool = False):
+    aux = 0.0
+    state_out = None
+    x = with_logical_constraint(x, "batch", "seq_act", "d_model_act")
+    if kind in ("attn", "attn_local", "attn_bidir"):
+        h = rms_norm(x, params["ln1"])
+        x = x + _self_attention(params, h, cfg, kind, ctx["positions"],
+                                 ctx.get("segments"))
+        h2 = rms_norm(x, params["ln2"])
+        y, aux = _apply_ffn(params, h2, cfg)
+        x = x + y
+    elif kind == "attn_cross":
+        h = rms_norm(x, params["ln1"])
+        x = x + _self_attention(params, h, cfg, "attn", ctx["positions"],
+                                 ctx.get("segments"))
+        hx = rms_norm(x, params["lnx"])
+        qx, kx, vx = _project_qkv(params["xattn"], hx, ctx["enc_out"])
+        xo = flash_attention(qx, kx, vx, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", xo,
+                           params["xattn"]["wo"].astype(x.dtype))
+        h2 = rms_norm(x, params["ln2"])
+        y, aux = _apply_ffn(params, h2, cfg)
+        x = x + y
+    elif kind == "mamba":
+        h = rms_norm(x, params["ln1"])
+        y, state_out = apply_mamba(params["mamba"], h,
+                                   state=ctx.get("rec_state"))
+        x = x + y
+    elif kind == "rec":
+        h = rms_norm(x, params["ln1"])
+        y, state_out = apply_rglru(params["rec"], h,
+                                   state=ctx.get("rec_state"))
+        x = x + y
+        h2 = rms_norm(x, params["ln2"])
+        x = x + apply_mlp(params["mlp"], h2)
+    else:
+        raise ValueError(kind)
+    return x, aux, state_out
+
+
+def prefill_block(params, x, kind: str, cfg: ArchConfig, ctx: dict):
+    """Like apply_block but also materializes the decode cache.
+
+    For attention kinds the cache holds the (ring-buffered) K/V of the
+    final ``capacity`` positions; for recurrent kinds it is the final
+    recurrent state.
+    """
+    spec: CacheSpec = ctx["spec"]
+    if kind in ("attn", "attn_local", "attn_cross"):
+        h = rms_norm(x, params["ln1"])
+        q, k, v = _project_qkv(params["attn"], h)
+        q, k = apply_rope(q, k, cfg.rope, ctx["positions"])
+        window = spec.window if kind != "attn_cross" else None
+        if kind == "attn_local":
+            window = cfg.window
+        out = flash_attention(q, k, v, causal=True, window=window)
+        x = x + jnp.einsum("bshk,hkd->bsd", out,
+                           params["attn"]["wo"].astype(x.dtype))
+        cache_spec = spec if kind != "attn_local" else \
+            CacheSpec(min(spec.capacity, cfg.window), cfg.window)
+        cache = _cache_from_kv(k, v, cache_spec)
+        if kind == "attn_cross":
+            hx = rms_norm(x, params["lnx"])
+            qx, kx, vx = _project_qkv(params["xattn"], hx, ctx["enc_out"])
+            xo = flash_attention(qx, kx, vx, causal=False)
+            x = x + jnp.einsum("bshk,hkd->bsd", xo,
+                               params["xattn"]["wo"].astype(x.dtype))
+            cache = {"self": cache,
+                     "cross": {"k": kx.astype(jnp.bfloat16),
+                               "v": vx.astype(jnp.bfloat16)}}
+        h2 = rms_norm(x, params["ln2"])
+        y, aux = _apply_ffn(params, h2, cfg)
+        x = x + y
+        return x, aux, cache
+    # recurrent kinds: cache IS the state
+    x, aux, state = apply_block(params, x, kind, cfg, ctx)
+    return x, aux, state
+
+
+def _cache_from_kv(k, v, spec: CacheSpec):
+    """Build a ring-buffer cache holding the last ``capacity`` positions of
+    a prefilled sequence, laid out so that slot = pos % capacity."""
+    b, s, kh, hd = k.shape
+    cap = spec.capacity
+    if s < cap:
+        pad = cap - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.concatenate([jnp.arange(s), jnp.full((pad,), -1,
+                                                       jnp.int32)])
+    else:
+        tail = s - cap
+        kc = jnp.roll(k[:, tail:], shift=tail % cap, axis=1)
+        vc = jnp.roll(v[:, tail:], shift=tail % cap, axis=1)
+        pos = jnp.roll(jnp.arange(tail, s, dtype=jnp.int32),
+                       shift=tail % cap)
+    if spec.quant:
+        from .attention import quantize_kv
+        k8, ks = quantize_kv(kc)
+        v8, vs = quantize_kv(vc)
+        return {"k": k8, "v": v8, "k_scale": ks, "v_scale": vs,
+                "pos": pos.astype(jnp.int32)}
+    return {"k": kc.astype(jnp.bfloat16), "v": vc.astype(jnp.bfloat16),
+            "pos": pos.astype(jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def decode_block(params, x, kind: str, cfg: ArchConfig, cache, ctx: dict):
+    t = ctx["t"]
+    spec: CacheSpec = ctx["spec"]
+    if kind in ("attn", "attn_local"):
+        h = rms_norm(x, params["ln1"])
+        cap = cache["k"].shape[1]
+        s = CacheSpec(cap, cfg.window, spec.quant) if kind == "attn_local" \
+            else CacheSpec(cap, spec.window, spec.quant)
+        y, cache = decode_attention(params["attn"], h, cache, t, s,
+                                    rope=cfg.rope,
+                                    positions=ctx.get("positions"))
+        x = x + y
+        h2 = rms_norm(x, params["ln2"])
+        out, _ = _apply_ffn(params, h2, cfg)
+        x = x + out
+        return x, cache
+    if kind == "attn_cross":
+        h = rms_norm(x, params["ln1"])
+        y, self_cache = decode_attention(params["attn"], h, cache["self"], t,
+                                         spec, rope=cfg.rope,
+                                         positions=ctx.get("positions"))
+        x = x + y
+        hx = rms_norm(x, params["lnx"])
+        qx = jnp.einsum("bsd,dhk->bshk", hx,
+                        params["xattn"]["wq"].astype(x.dtype))
+        kx, vx = cache["cross"]["k"], cache["cross"]["v"]
+        kh = kx.shape[2]
+        g = qx.shape[2] // kh
+        qh = qx.reshape(x.shape[0], kh, g, cfg.head_dim)
+        sc = jnp.einsum("bkgh,btkh->bkgt", qh.astype(jnp.float32),
+                        kx.astype(jnp.float32))
+        sc = sc / jnp.sqrt(float(cfg.head_dim))
+        p = jax.nn.softmax(sc, axis=-1)
+        xo = jnp.einsum("bkgt,btkh->bkgh", p, vx.astype(jnp.float32))
+        xo = xo.reshape(x.shape[0], 1, kh * g, cfg.head_dim).astype(x.dtype)
+        x = x + jnp.einsum("bshk,hkd->bsd", xo,
+                           params["xattn"]["wo"].astype(x.dtype))
+        h2 = rms_norm(x, params["ln2"])
+        out, _ = _apply_ffn(params, h2, cfg)
+        x = x + out
+        return x, {"self": self_cache, "cross": cache["cross"]}
+    if kind in ("mamba", "rec"):
+        ctx2 = dict(ctx)
+        ctx2["rec_state"] = cache
+        x, _, state = apply_block(params, x, kind, cfg, ctx2)
+        return x, state
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int,
+                     spec: CacheSpec, enc_len: int = 0,
+                     dtype=jnp.bfloat16):
+    if kind in ("attn", "attn_local"):
+        cap = min(spec.capacity, cfg.window) if kind == "attn_local" \
+            else spec.capacity
+        return init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim,
+                             dtype, quant=spec.quant)
+    if kind == "attn_cross":
+        return {
+            "self": init_kv_cache(batch, spec.capacity, cfg.num_kv_heads,
+                                  cfg.head_dim, dtype),
+            "cross": {
+                "k": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+            },
+        }
+    if kind == "mamba":
+        return init_mamba_state(batch, cfg.d_inner, cfg.ssm_state,
+                                cfg.conv_width, dtype)
+    if kind == "rec":
+        return init_rglru_state(batch, cfg.d_inner, cfg.conv_width, dtype)
+    raise ValueError(kind)

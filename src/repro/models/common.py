@@ -1,0 +1,245 @@
+"""Shared model building blocks: norms, initializers, RoPE variants, and
+logical-axis sharding hints.
+
+Models are pure pytrees + apply functions (no flax): params are nested
+dicts, every apply is a pure function, and sharding enters only through
+``with_logical_constraint`` hints that the launcher binds to mesh axes.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# logical axis -> mesh axis binding (set by repro.launch.sharding)
+# ---------------------------------------------------------------------------
+_LOGICAL_RULES: dict[str, tuple[str, ...] | str | None] | None = None
+_MESH = None
+
+
+def set_logical_rules(rules, mesh) -> None:
+    global _LOGICAL_RULES, _MESH
+    _LOGICAL_RULES = rules
+    _MESH = mesh
+
+
+@contextlib.contextmanager
+def logical_rules(rules, mesh):
+    global _LOGICAL_RULES, _MESH
+    old = (_LOGICAL_RULES, _MESH)
+    _LOGICAL_RULES = rules
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _LOGICAL_RULES, _MESH = old
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel dispatch (serve path): models route their scan hot spots
+# to repro.kernels when enabled.  Enabled by the serve step builders on
+# TPU (and by tests with interpret=True); the train path keeps the jnp
+# scans (the pod-vmap does not compose with shard_map).
+# ---------------------------------------------------------------------------
+_KERNELS = {"enabled": False, "interpret": None}
+
+
+@contextlib.contextmanager
+def kernel_dispatch(enabled: bool = True, interpret: bool | None = None):
+    old = dict(_KERNELS)
+    _KERNELS.update(enabled=enabled, interpret=interpret)
+    try:
+        yield
+    finally:
+        _KERNELS.update(old)
+
+
+def kernels_enabled():
+    return _KERNELS["enabled"], _KERNELS["interpret"]
+
+
+def clean_pspec(x, *axes):
+    """PartitionSpec for ``x`` from logical axes: like
+    with_logical_constraint's cleaning but with None (replicated) for
+    unspecified/non-divisible dims — shard_map specs can't be
+    UNCONSTRAINED."""
+    from jax.sharding import PartitionSpec as P
+    if _LOGICAL_RULES is None or _MESH is None:
+        return P(*([None] * x.ndim))
+    spec = logical_to_pspec(axes)
+    cleaned = []
+    used: set = set()
+    for dim, entry in enumerate(tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if entry is None or entry == "rep":
+            cleaned.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if any(nm in used for nm in names):
+            cleaned.append(None)
+            continue
+        extent = 1
+        for nm in names:
+            extent *= _MESH.shape.get(nm, 1)
+        if extent and x.shape[dim] % extent == 0:
+            cleaned.append(entry)
+            used.update(names)
+        else:
+            cleaned.append(None)
+    return P(*cleaned)
+
+
+def current_mesh():
+    return _MESH
+
+
+def logical_to_pspec(axes: Sequence[str | None]):
+    from jax.sharding import PartitionSpec as P
+    if _LOGICAL_RULES is None:
+        return None
+    out = []
+    for ax in axes:
+        m = _LOGICAL_RULES.get(ax) if ax is not None else None
+        out.append(m)
+    return P(*out)
+
+
+def with_logical_constraint(x, *axes: str | None):
+    """Annotate activation ``x`` with logical axes; no-op outside a mesh.
+
+    Dims with no rule, and dims whose mesh extent does not divide the
+    dimension, are left UNCONSTRAINED — GSPMD propagates their sharding
+    from neighbors instead of forcing replication.  (Forcing None =
+    replicated caused 16x redundant compute whenever a rule was dropped,
+    §Perf hillclimb 1 iter 2 lesson.)
+    """
+    if _LOGICAL_RULES is None or _MESH is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = logical_to_pspec(axes)
+    U = P.UNCONSTRAINED
+    cleaned = []
+    used: set = set()
+    for dim, entry in enumerate(tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if entry == "rep":             # explicitly replicated dim
+            cleaned.append(None)
+            continue
+        if entry is None:
+            cleaned.append(U)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if any(nm in used for nm in names):
+            cleaned.append(U)          # each mesh axis at most once
+            continue
+        extent = 1
+        for nm in names:
+            extent *= _MESH.shape.get(nm, 1)
+        if extent and x.shape[dim] % extent == 0:
+            cleaned.append(entry)
+            used.update(names)
+        else:
+            cleaned.append(U)
+    sharding = jax.sharding.NamedSharding(_MESH, P(*cleaned))
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axes=(0,), dtype=jnp.float32):
+    fan_in = 1
+    for a in in_axes:
+        fan_in *= shape[a]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * jnp.sqrt(1.0 / fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype) * 0.02
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softmax_xent_logits(logits, labels, mask=None):
+    """Mean next-token cross entropy in fp32; labels==-1 are ignored."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE variants
+# ---------------------------------------------------------------------------
+def _rope_freqs(head_dim: int, theta: float = 10000.0):
+    d2 = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, d2, dtype=jnp.float32) / d2))
+
+
+def _apply_rotary(x, angles):
+    """x: (..., 2*d2) pairs-last layout; angles broadcastable (..., d2)."""
+    d2 = angles.shape[-1]
+    x1, x2 = x[..., :d2], x[..., d2:2 * d2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1)
+    if x.shape[-1] > 2 * d2:  # partial rotary (e.g. chatglm 2d rope)
+        out = jnp.concatenate([out, x[..., 2 * d2:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_1d(x, positions, theta: float = 10000.0):
+    """Standard RoPE. x: (B, S, H, hd); positions: (B, S) int."""
+    freqs = _rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B,S,d2)
+    return _apply_rotary(x, angles[:, :, None, :])
+
+
+def rope_2d_partial(x, positions, theta: float = 10000.0):
+    """ChatGLM-style: rotary applied to the first half of head_dim only
+    (the other half carries no positional signal)."""
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd // 2, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return _apply_rotary(x, angles[:, :, None, :])
+
+
+def rope_mrope(x, positions3, sections=(16, 24, 24), theta: float = 10000.0):
+    """Qwen2-VL M-RoPE: the rotary frequency bands are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, hd); positions3: (3, B, S) int.
+    """
+    hd = x.shape[-1]
+    d2 = hd // 2
+    assert sum(sections) == d2, (sections, d2)
+    freqs = _rope_freqs(hd, theta)                          # (d2,)
+    # per-band position id selection
+    band = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = positions3.astype(jnp.float32)                    # (3,B,S)
+    pos_sel = jnp.take(pos, band, axis=0)                   # (d2,B,S)
+    angles = jnp.transpose(pos_sel, (1, 2, 0)) * freqs      # (B,S,d2)
+    return _apply_rotary(x, angles[:, :, None, :])
+
+
+def default_mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    d2 = head_dim // 2
+    t = d2 // 4
+    rest = d2 - t
+    h = rest // 2
+    return (t, h, rest - h)

@@ -1,0 +1,256 @@
+"""Decoder-only LM and encoder-decoder assembly over the block zoo.
+
+Layer stacking uses ``lax.scan`` over the repeated pattern unit with remat
+(``jax.checkpoint``) on the body, so 80-layer configs lower to a compact
+HLO while-loop instead of 80 inlined copies — essential for the 512-device
+dry-runs — and activation memory stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import CacheSpec
+from .blocks import (apply_block, decode_block, init_block, init_block_cache,
+                     prefill_block)
+from .common import (embed_init, dense_init, rms_norm, softmax_xent_logits,
+                     with_logical_constraint)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: ArchConfig):
+    ks = iter(jax.random.split(key, 64))
+    params = {
+        "embed": embed_init(next(ks), (cfg.vocab_size, cfg.d_model)),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "lm_head": dense_init(next(ks), (cfg.d_model, cfg.vocab_size)),
+        "prologue": [init_block(next(ks), cfg, kind)
+                     for kind in cfg.pattern_prologue],
+        "unit": [_init_stacked(next(ks), cfg, kind, cfg.unit_repeats)
+                 for kind in cfg.pattern_unit],
+    }
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "unit": [_init_stacked(next(ks), cfg, "attn_bidir",
+                                   cfg.encoder_layers)],
+            "final_norm": jnp.zeros((cfg.d_model,)),
+        }
+    return params
+
+
+def _init_stacked(key, cfg, kind, repeats):
+    keys = jax.random.split(key, repeats)
+    stacked = jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+    return stacked
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _default_positions(cfg: ArchConfig, b, s, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens, extra_embeds=None,
+                  dtype=jnp.bfloat16):
+    emb = params["embed"].astype(dtype)
+    x = jnp.take(emb, jnp.maximum(tokens, 0), axis=0)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dtype), x], axis=1)
+    return with_logical_constraint(x, "batch", "seq_act", "d_model_act")
+
+
+def _unit_scan(params_unit, x, cfg: ArchConfig, ctx, collect_cache=False,
+               caches=None, kinds=None):
+    """Scan the repeated unit over its repeats.
+
+    collect_cache: prefill mode, returns stacked caches.
+    caches: decode mode, consumes + rewrites stacked caches.
+    """
+    kinds = kinds if kinds is not None else cfg.pattern_unit
+
+    if caches is not None:                       # ---- decode
+        def body(x, inp):
+            layer_params, layer_caches = inp
+            new_caches = []
+            for p, kind, c in zip(layer_params, kinds, layer_caches):
+                x, c = decode_block(p, x, kind, cfg, c, ctx)
+                new_caches.append(c)
+            return x, tuple(new_caches)
+        x, new = jax.lax.scan(body, x, (tuple(params_unit), tuple(caches)))
+        return x, 0.0, list(new)
+
+    if collect_cache:                            # ---- prefill
+        def body(carry, layer_params):
+            x, aux = carry
+            caches_l = []
+            for p, kind in zip(layer_params, kinds):
+                x, a, cache = prefill_block(p, x, kind, cfg, ctx)
+                aux = aux + a
+                caches_l.append(cache)
+            return (x, aux), tuple(caches_l)
+        (x, aux), caches_out = jax.lax.scan(
+            jax.checkpoint(body), (x, 0.0), tuple(params_unit))
+        return x, aux, list(caches_out)
+
+    def body(carry, layer_params):               # ---- train
+        x, aux = carry
+        for p, kind in zip(layer_params, kinds):
+            x, a, _ = apply_block(p, x, kind, cfg, ctx)
+            aux = aux + a
+        return (x, aux), None
+    (x, aux), _ = jax.lax.scan(jax.checkpoint(body), (x, 0.0),
+                               tuple(params_unit))
+    return x, aux, None
+
+
+def _encode(params, cfg: ArchConfig, enc_embeds):
+    """Bidirectional encoder over precomputed frame embeddings."""
+    x = enc_embeds.astype(jnp.bfloat16)
+    b, s, _ = x.shape
+    ctx = {"positions": _default_positions(cfg, b, s)}
+    enc = params["encoder"]
+    x, _, _ = _unit_scan(enc["unit"], x, cfg, ctx, kinds=("attn_bidir",))
+    return rms_norm(x, enc["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ArchConfig, batch, dtype=jnp.bfloat16):
+    """Full forward -> (logits, aux_loss).  batch keys:
+    tokens (B,S) [targets for enc-dec]; embeds (B,P,d) modality prefix;
+    enc_embeds (B,Se,d) encoder input; positions optional."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    extra = batch.get("embeds")
+    x = _embed_tokens(params, cfg, tokens, extra, dtype)
+    s = x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    ctx = {"positions": positions, "segments": batch.get("segments")}
+    if cfg.is_encdec:
+        ctx["enc_out"] = _encode(params, cfg, batch["enc_embeds"])
+    aux = 0.0
+    for p, kind in zip(params["prologue"], cfg.pattern_prologue):
+        x, a, _ = apply_block(p, x, kind, cfg, ctx)
+        aux = aux + a
+    x, a, _ = _unit_scan(params["unit"], x, cfg, ctx)
+    aux = aux + a
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype))
+    logits = with_logical_constraint(logits, "batch", "seq_act", "vocab")
+    return logits, aux
+
+
+def lm_loss(params, cfg: ArchConfig, batch, aux_weight: float = 0.01):
+    """Next-token loss.  Optional batch keys for PACKED data
+    (repro.data.packing): "loss_mask" (B,S) zeroes targets that cross
+    document boundaries; "positions" restart per document (-> RoPE);
+    "segments" (B,S) confine attention within each document
+    (tests/test_packing.py::test_segment_attention_isolates_documents)."""
+    logits, aux = forward(params, cfg, batch)
+    tokens = batch["tokens"]
+    prefix = logits.shape[1] - tokens.shape[1]
+    logits_tok = logits[:, prefix:, :]
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((tokens.shape[0], 1), -1, jnp.int32)],
+        axis=1)
+    loss = softmax_xent_logits(logits_tok, labels,
+                               mask=batch.get("loss_mask"))
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+def prefill(params, cfg: ArchConfig, batch, spec: CacheSpec,
+            dtype=jnp.bfloat16):
+    """Prefill the cache from a full prompt; returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    extra = batch.get("embeds")
+    x = _embed_tokens(params, cfg, tokens, extra, dtype)
+    s = x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    ctx = {"positions": positions, "spec": spec}
+    if cfg.is_encdec:
+        ctx["enc_out"] = _encode(params, cfg, batch["enc_embeds"])
+    caches = {"prologue": [], "unit": None}
+    aux = 0.0
+    for p, kind in zip(params["prologue"], cfg.pattern_prologue):
+        x, a, cache = prefill_block(p, x, kind, cfg, ctx)
+        caches["prologue"].append(cache)
+        aux = aux + a
+    x, a, caches["unit"] = _unit_scan(params["unit"], x, cfg, ctx,
+                                      collect_cache=True)
+    x = rms_norm(x, params["final_norm"])
+    last = x[:, -1:, :]
+    logits = jnp.einsum("bsd,dv->bsv", last,
+                        params["lm_head"].astype(x.dtype))
+    caches["t"] = jnp.asarray(s, jnp.int32)
+    if cfg.is_encdec:
+        caches["enc_out"] = ctx["enc_out"]
+    return logits, caches
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, spec: CacheSpec,
+               enc_len: int = 0, dtype=jnp.bfloat16):
+    """Empty cache for decode-from-scratch (dry-run serve_step input)."""
+    caches = {
+        "prologue": [init_block_cache(cfg, kind, batch_size, spec, enc_len,
+                                      dtype)
+                     for kind in cfg.pattern_prologue],
+        "unit": [
+            jax.tree.map(
+                lambda l: jnp.broadcast_to(
+                    l[None], (cfg.unit_repeats,) + l.shape).copy(),
+                init_block_cache(cfg, kind, batch_size, spec, enc_len,
+                                 dtype))
+            for kind in cfg.pattern_unit
+        ],
+        "t": jnp.zeros((), jnp.int32),
+    }
+    if cfg.is_encdec:
+        caches["enc_out"] = jnp.zeros((batch_size, enc_len, cfg.d_model),
+                                      dtype)
+    return caches
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, spec: CacheSpec,
+                dtype=jnp.bfloat16):
+    """One decode step. token: (B,1) int32 -> (logits (B,1,V), new cache)."""
+    b = token.shape[0]
+    t = cache["t"]
+    x = _embed_tokens(params, cfg, token, None, dtype)
+    positions = jnp.broadcast_to(
+        jnp.asarray(t, jnp.int32)[None, None], (b, 1))
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    ctx = {"positions": positions, "t": t, "spec": spec}
+    if cfg.is_encdec:
+        ctx["enc_out"] = cache["enc_out"]
+    new_cache = {"prologue": [], "t": t + 1}
+    for p, kind, c in zip(params["prologue"], cfg.pattern_prologue,
+                          cache["prologue"]):
+        x, c = decode_block(p, x, kind, cfg, c, ctx)
+        new_cache["prologue"].append(c)
+    x, _, new_cache["unit"] = _unit_scan(params["unit"], x, cfg, ctx,
+                                         caches=cache["unit"])
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype))
+    if cfg.is_encdec:
+        new_cache["enc_out"] = cache["enc_out"]
+    return logits, new_cache

@@ -1,0 +1,83 @@
+"""Small pure-pytree models used by the simulator benchmarks and tests.
+
+These stand in for ResNet-20/WRN in the paper's CIFAR-scale studies: the
+point of those experiments is *optimizer behavior vs. asynchrony*, which is
+architecture-agnostic; the assigned large architectures live in
+``repro.models`` proper and are exercised by the smoke tests and dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, dims):
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k, (d_in, d_out), jnp.float32)
+            * jnp.sqrt(2.0 / d_in),
+            "b": jnp.zeros((d_out,), jnp.float32),
+        })
+    return params
+
+
+def mlp_apply(params, x):
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def make_classifier_fns(dims, weight_decay: float = 0.0):
+    """Returns (init, grad_fn, eval_fn_factory) for an MLP classifier."""
+
+    def init(key):
+        return init_mlp(key, dims)
+
+    def loss_fn(params, batch):
+        x, y = batch
+        loss = softmax_xent(mlp_apply(params, x), y)
+        if weight_decay:
+            l2 = sum(jnp.sum(jnp.square(p["w"])) for p in params)
+            loss = loss + 0.5 * weight_decay * l2
+        return loss
+
+    grad_fn = jax.grad(loss_fn)
+
+    def make_eval(eval_batch):
+        x, y = eval_batch
+
+        def eval_fn(params):
+            logits = mlp_apply(params, x)
+            loss = softmax_xent(logits, y)
+            acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+            return loss, acc
+        return eval_fn
+
+    return init, grad_fn, make_eval
+
+
+def quadratic_fns(dim: int = 50, cond: float = 100.0, seed: int = 0):
+    """A deterministic ill-conditioned quadratic — handy for exact
+    convergence-rate tests of the momentum algebra."""
+    key = jax.random.PRNGKey(seed)
+    evals = jnp.logspace(0, jnp.log10(cond), dim)
+    q = jnp.linalg.qr(jax.random.normal(key, (dim, dim)))[0]
+    h = (q * evals) @ q.T
+
+    def loss(params, batch=None):
+        x = params["x"]
+        return 0.5 * x @ h @ x
+
+    grad_fn = jax.grad(loss)
+    params0 = {"x": jnp.ones((dim,), jnp.float32)}
+    return params0, loss, grad_fn

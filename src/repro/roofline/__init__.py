@@ -1,0 +1,3 @@
+from .analysis import RooflineReport, analyze_compiled, analytic_model_flops
+
+__all__ = ["RooflineReport", "analyze_compiled", "analytic_model_flops"]

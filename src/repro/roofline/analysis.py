@@ -1,0 +1,450 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+  compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes   / (chips * HBM_BW)
+  collective = coll_bytes  / (chips * ICI_BW)
+
+Methodology.  ``compiled.cost_analysis()`` visits every while-loop body
+exactly ONCE, so scanned-layer programs (all of ours: layers are lowered
+as ``lax.scan`` while-loops) under-report flops/bytes by the trip count.
+We therefore parse ``compiled.as_text()`` — the *per-device* SPMD module —
+ourselves:
+
+  * computations are split and each op line is parsed into
+    (var, result-type, opcode, operands); a per-computation symbol table
+    maps operand names to shapes (HLO operand references carry no types);
+  * while-loop trip counts come from the authoritative
+    ``backend_config={"known_trip_count":{"n":...}}`` the compiler attaches
+    (fallback: largest compare constant in the loop condition);
+  * an execution-scale map propagates trip counts: while bodies/conditions
+    run scale(parent) * n times; computations referenced by call/fusion/
+    reduce inherit the caller's scale (fixed-point iteration);
+  * FLOPs = sum over dot/convolution ops of 2 * prod(result dims) *
+    prod(rhs contracting dims), scaled — counted in every computation
+    (fusion interiors included);
+  * HBM bytes = sum over *memory-level* ops (top-level ops of ENTRY /
+    while bodies / called computations; fusion ops count as one op, their
+    interiors are register/VMEM-resident and skipped) of result bytes +
+    operand bytes, scaled.  Aliasing ops (bitcast/get-tuple-element/tuple/
+    parameter/while/constant) are free;
+  * collective bytes = result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute ops, scaled.
+
+The module is per-device; whole-program terms multiply by ``chips``.
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that move no HBM bytes (aliases / control flow / metadata)
+_FREE_OPS = {
+    "get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota", "opt-barrier",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# '%var = TYPE opcode(operands)...' where TYPE is 'f32[..]{..}' or a tuple
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _type_dims(type_str: str):
+    """Dims of a simple (non-tuple) array type; [] for scalars."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (tuples: sum of elements)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    var: str
+    type_str: str
+    opcode: str
+    rest: str              # operand list + attributes
+
+    def operands(self):
+        # operands live before the closing paren of the op call; attributes
+        # after.  Taking all %refs in rest is safe: attribute refs
+        # (calls=/body=) are computation names, which never collide with
+        # local vars in practice, and we look them up in the local symtab.
+        paren = self.rest.split(")", 1)[0]
+        return _OPERAND_RE.findall(paren)
+
+
+class HloModule:
+    """Parsed compiled-HLO text: computations, ops, symbol tables, scales."""
+
+    def __init__(self, text: str):
+        self.comps: dict[str, list[_Op]] = {}
+        self.symtab: dict[str, dict[str, str]] = {}
+        self.roots: dict[str, _Op] = {}
+        self._parse(text)
+        self.scale = self._scales()
+        self.fusion_interior = self._fusion_interiors()
+
+    # -- parsing ---------------------------------------------------------
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if stripped == "}":
+                cur = None
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.endswith("{"):
+                cur = hdr.group(1)
+                self.comps[cur] = []
+                self.symtab[cur] = {}
+                # parameters declared in the header get their types from
+                # 'name: type' pairs
+                for pm in re.finditer(r"([\w.\-]+):\s*"
+                                      r"(\w+\[[\d,]*\](?:\{[^}]*\})?)",
+                                      line):
+                    self.symtab[cur][pm.group(1)] = pm.group(2)
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            var, type_str, opcode, rest = m.groups()
+            op = _Op(var, type_str, opcode, rest)
+            self.comps[cur].append(op)
+            self.symtab[cur][var] = type_str
+            if stripped.startswith("ROOT"):
+                self.roots[cur] = op
+
+    # -- execution scale (while trip counts) ------------------------------
+    def _scales(self) -> dict[str, int]:
+        scale = {name: 1 for name in self.comps}
+        edges = []          # (parent, child, multiplier)
+        for parent, ops in self.comps.items():
+            for op in ops:
+                if op.opcode == "while":
+                    trip = 1
+                    mt = _TRIP_RE.search(op.rest)
+                    if mt:
+                        trip = int(mt.group(1))
+                    body = re.search(r"body=%?([\w.\-]+)", op.rest)
+                    cond = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                    if not mt and cond:
+                        trip = self._cond_trip(cond.group(1))
+                    for ref in (body, cond):
+                        if ref and ref.group(1) in self.comps:
+                            edges.append((parent, ref.group(1), trip))
+                else:
+                    for attr in ("calls", "to_apply", "branch_computations"):
+                        for mm in re.finditer(
+                                rf"{attr}=\{{?%?([\w.\-]+)", op.rest):
+                            if mm.group(1) in self.comps:
+                                edges.append((parent, mm.group(1), 1))
+        for _ in range(16):
+            changed = False
+            for parent, child, mult in edges:
+                want = scale[parent] * mult
+                if scale[child] < want:
+                    scale[child] = want
+                    changed = True
+            if not changed:
+                break
+        return scale
+
+    def _cond_trip(self, cond_name: str) -> int:
+        best = 1
+        for op in self.comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", op.rest):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _fusion_interiors(self) -> set[str]:
+        interior = set()
+        for ops in self.comps.values():
+            for op in ops:
+                if op.opcode == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                    if m:
+                        interior.add(m.group(1))
+                elif op.opcode in ("reduce", "reduce-window", "scatter",
+                                   "sort", "map", "all-reduce",
+                                   "reduce-scatter", "select-and-scatter"):
+                    m = re.search(r"to_apply=%?([\w.\-]+)", op.rest)
+                    if m:
+                        interior.add(m.group(1))
+        return interior
+
+    # -- accounting --------------------------------------------------------
+    def flops(self) -> float:
+        """2*prod(result)*prod(contracting) over dots/convs, scaled."""
+        total = 0.0
+        for name, ops in self.comps.items():
+            s = self.scale.get(name, 1)
+            tab = self.symtab[name]
+            for op in ops:
+                if op.opcode not in ("dot", "convolution"):
+                    continue
+                dims = _type_dims(op.type_str)
+                if dims is None:
+                    continue
+                out_elems = 1
+                for d in dims:
+                    out_elems *= d
+                k = self._contracting(op, tab)
+                total += 2.0 * out_elems * k * s
+        return total
+
+    def _contracting(self, op: _Op, tab: dict[str, str]) -> int:
+        ops_ = op.operands()
+        if op.opcode == "convolution":
+            # K = input feature * prod(kernel spatial); approximate from
+            # rhs (kernel) shape minus the output-feature dim
+            if len(ops_) >= 2 and ops_[1] in tab:
+                dims = _type_dims(tab[ops_[1]]) or []
+                k = 1
+                for d in dims[:-1]:
+                    k *= d
+                return max(k, 1)
+            return 1
+        m = re.search(r"rhs_contracting_dims=\{([\d,]+)\}", op.rest)
+        if not m or len(ops_) < 2 or ops_[1] not in tab:
+            return 1
+        rhs_dims = _type_dims(tab[ops_[1]]) or []
+        k = 1
+        for di in (int(d) for d in m.group(1).split(",")):
+            if di < len(rhs_dims):
+                k *= rhs_dims[di]
+        return max(k, 1)
+
+    def hbm_bytes(self) -> float:
+        """Op-level HBM traffic estimate, scaled by execution counts.
+
+        Charge model: every *major* op writes its result once per
+        execution; reads are approximated as one amortized read per write
+        (x2 overall).  Major ops are the ones a TPU compiler cannot fuse
+        away (dots, reduces, layout copies, slices, collectives, ...);
+        pure-elementwise ops and elementwise-rooted fusions are assumed
+        fused into their producer (this models the TPU fusion behavior —
+        the CPU-backend module this text comes from fuses less, so
+        counting every op would overstate TPU traffic).  Charging results
+        (not operands) avoids the operand-overcount of loops that
+        dynamic-slice big buffers.  Special cases:
+          * dynamic-update-slice (and DUS-rooted fusions, the
+            scan-stacking pattern, output-aliased in place) charge the
+            update slice, not the full buffer.
+        Fusion interiors are register/VMEM-resident and skipped.
+        """
+        total = 0.0
+        for name, ops in self.comps.items():
+            if name in self.fusion_interior:
+                continue
+            s = self.scale.get(name, 1)
+            tab = self.symtab[name]
+            for op in ops:
+                if op.opcode in _FREE_OPS:
+                    continue
+                if not self._is_major(op):
+                    continue
+                total += self._write_bytes(op, tab) * s
+        return 2.0 * total
+
+    # ops whose output must materialize even under ideal fusion
+    _MAJOR = {
+        "dot", "convolution", "reduce", "reduce-window", "scatter",
+        "gather", "dynamic-slice", "dynamic-update-slice", "copy",
+        "transpose", "concatenate", "pad", "slice", "sort", "custom-call",
+        "rng", "rng-bit-generator", "cholesky", "triangular-solve",
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute", "select-and-scatter", "reverse",
+    }
+
+    def _is_major(self, op: _Op) -> bool:
+        code = op.opcode.removesuffix("-start").removesuffix("-done")
+        if code in self._MAJOR:
+            return True
+        if op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            root = self._root_op(m.group(1) if m else None)
+            return root is not None and root.opcode in self._MAJOR
+        return False
+
+    def _write_bytes(self, op: _Op, tab: dict[str, str]) -> float:
+        if op.opcode == "dynamic-update-slice":
+            ops_ = op.operands()
+            if len(ops_) >= 2 and ops_[1] in tab:
+                return _type_bytes(tab[ops_[1]])
+        if op.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+            interior = m.group(1) if m else None
+            root = self._root_op(interior)
+            if root is not None and root.opcode == "dynamic-update-slice":
+                itab = self.symtab.get(interior, {})
+                ops_ = root.operands()
+                if len(ops_) >= 2 and ops_[1] in itab:
+                    return _type_bytes(itab[ops_[1]])
+        return _type_bytes(op.type_str)
+
+    def _root_op(self, comp: str | None):
+        if comp is None or comp not in self.comps:
+            return None
+        if comp in self.roots:
+            return self.roots[comp]
+        ops = self.comps[comp]
+        return ops[-1] if ops else None
+
+    def collective_bytes(self) -> dict:
+        out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+        count = 0
+        for name, ops in self.comps.items():
+            s = self.scale.get(name, 1)
+            for op in ops:
+                kind = op.opcode.removesuffix("-start").removesuffix("-done")
+                if kind in _COLLECTIVES:
+                    if op.opcode.endswith("-done"):
+                        continue        # counted at -start
+                    out[kind] += _type_bytes(op.type_str) * s
+                    count += 1
+        out["_total"] = sum(out[k] for k in _COLLECTIVES)
+        out["_count"] = count
+        return out
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    return HloModule(hlo_text).collective_bytes()
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (6*N*D rule) for the "useful compute" ratio
+# ---------------------------------------------------------------------------
+def analytic_model_flops(cfg, shape, params_total: int,
+                         params_active: int | None = None) -> float:
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    n = params_active if params_active is not None else params_total
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                   # whole-program
+    bytes_hbm: float               # whole-program
+    coll_bytes: float              # whole-program
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops: float = 0.0
+    per_device_mem: float = 0.0
+    flops_cost_raw: float = 0.0    # cost_analysis (loop bodies once)
+    bytes_cost_raw: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def finalize(self):
+        self.compute_s = self.flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.bytes_hbm / (self.chips * HBM_BW)
+        self.collective_s = self.coll_bytes / (self.chips * ICI_BW)
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.flops,
+            "useful_ratio": self.useful_ratio,
+            "hbm_bytes": self.bytes_hbm,
+            "coll_bytes": self.coll_bytes,
+            "per_device_mem_gb": self.per_device_mem / 1e9,
+            "flops_cost_raw": self.flops_cost_raw,
+            "bytes_cost_raw": self.bytes_cost_raw,
+            "collectives": {k: v for k, v in self.collectives.items()
+                            if not k.startswith("_") and v},
+        }
+
+
+def analyze_compiled(lowered, compiled, *, arch, shape, mesh_name, chips,
+                     model_flops=0.0) -> RooflineReport:
+    text = compiled.as_text()
+    mod = HloModule(text)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    raw_flops = max(float(cost.get("flops", 0.0)), 0.0)
+    raw_bytes = max(float(cost.get("bytes accessed", 0.0)), 0.0)
+    colls = mod.collective_bytes()
+    mem = compiled.memory_analysis()
+    # state buffers are donated (train) or read-only (serve): outputs
+    # alias arguments, so count max(args, outputs) + temps.
+    arg_b = float(getattr(mem, "argument_size_in_bytes", 0.0) or 0.0)
+    out_b = float(getattr(mem, "output_size_in_bytes", 0.0) or 0.0)
+    tmp_b = float(getattr(mem, "temp_size_in_bytes", 0.0) or 0.0)
+    per_dev = max(arg_b, out_b) + tmp_b
+    # the compiled module is the per-device SPMD program: x chips for
+    # whole-program totals.  max() guards against parse misses.
+    flops = max(mod.flops(), raw_flops) * chips
+    nbytes = max(mod.hbm_bytes(), raw_bytes) * chips
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops=flops, bytes_hbm=nbytes,
+        coll_bytes=colls["_total"] * chips,
+        model_flops=model_flops, per_device_mem=per_dev,
+        flops_cost_raw=raw_flops * chips, bytes_cost_raw=raw_bytes * chips,
+        collectives=colls)
+    return rep.finalize()

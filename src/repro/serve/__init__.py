@@ -1,0 +1,1 @@
+from .scheduler import Engine, Request  # noqa: F401

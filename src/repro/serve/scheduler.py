@@ -1,0 +1,173 @@
+"""Continuous-batching serving scheduler.
+
+Production serving is not one static batch: requests arrive over time
+with different prompt/output lengths.  The scheduler keeps a fixed pool
+of decode SLOTS backed by a shared ring-buffer KV cache; each engine step
+decodes every active slot once, retires finished requests and admits
+queued ones (prefilling into the freed slot).
+
+Design for TPU (single compiled decode step, no recompilation):
+  * the decode step always runs the FULL slot batch (inactive slots carry
+    a pad token and are masked out) — one fixed shape, compiled once;
+  * prefill runs per-admission at a small set of bucketed prompt lengths
+    (powers of two) so at most log(S) prefill programs compile;
+  * per-slot cache insertion uses dynamic_update_slice on the stacked
+    slot axis.
+
+The same ``Model.prefill/decode_step`` functions the dry-run lowers serve
+here — the scheduler is pure orchestration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+from ..models.attention import CacheSpec
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new: int
+    arrived: float = 0.0
+    # filled by the engine
+    output: list = dataclasses.field(default_factory=list)
+    finished: float | None = None
+    first_token: float | None = None
+
+
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class Engine:
+    """Continuous-batching engine over ``slots`` concurrent sequences."""
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 capacity: int = 256, window: int | None = None,
+                 prefill_buckets=(32, 64, 128, 256), eos: int | None = None):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.spec = CacheSpec(capacity=capacity, window=window)
+        self.buckets = tuple(b for b in prefill_buckets if b <= capacity)
+        self.eos = eos
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.remaining = np.zeros(slots, np.int32)
+        self.done: list[Request] = []
+
+        # stacked caches: one slot axis in front of every cache leaf
+        single = model.init_cache(1, self.spec)
+        self.cache = jax.tree.map(
+            lambda l: jnp.broadcast_to(
+                l[None], (slots,) + l.shape).copy(), single)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self.active_mask = np.zeros(slots, bool)
+
+        self._decode = jax.jit(self._decode_impl)
+        self._prefills: dict[int, Callable] = {}
+
+    # -- jitted cores -----------------------------------------------------
+    def _decode_impl(self, params, tokens, cache):
+        """Decode all slots at once: vmap the single-sequence step."""
+        def one(tok, c):
+            logits, c2 = self.model.decode_step(params, tok[None, None],
+                                                c, self.spec)
+            return jnp.argmax(logits[0, -1]).astype(jnp.int32), c2
+        return jax.vmap(one)(tokens[:, 0], cache)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefills:
+            def fn(params, toks):
+                logits, cache = self.model.prefill(
+                    params, {"tokens": toks}, self.spec)
+                return jnp.argmax(logits[0, -1]).astype(jnp.int32), cache
+            self._prefills[plen] = jax.jit(fn)
+        return self._prefills[plen]
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request):
+        req.arrived = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = _bucket(len(req.prompt), self.buckets)
+            toks = np.full((1, plen), 0, np.int32)
+            toks[0, -len(req.prompt):] = req.prompt  # left-pad into bucket
+            tok0, cache1 = self._prefill_fn(plen)(
+                self.params, jnp.asarray(toks))
+            req.first_token = time.time()
+            req.output.append(int(tok0))
+            # install into slot s (scalar leaves like the step counter
+            # have no batch dim to strip)
+            self.cache = jax.tree.map(
+                lambda full, new: full.at[s].set(
+                    new[0] if new.ndim == full.ndim else new),
+                self.cache, cache1)
+            self.tokens = self.tokens.at[s, 0].set(tok0)
+            self.active[s] = req
+            self.remaining[s] = req.max_new - 1
+            self.active_mask[s] = True
+
+    def step(self):
+        """One engine iteration: admit, decode every active slot, retire."""
+        self._admit()
+        if not self.active_mask.any():
+            return False
+        toks, self.cache = self._decode(self.params, self.tokens,
+                                        self.cache)
+        self.tokens = toks[:, None]
+        toks_np = np.asarray(toks)
+        for s in range(self.slots):
+            req = self.active[s]
+            if req is None:
+                continue
+            req.output.append(int(toks_np[s]))
+            self.remaining[s] -= 1
+            hit_eos = self.eos is not None and int(toks_np[s]) == self.eos
+            if self.remaining[s] <= 0 or hit_eos:
+                req.finished = time.time()
+                self.done.append(req)
+                self.active[s] = None
+                self.active_mask[s] = False
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or self.active_mask.any()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> dict:
+        if not self.done:
+            return {}
+        lat = [r.finished - r.arrived for r in self.done]
+        ttft = [r.first_token - r.arrived for r in self.done]
+        toks = sum(len(r.output) for r in self.done)
+        span = max(r.finished for r in self.done) - min(
+            r.arrived for r in self.done)
+        return {
+            "requests": len(self.done),
+            "tokens": toks,
+            "throughput_tok_s": toks / max(span, 1e-9),
+            "mean_latency_s": float(np.mean(lat)),
+            "mean_ttft_s": float(np.mean(ttft)),
+        }

@@ -1,0 +1,14 @@
+"""Test bootstrap: make `repro` (src/) and `benchmarks` importable when
+running `PYTHONPATH=src pytest tests/` from the repo root.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device;
+only launch/dryrun.py requests 512 placeholder devices (and only when run
+as its own process).
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

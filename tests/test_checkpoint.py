@@ -1,0 +1,73 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core import HyperParams, make_algorithm
+from repro.models.toy import quadratic_fns
+
+
+def test_roundtrip_params(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(4),
+            {"c": jnp.zeros((2, 2), jnp.int32)}]}
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, tree)
+    out = load_pytree(p, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_roundtrip_algorithm_state(tmp_path):
+    """DANA-Zero state (incl. per-worker momenta + v0) survives a restart."""
+    params0, loss, grad_fn = quadratic_fns(dim=8)
+    algo = make_algorithm("dana-zero", HyperParams(lr=0.01, momentum=0.9))
+    state = algo.init(params0, 4)
+    for i in [0, 2, 1, 3, 0]:
+        view, state = algo.send(state, i)
+        state = algo.receive(state, i, grad_fn(view, None))
+    p = str(tmp_path / "state.npz")
+    save_pytree(p, state)
+    restored = load_pytree(p, jax.tree.map(jnp.zeros_like, state))
+    # continue training from both and compare
+    s1, s2 = state, restored
+    for i in [1, 0, 3]:
+        v1, s1 = algo.send(s1, i)
+        v2, s2 = algo.send(s2, i)
+        s1 = algo.receive(s1, i, grad_fn(v1, None))
+        s2 = algo.receive(s2, i, grad_fn(v2, None))
+    np.testing.assert_allclose(s1["theta0"]["x"], s2["theta0"]["x"],
+                               rtol=1e-6)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_pytree(p, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        load_pytree(p, {"b": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        load_pytree(p, {"a": jnp.ones(4)})
+
+
+def test_manager_retention_and_restore(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ckpts"), keep_last=2)
+    tree = {"w": jnp.arange(4.0)}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda l: l + step, tree))
+        mgr.log_metrics(step, loss=1.0 / step)
+    assert mgr.steps() == [20, 30]          # retention pruned step 10
+    restored, step = mgr.restore(tree)
+    assert step == 30
+    np.testing.assert_array_equal(restored["w"], jnp.arange(4.0) + 30)
+    restored20, _ = mgr.restore(tree, step=20)
+    np.testing.assert_array_equal(restored20["w"], jnp.arange(4.0) + 20)
+    ms = mgr.read_metrics()
+    assert [m["step"] for m in ms] == [10, 20, 30]
+
+
+def test_manager_empty(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "none"))
+    tree, step = mgr.restore({"w": jnp.zeros(2)})
+    assert tree is None and step is None

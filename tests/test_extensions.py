@@ -1,0 +1,134 @@
+"""Beyond-paper extensions (paper Sec. 7 future work): DANA-Nadam and
+(DANA-)EASGD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HyperParams, make_algorithm
+from repro.core.types import tree_index
+from repro.models.toy import quadratic_fns
+
+HP = HyperParams(lr=0.05, momentum=0.9)
+
+
+def _drive(algo, params0, grad_fn, order):
+    n = max(order) + 1
+    state = algo.init(params0, n)
+    views = {}
+    for i in range(n):
+        views[i], state = algo.send(state, i)
+    for i in order:
+        g = grad_fn(views[i], None)
+        state = algo.receive(state, i, g)
+        views[i], state = algo.send(state, i)
+    return state
+
+
+def _nadam_reference(params0, grad_fn, steps, lr, b1, b2=0.999, eps=1e-8):
+    """Sequential simplified Nadam with look-ahead gradient evaluation
+    (what DANA-Nadam must reduce to at N=1)."""
+    theta = params0
+    m = jax.tree.map(jnp.zeros_like, params0)
+    u = jax.tree.map(jnp.zeros_like, params0)
+    for _ in range(steps):
+        look = jax.tree.map(
+            lambda t, mm, uu: t - lr * b1 * mm / (jnp.sqrt(uu) + eps),
+            theta, m, u)
+        g = grad_fn(look, None)
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+        u = jax.tree.map(lambda uu, gg: b2 * uu + (1 - b2) * gg * gg, u, g)
+        theta = jax.tree.map(
+            lambda t, mm, gg, uu: t - lr * (b1 * mm + (1 - b1) * gg)
+            / (jnp.sqrt(uu) + eps), theta, m, g, u)
+    return theta
+
+
+def test_dana_nadam_n1_is_sequential_nadam():
+    params0, loss, grad_fn = quadratic_fns(dim=12, cond=8.0)
+    steps = 20
+    algo = make_algorithm("dana-nadam", HP)
+    state = _drive(algo, params0, grad_fn, [0] * steps)
+    ref = _nadam_reference(params0, grad_fn, steps, HP.lr, HP.momentum)
+    np.testing.assert_allclose(state["theta0"]["x"], ref["x"],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dana_nadam_m0_running_sum():
+    params0, loss, grad_fn = quadratic_fns(dim=8, cond=8.0)
+    order = [0, 2, 1, 1, 0, 2, 0, 1]
+    state = _drive(make_algorithm("dana-nadam", HP), params0, grad_fn,
+                   order)
+    full = jax.tree.map(lambda m: jnp.sum(m, axis=0), state["m"])
+    np.testing.assert_allclose(state["m0"]["x"], full["x"],
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_dana_nadam_converges_faster_than_nadam_asgd_async():
+    """The point of the extension: with async workers, the per-worker
+    moments + look-ahead beat the shared-moment baseline."""
+    params0, loss, grad_fn = quadratic_fns(dim=30, cond=50.0)
+    order = ([0, 1, 2, 3] * 30)
+    hp = HyperParams(lr=0.2, momentum=0.9)
+    sd = _drive(make_algorithm("dana-nadam", hp), params0, grad_fn, order)
+    sn = _drive(make_algorithm("nadam-asgd", hp), params0, grad_fn, order)
+    assert float(loss(sd["theta0"])) < float(loss(sn["theta0"]))
+
+
+def test_easgd_center_converges():
+    params0, loss, grad_fn = quadratic_fns(dim=16, cond=8.0)
+    order = [0, 1, 2, 3] * 25
+    state = _drive(make_algorithm("easgd", HP), params0, grad_fn, order)
+    assert float(loss(state["theta0"])) < float(loss(params0))
+
+
+def test_dana_easgd_reduces_to_easgd_without_momentum():
+    params0, loss, grad_fn = quadratic_fns(dim=10, cond=8.0)
+    order = [0, 1, 0, 1, 1, 0]
+    hp0 = HyperParams(lr=0.05, momentum=0.0)
+    se = _drive(make_algorithm("easgd", hp0), params0, grad_fn, order)
+    sd = _drive(make_algorithm("dana-easgd", hp0), params0, grad_fn, order)
+    np.testing.assert_allclose(se["theta0"]["x"], sd["theta0"]["x"],
+                               rtol=1e-6)
+
+
+def test_dana_easgd_tracks_center_better():
+    """The predicted-center elastic force keeps replicas closer to where
+    the center ends up (smaller replica-center spread)."""
+    params0, loss, grad_fn = quadratic_fns(dim=20, cond=30.0)
+    order = [0, 1, 2, 3] * 25
+    hp = HyperParams(lr=0.1, momentum=0.9)
+    se = _drive(make_algorithm("easgd", hp), params0, grad_fn, order)
+    sd = _drive(make_algorithm("dana-easgd", hp), params0, grad_fn, order)
+    assert float(loss(sd["theta0"])) <= float(loss(se["theta0"])) * 1.5
+
+
+def test_gap_aware_penalizes_stale_gradients():
+    """GA: a gradient arriving with a large gap is applied with a smaller
+    effective step than one arriving with zero gap."""
+    params0, loss, grad_fn = quadratic_fns(dim=12, cond=8.0)
+    algo = make_algorithm("ga-asgd", HP)
+    state = algo.init(params0, 2)
+    v0, state = algo.send(state, 0)
+    v1, state = algo.send(state, 1)
+    g = grad_fn(v0, None)
+    # worker 1 moves the master a lot first -> worker 0's view is stale
+    for _ in range(6):
+        state = algo.receive(state, 1, grad_fn(v1, None))
+        v1, state = algo.send(state, 1)
+    theta_before = state["theta0"]["x"]
+    state_stale = algo.receive(dict(state), 0, g)
+    stale_step = float(jnp.linalg.norm(
+        state_stale["theta0"]["x"] - theta_before))
+    # same gradient with a fresh view (gap ~ 0)
+    _, state2 = algo.send(dict(state), 0)
+    state_fresh = algo.receive(state2, 0, g)
+    fresh_step = float(jnp.linalg.norm(
+        state_fresh["theta0"]["x"] - theta_before))
+    assert stale_step < fresh_step
+
+
+def test_gap_aware_converges():
+    params0, loss, grad_fn = quadratic_fns(dim=16, cond=8.0)
+    order = [0, 1, 2, 3] * 20
+    state = _drive(make_algorithm("ga-asgd", HP), params0, grad_fn, order)
+    assert float(loss(state["theta0"])) < float(loss(params0))

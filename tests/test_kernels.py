@@ -1,0 +1,181 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (this container is CPU; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dana_update.kernel import dana_master_update_2d
+from repro.kernels.dana_update.ops import dana_master_update
+from repro.kernels.dana_update.ref import dana_master_update_ref
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.swa_attention.kernel import swa_attention_pallas
+from repro.kernels.swa_attention.ref import swa_attention_ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dana_update
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows", [1, 8, 256, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dana_update_kernel_matches_ref(rows, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(rows), 4)
+    theta, vi, v0, g = (_rand(k, (rows, 128), dtype) for k in ks)
+    lr, gamma = 0.05, 0.9
+    outs = dana_master_update_2d(theta, vi, v0, g, lr, gamma,
+                                 interpret=True)
+    refs = dana_master_update_ref(theta, vi, v0, g, lr, gamma)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [17, 128, 1000, 4096])
+def test_dana_update_pytree_padding(n):
+    """Arbitrary (non-128-multiple) leaf sizes via the ops wrapper."""
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    tree = lambda k: {"a": _rand(k, (n,), jnp.float32),
+                      "b": _rand(jax.random.fold_in(k, 1), (3, 5),
+                                 jnp.float32)}
+    theta, vi, v0, g = (tree(k) for k in ks)
+    t2, v2, v02, hat = dana_master_update(theta, vi, v0, g, 0.1, 0.9,
+                                          use_pallas=True)
+    rt, rv, rv0, rhat = (dict() for _ in range(4))
+    for key in ["a", "b"]:
+        r = dana_master_update_ref(theta[key], vi[key], v0[key], g[key],
+                                   0.1, 0.9)
+        np.testing.assert_allclose(t2[key], r[0], rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(v2[key], r[1], rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(v02[key], r[2], rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(hat[key], r[3], rtol=1e-6, atol=1e-6)
+
+
+def test_dana_kernel_consistent_with_algorithm():
+    """The fused kernel implements exactly one DANA-Zero receive+send."""
+    from repro.core import HyperParams, make_algorithm
+    algo = make_algorithm("dana-zero", HyperParams(lr=0.05, momentum=0.9))
+    params0 = {"x": jnp.linspace(-1, 1, 256)}
+    state = algo.init(params0, 2)
+    g = {"x": jnp.sin(jnp.arange(256.0))}
+    # kernel round for worker 0
+    from repro.core.types import tree_index
+    th, vi, v0, hat = dana_master_update(
+        state["theta0"], tree_index(state["v"], 0), state["v0"], g,
+        0.05, 0.9, use_pallas=True)
+    state = algo.receive(state, 0, g)
+    view, state = algo.send(state, 0)
+    np.testing.assert_allclose(th["x"], state["theta0"]["x"], rtol=1e-6)
+    np.testing.assert_allclose(v0["x"], state["v0"]["x"], rtol=1e-6)
+    np.testing.assert_allclose(hat["x"], view["x"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,d", [(1, 8, 128), (2, 64, 128), (2, 32, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_kernel_matches_ref(b, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(d + s), 3)
+    a = jax.nn.sigmoid(_rand(ks[0], (b, s, d), jnp.float32)).astype(dtype)
+    x = _rand(ks[1], (b, s, d), dtype)
+    h0 = _rand(ks[2], (b, d), dtype)
+    out, last = rglru_scan_pallas(a, x, h0, seq_chunk=min(16, s),
+                                  interpret=True)
+    rout, rlast = rglru_scan_ref(a, x, h0)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(rout, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(rlast, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rglru_kernel_state_handoff():
+    """Chunked kernel state persists across sequence chunks: one long call
+    equals two half-length calls chained through h0."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = jax.nn.sigmoid(_rand(ks[0], (1, 32, 128), jnp.float32))
+    x = _rand(ks[1], (1, 32, 128), jnp.float32)
+    h0 = _rand(ks[2], (1, 128), jnp.float32)
+    full, _ = rglru_scan_pallas(a, x, h0, seq_chunk=8, interpret=True)
+    h1_out, h1_last = rglru_scan_pallas(a[:, :16], x[:, :16], h0,
+                                        seq_chunk=8, interpret=True)
+    h2_out, _ = rglru_scan_pallas(a[:, 16:], x[:, 16:], h1_last,
+                                  seq_chunk=8, interpret=True)
+    np.testing.assert_allclose(full[:, 16:], h2_out, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,d,n", [(1, 8, 128, 16), (2, 32, 128, 16),
+                                     (1, 16, 256, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_mamba_kernel_matches_ref(b, s, d, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + d), 6)
+    x = _rand(ks[0], (b, s, d), dtype)
+    delta = jax.nn.softplus(_rand(ks[1], (b, s, d), jnp.float32)
+                            ).astype(dtype) * 0.1
+    bmat = _rand(ks[2], (b, s, n), dtype)
+    cmat = _rand(ks[3], (b, s, n), dtype)
+    a = -jnp.abs(_rand(ks[4], (d, n), jnp.float32)).astype(dtype)
+    h0 = _rand(ks[5], (b, d, n), dtype)
+    y, last = mamba_scan_pallas(x, delta, bmat, cmat, a, h0,
+                                seq_chunk=min(8, s), interpret=True)
+    ry, rlast = mamba_scan_ref(x, delta, bmat, cmat, a, h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ry, np.float32),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(rlast, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,window,qb,kb", [(256, 64, 128, 128),
+                                            (256, 128, 64, 64),
+                                            (512, 256, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_kernel_matches_ref(s, window, qb, kb, dtype):
+    b, h, hd = 1, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(s + window), 3)
+    q = _rand(ks[0], (b, s, h, hd), dtype)
+    k = _rand(ks[1], (b, s, h, hd), dtype)
+    v = _rand(ks[2], (b, s, h, hd), dtype)
+    out = swa_attention_pallas(q, k, v, window=window, q_block=qb,
+                               kv_block=kb, interpret=True)
+    ref = swa_attention_ref(q, k, v, window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_swa_matches_model_flash_attention():
+    """The model's jnp flash path and the kernel agree on GQA inputs."""
+    from repro.models.attention import flash_attention
+    from repro.kernels.swa_attention.ops import swa_attention
+    b, s, h, kh, hd, w = 2, 128, 4, 2, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (b, s, h, hd), jnp.float32)
+    k = _rand(ks[1], (b, s, kh, hd), jnp.float32)
+    v = _rand(ks[2], (b, s, kh, hd), jnp.float32)
+    model_out = flash_attention(q, k, v, causal=True, window=w,
+                                q_chunk=32, kv_chunk=32)
+    kern_out = swa_attention(q, k, v, window=w, use_pallas=True,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out, np.float32),
+                               np.asarray(kern_out, np.float32),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The invariants under test are the paper's algebraic claims, checked over
+*arbitrary* asynchronous interleavings and shapes — not just the
+hand-picked orders of test_algorithms.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HyperParams, make_algorithm
+from repro.core.schedules import Schedule, momentum_correction
+from repro.core.types import tree_axpy, tree_index
+from repro.kernels.dana_update.kernel import dana_master_update_2d
+from repro.kernels.dana_update.ref import dana_master_update_ref
+from repro.models.toy import quadratic_fns
+
+HP = HyperParams(lr=0.02, momentum=0.9)
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _quad(dim):
+    """A *stable* quadratic (lr*lambda_max << 1): the algebraic
+    equivalences hold in exact arithmetic for any trajectory, but on an
+    unstable problem float32 rounding differences amplify chaotically and
+    mask them."""
+    return quadratic_fns(dim=dim, cond=8.0)
+
+
+def _orders(max_workers=4, max_len=12):
+    return st.integers(2, max_workers).flatmap(
+        lambda n: st.lists(st.integers(0, n - 1), min_size=1,
+                           max_size=max_len).map(lambda o: (n, o)))
+
+
+def _drive(algo, params0, grad_fn, n, order):
+    state = algo.init(params0, n)
+    views = {}
+    for i in range(n):
+        views[i], state = algo.send(state, i)
+    for i in order:
+        g = grad_fn(views[i], None)
+        state = algo.receive(state, i, g)
+        views[i], state = algo.send(state, i)
+    return state
+
+
+@settings(**SETTINGS)
+@given(_orders())
+def test_v0_running_sum_invariant(n_order):
+    """App. A.2: v0 == sum_j v^j after ANY interleaving."""
+    n, order = n_order
+    params0, _, grad_fn = _quad(6)
+    state = _drive(make_algorithm("dana-zero", HP), params0, grad_fn,
+                   n, order)
+    full = jax.tree.map(lambda v: jnp.sum(v, axis=0), state["v"])
+    np.testing.assert_allclose(state["v0"]["x"], full["x"],
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(_orders())
+def test_slim_zero_equivalence_any_order(n_order):
+    """Eq. 16: Theta(slim) == theta(zero) - lr*gamma*v0(zero), ANY order."""
+    n, order = n_order
+    params0, _, grad_fn = _quad(6)
+    sz = _drive(make_algorithm("dana-zero", HP), params0, grad_fn, n, order)
+    ss = _drive(make_algorithm("dana-slim", HP), params0, grad_fn, n, order)
+    expect = tree_axpy(-HP.lr * HP.momentum, sz["v0"], sz["theta0"])
+    np.testing.assert_allclose(ss["theta0"]["x"], expect["x"],
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(_orders())
+def test_bengio_multi_is_slim_any_order(n_order):
+    """Eq. 16 read backwards, over arbitrary interleavings."""
+    n, order = n_order
+    params0, _, grad_fn = _quad(6)
+    sm = _drive(make_algorithm("multi-asgd", HP, nesterov=True),
+                params0, grad_fn, n, order)
+    ss = _drive(make_algorithm("dana-slim", HP), params0, grad_fn, n, order)
+    np.testing.assert_allclose(sm["theta0"]["x"], ss["theta0"]["x"],
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(_orders(max_workers=3, max_len=8))
+def test_dana_send_is_lookahead(n_order):
+    """Alg. 4 send path: view == theta0 - lr*gamma*v0, always."""
+    n, order = n_order
+    params0, _, grad_fn = _quad(5)
+    algo = make_algorithm("dana-zero", HP)
+    state = _drive(algo, params0, grad_fn, n, order)
+    view, _ = algo.send(state, 0)
+    expect = tree_axpy(-HP.lr * HP.momentum, state["v0"], state["theta0"])
+    np.testing.assert_allclose(view["x"], expect["x"], rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 64), st.floats(0.0, 0.99),
+       st.floats(1e-4, 0.5))
+def test_dana_update_kernel_property(rows, gamma, lr):
+    """Fused kernel == oracle for arbitrary sizes and hyperparameters."""
+    ks = jax.random.split(jax.random.PRNGKey(rows), 4)
+    theta, vi, v0, g = (jax.random.normal(k, (rows, 128), jnp.float32)
+                        for k in ks)
+    outs = dana_master_update_2d(theta, vi, v0, g, lr, gamma,
+                                 interpret=True)
+    refs = dana_master_update_ref(theta, vi, v0, g, lr, gamma)
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e-5, 1.0), st.floats(1e-5, 1.0))
+def test_momentum_correction_ratio(lr_new, lr_prev):
+    c = float(momentum_correction(None, jnp.float32(lr_new),
+                                  jnp.float32(lr_prev)))
+    np.testing.assert_allclose(c, lr_new / lr_prev, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(1, 200))
+def test_schedule_warmup_monotone_and_bounded(n, t):
+    s = Schedule(base_lr=0.1, num_workers=n, warmup_steps=100)
+    lr_t = float(s(t))
+    lr_t1 = float(s(t + 1))
+    assert 0.1 / n - 1e-6 <= lr_t <= 0.1 * (1 + 1e-5)
+    if t + 1 <= 100:
+        assert lr_t1 >= lr_t - 1e-9          # non-decreasing during warmup
+
+
+@settings(**SETTINGS)
+@given(_orders(max_workers=3, max_len=6))
+def test_receive_preserves_finiteness(n_order):
+    """No algorithm inserts NaN/Inf on finite inputs (all registry)."""
+    from repro.core.algorithms import REGISTRY
+    n, order = n_order
+    params0, _, grad_fn = _quad(4)
+    for name in REGISTRY:
+        if name == "ssgd":
+            continue
+        algo = make_algorithm(name, HP)
+        state = _drive(algo, params0, grad_fn, n, order)
+        leaves = jax.tree.leaves(algo.master_params(state))
+        assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves), name
