@@ -12,7 +12,7 @@ import argparse
 import sys
 import time
 
-from . import (bench_convergence, bench_gamma, bench_gap,
+from . import (bench_cluster, bench_convergence, bench_gamma, bench_gap,
                bench_heterogeneous, bench_kernels, bench_optimizers,
                bench_scaling, bench_speedup)
 
@@ -38,6 +38,11 @@ SUITES = {
     "optimizers": (bench_optimizers,                     # Sec. 7 extension
                    ["--grads", "1000", "--workers", "4", "8"],
                    ["--grads", "3000", "--workers", "4", "8", "16", "24"]),
+    "cluster": (bench_cluster,                            # App. C.1 bottleneck
+                ["--grads", "2500", "--workers", "8",
+                 "--coalesce", "1", "4"],
+                ["--grads", "8000", "--workers", "8", "16", "32",
+                 "--coalesce", "1", "2", "4", "8"]),
     "scaling-lm": (bench_scaling,                         # Fig. 7 / Tab. 5
                    ["--preset", "lm", "--grads", "600", "--workers", "1",
                     "4", "8", "--algos", "nag-asgd", "dana-slim"],

@@ -1,0 +1,70 @@
+"""Cluster runtime quickstart: one algorithm, three execution backends.
+
+1. the discrete-event simulator (the paper's Sec. 5 methodology),
+2. the threaded cluster in deterministic mode — same event order,
+   bit-for-bit identical parameters (the cross-validation contract),
+3. the threaded cluster free-running with coalesced receive and a fault
+   plan (a worker drops out and rejoins, messages arrive out of order).
+
+  PYTHONPATH=src python examples/cluster_quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.cluster import ClusterConfig, FaultPlan, run_cluster
+from repro.core import (GammaModel, HyperParams, SimulationConfig,
+                        make_algorithm, run_simulation)
+from repro.data.synthetic import ClassificationTask
+from repro.models.toy import make_classifier_fns
+
+
+def main():
+    task = ClassificationTask(dim=16, num_classes=4, batch_size=16)
+    init, grad_fn, make_eval = make_classifier_fns([16, 32, 4])
+    params0 = init(jax.random.PRNGKey(0))
+    eval_fn = make_eval(task.eval_batch(64))
+    hp = HyperParams(lr=0.05, momentum=0.9)
+    gm = GammaModel(seed=7)
+
+    # 1. reference: the discrete-event engine -------------------------------
+    algo = make_algorithm("dana-zero", hp)
+    sim = SimulationConfig(num_workers=4, total_grads=400, eval_every=100,
+                           exec_model=gm)
+    h_engine = run_simulation(algo, grad_fn, params0, task.batch, sim,
+                              eval_fn)
+    print(f"engine:          final_loss={h_engine.final_loss():.4f} "
+          f"mean_gap={h_engine.mean_gap():.5f}")
+
+    # 2. threaded cluster, deterministic mode -------------------------------
+    algo = make_algorithm("dana-zero", hp)
+    cfg = ClusterConfig(num_workers=4, total_grads=400, eval_every=100,
+                        mode="deterministic", exec_model=gm)
+    h_det = run_cluster(algo, grad_fn, params0, task.batch, cfg, eval_fn)
+    diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+               for a, b in zip(jax.tree.leaves(h_engine.final_params),
+                               jax.tree.leaves(h_det.final_params)))
+    print(f"cluster (det):   final_loss={h_det.final_loss():.4f} "
+          f"max param diff vs engine = {diff:.1e}"
+          f"{'  (bit-exact)' if diff == 0 else ''}")
+
+    # 3. free-running, coalesced receive + faults ---------------------------
+    algo = make_algorithm("dana-zero", hp)
+    plan = FaultPlan(seed=1, stall_prob=0.05, stall_scale=4.0,
+                     dropout=((3, 100, 250),), reorder_prob=0.25)
+    cfg = ClusterConfig(num_workers=8, total_grads=800, eval_every=200,
+                        mode="free", coalesce=4, faults=plan)
+    stats = {}
+    h_live = run_cluster(algo, grad_fn, params0, task.batch, cfg, eval_fn,
+                         stats_out=stats)
+    print(f"cluster (free):  final_loss={h_live.final_loss():.4f} "
+          f"steady={stats['steady_updates_per_s']:.0f} grads/s "
+          f"mean_coalesce={stats['mean_coalesce']:.2f} "
+          f"kernel={stats['use_kernel']}")
+    print(f"  grads per worker (worker 3 dropped out for steps 100-250): "
+          f"{stats['grads_per_worker']}")
+    print(f"  mean lag={h_live.mean_lag():.2f}  "
+          f"mean gap={h_live.mean_gap():.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Bounded gradient mailbox between worker threads and the master.
+
+The mailbox is the cluster's only synchronization point on the hot path:
+workers ``put`` gradient messages (blocking when the queue is full — the
+back-pressure a real parameter server applies to fast workers), and the
+master ``drain``s up to k messages at a time for a coalesced receive.
+
+Each message doubles as its own reply slot: the push is a fused push-pull
+RPC — the master answers with the post-update parameter view, exactly the
+``receive`` -> ``send`` sequence of the discrete-event engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any
+
+
+@dataclasses.dataclass
+class Reply:
+    """Master's answer to one gradient push: the fresh parameter view and
+    the master step it was issued at (the worker's next ``pull_step``)."""
+    view: Any
+    step: int
+
+
+class GradMsg:
+    """One worker->master message.
+
+    ``grad is None`` marks a pull-only request (a rejoining worker asking
+    for fresh parameters without contributing an update).
+    """
+
+    __slots__ = ("worker_id", "grad", "view", "view_step", "t_send",
+                 "_event", "_reply")
+
+    def __init__(self, worker_id: int, grad: Any, view: Any,
+                 view_step: int, t_send: float):
+        self.worker_id = worker_id
+        self.grad = grad
+        self.view = view              # params the gradient was computed on
+        self.view_step = view_step    # master step the view was issued at
+        self.t_send = t_send          # virtual (det/paced) or wall time
+        self._event = threading.Event()
+        self._reply: Reply | None = None
+
+    # -- reply slot ------------------------------------------------------
+    def respond(self, reply: Reply | None):
+        self._reply = reply
+        self._event.set()
+
+    def wait_reply(self, timeout: float | None = None) -> Reply | None:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"worker {self.worker_id}: no master reply in {timeout}s")
+        return self._reply
+
+
+class Mailbox:
+    """Bounded FIFO with batched (coalescing) drain."""
+
+    def __init__(self, capacity: int = 0):
+        self._capacity = capacity          # 0 = unbounded
+        self._q: collections.deque[GradMsg] = collections.deque()
+        self._cond = threading.Condition()
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+    def put(self, msg: GradMsg, stop: threading.Event) -> bool:
+        """Enqueue; blocks while full.  Returns False if the cluster shut
+        down before the message could be enqueued."""
+        with self._cond:
+            while self._capacity and len(self._q) >= self._capacity:
+                if stop.is_set():
+                    return False
+                self._cond.wait(timeout=0.05)
+            if stop.is_set():
+                return False
+            self._q.append(msg)
+            self._cond.notify_all()
+            return True
+
+    def drain(self, max_k: int, stop: threading.Event,
+              timeout: float = 0.05, pow2: bool = False) -> list[GradMsg]:
+        """Pop up to ``max_k`` queued messages (the coalesced receive
+        window).  Blocks until at least one message is available or the
+        stop flag is raised; never waits for the window to fill — when the
+        queue is shallow the master degrades gracefully to k=1.
+
+        ``pow2`` rounds the batch size down to a power of two so the
+        master's fused receive compiles O(log k) variants instead of one
+        per batch size (at steady state the queue is deep and the batch is
+        exactly ``max_k`` anyway)."""
+        with self._cond:
+            while not self._q:
+                if stop.is_set():
+                    return []
+                self._cond.wait(timeout=timeout)
+            k = min(max_k, len(self._q))
+            if pow2:
+                k = 1 << (k.bit_length() - 1)
+            out = [self._q.popleft() for _ in range(k)]
+            self._cond.notify_all()
+            return out
+
+    def drain_nowait(self) -> list[GradMsg]:
+        with self._cond:
+            out = list(self._q)
+            self._q.clear()
+            self._cond.notify_all()
+            return out

@@ -1,0 +1,255 @@
+"""The parameter-server master: drains the mailbox, applies the algorithm.
+
+The master is the paper's bottleneck above ~20 workers (App. C.1); the
+attack here is **coalesced receive**: drain up to k queued messages and
+apply them in ONE fused jit dispatch.  The fused pass preserves the
+engine's exact semantics — for each message in order it runs
+``receive(state, i, grad, now)`` then ``send(state, i)`` (so every worker
+still gets the view it would have gotten from per-message processing) —
+but pays one trace/dispatch and one host-device round trip for the whole
+batch instead of k of them.
+
+When the algorithm is exactly DANA-Zero, the per-message body is routed
+through the fused Pallas ``dana_update`` kernel (``repro.kernels``): one
+read-modify-write pass over (theta, v_i, v0) per message instead of the
+composed elementwise chain — on TPU this is the bandwidth-optimal master
+round; off-TPU it dispatches the jnp reference and stays bit-identical to
+the algorithm path under a constant learning rate (the kernel's look-ahead
+uses lr(t) where the algorithm's send would use lr(t+1); these only differ
+mid-ramp of a schedule).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.algorithms import Algorithm, DanaZero
+from ..core.metrics import History
+from ..core.types import (tree_gap, tree_index, tree_l2, tree_scale,
+                          tree_set_index)
+from ..kernels.dana_update import dana_master_update
+from .faults import FaultInjector
+from .mailbox import GradMsg, Mailbox, Reply
+
+
+def kernel_eligible(algo: Algorithm) -> bool:
+    """The fused dana_update kernel implements exactly Alg. 4 + App. A.2;
+    subclasses (DANA-DC, DANA-Hetero) change receive/send and must take
+    the generic path."""
+    return type(algo) is DanaZero
+
+
+class Master:
+    def __init__(self, algo: Algorithm, state: dict, *,
+                 mailbox: Mailbox, history: History, stop: threading.Event,
+                 total_grads: int, coalesce: int = 1,
+                 use_kernel: bool = False,
+                 record_telemetry: bool = True,
+                 eval_fn: Callable | None = None, eval_every: int = 100,
+                 injector: FaultInjector | None = None,
+                 time_fn: Callable[[GradMsg], float] | None = None):
+        if use_kernel and not kernel_eligible(algo):
+            raise ValueError(
+                f"use_kernel=True but {algo.name!r} is not kernel-eligible")
+        self.algo = algo
+        self.state = state
+        self.mailbox = mailbox
+        self.history = history
+        self.stop = stop
+        self.total = total_grads
+        self.coalesce = max(1, coalesce)
+        self.use_kernel = use_kernel
+        self.record_telemetry = record_telemetry
+        self.eval_every = max(1, eval_every)
+        self.injector = injector
+        self.error: BaseException | None = None
+        self.applied = 0                   # gradient messages applied
+        self._step = 0                     # master update counter (host copy)
+        self._fused: dict = {}             # (k, telemetry) -> jitted pass
+        self._send_jit = jax.jit(algo.send)
+        self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
+        # time source for History rows (virtual in deterministic/paced
+        # modes, wall-clock seconds in free mode)
+        self._time_fn = time_fn or (lambda m: m.t_send)
+        self.coalesce_counts: dict[int, int] = {}   # drained-k histogram
+        # steady-state marker: wall time when 20% of the grads have been
+        # applied (compile + ramp-up excluded from steady throughput)
+        self._steady_mark = max(1, total_grads // 5)
+        self.steady_t: float | None = None
+        # master-thread occupancy applying gradients (drain waits excluded):
+        # applied/busy_s is the master's live service rate — the number
+        # coalescing is meant to raise
+        self.busy_s = 0.0
+
+    # -- worker-visible state -------------------------------------------
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def initial_view(self, i: int):
+        """Initial parameter pull for worker i (call in order 0..n-1 from
+        ONE thread before workers start — mirrors the engine's warm-up)."""
+        view, self.state = self._send_jit(self.state, jnp.int32(i))
+        return view, self._step
+
+    def warm(self):
+        """Pre-compile every fused-receive variant the drain policy can
+        produce (powers of two up to the coalesce window) so no compile
+        lands mid-run.  Zero gradients, discarded output state."""
+        zero_grad = jax.tree.map(jnp.zeros_like,
+                                 self.algo.master_params(self.state))
+        k = 1
+        while k <= self.coalesce:
+            fn = self._get_fused(k, self.record_telemetry)
+            ids = jnp.zeros((k,), jnp.int32)
+            nows = jnp.zeros((k,), jnp.float32)
+            grads = tuple(zero_grad for _ in range(k))
+            views = (tuple(self.algo.master_params(self.state)
+                           for _ in range(k))
+                     if self.record_telemetry else None)
+            out = fn(self.state, ids, nows, grads, views)
+            jax.block_until_ready(jax.tree.leaves(out[0])[0])
+            k *= 2
+
+    # -- fused coalesced receive ----------------------------------------
+    def _get_fused(self, k: int, telemetry: bool):
+        key = (k, telemetry)
+        fn = self._fused.get(key)
+        if fn is not None:
+            return fn
+        algo = self.algo
+        kernel = self.use_kernel
+
+        def _one(state, i, grad, now):
+            if not kernel:
+                state = algo.receive(state, i, grad, now)
+                view, state = algo.send(state, i)
+                return state, view
+            # fused Pallas/ref dana_update round (Alg. 4 + App. A.2)
+            lr, corr = algo._lr_and_correction(state)
+            vs = tree_scale(corr, state["v"])
+            v0 = tree_scale(corr, state["v0"])
+            vi_old = tree_index(vs, i)
+            theta, vi, v0n, theta_hat = dana_master_update(
+                state["theta0"], vi_old, v0, grad, lr, algo.hp.momentum)
+            state = dict(state)
+            state.update(theta0=theta, v=tree_set_index(vs, i, vi), v0=v0n,
+                         t=state["t"] + 1, lr_prev=lr)
+            return state, theta_hat
+
+        def fused(state, ids, nows, grads, views):
+            out_views, gaps, gnorms = [], [], []
+            for j in range(k):
+                if telemetry:
+                    gaps.append(tree_gap(algo.master_params(state),
+                                         views[j]))
+                    gnorms.append(tree_l2(grads[j]))
+                state, view = _one(state, ids[j], grads[j], nows[j])
+                out_views.append(view)
+            if telemetry:
+                return state, tuple(out_views), jnp.stack(gaps), \
+                    jnp.stack(gnorms)
+            return state, tuple(out_views), None, None
+
+        fn = jax.jit(fused)
+        self._fused[key] = fn
+        return fn
+
+    def _apply(self, work: list[GradMsg]):
+        k = len(work)
+        telemetry = self.record_telemetry
+        fn = self._get_fused(k, telemetry)
+        ids = jnp.asarray([m.worker_id for m in work], jnp.int32)
+        nows = jnp.asarray([m.t_send for m in work], jnp.float32)
+        grads = tuple(m.grad for m in work)
+        views = tuple(m.view for m in work) if telemetry else None
+        t0 = self._step
+        self.state, out_views, gaps, gnorms = fn(
+            self.state, ids, nows, grads, views)
+        self._step = t0 + k
+        if telemetry:           # one host transfer per batch, not 2k
+            gaps = np.asarray(gaps)
+            gnorms = np.asarray(gnorms)
+        evals = []
+        for j, m in enumerate(work):
+            self.applied += 1
+            if self.applied == self._steady_mark:
+                self.steady_t = time.perf_counter()
+            m.respond(Reply(view=out_views[j], step=t0 + j + 1))
+            if telemetry:
+                self.history.record(
+                    time=self._time_fn(m), step=t0 + j + 1,
+                    worker=m.worker_id, lag=t0 + j - m.view_step,
+                    gap=float(gaps[j]), grad_norm=float(gnorms[j]))
+            if (self.applied % self.eval_every == 0
+                    or self.applied == self.total):
+                evals.append((self._time_fn(m), t0 + j + 1))
+        # eval uses the post-batch state; with coalescing k=1 (always true
+        # in deterministic mode) this is exactly the engine's eval point.
+        for t_ev, step_ev in evals:
+            self._eval(t_ev, step_ev)
+
+    def _eval(self, t, step):
+        if self._eval_jit is None:
+            return
+        out = self._eval_jit(self.algo.master_params(self.state))
+        loss, metric = (out if isinstance(out, tuple)
+                        else (out, float("nan")))
+        self.history.record_eval(time=t, step=step, loss=loss, metric=metric)
+
+    def _pull_reply(self, m: GradMsg):
+        view, self.state = self._send_jit(self.state,
+                                          jnp.int32(m.worker_id))
+        m.respond(Reply(view=view, step=self._step))
+
+    # -- main loop -------------------------------------------------------
+    def serve(self):
+        msgs: list[GradMsg] = []
+        try:
+            while self.applied < self.total and not self.stop.is_set():
+                msgs = self.mailbox.drain(self.coalesce, self.stop,
+                                          pow2=self.coalesce > 1)
+                if not msgs:
+                    continue
+                if self.injector is not None:
+                    msgs = self.injector.reorder(msgs)
+                work = [m for m in msgs if m.grad is not None]
+                pulls = [m for m in msgs if m.grad is None]
+                room = self.total - self.applied
+                overflow, work = work[room:], work[:room]
+                while work:
+                    # pull filtering / end-of-run truncation can leave a
+                    # non-power-of-two batch; chunk it back to the warmed
+                    # fused variants so no compile lands mid-run
+                    k = 1 << (min(len(work),
+                                  self.coalesce).bit_length() - 1)
+                    chunk, work = work[:k], work[k:]
+                    self.coalesce_counts[k] = \
+                        self.coalesce_counts.get(k, 0) + 1
+                    t_in = time.perf_counter()
+                    self._apply(chunk)
+                    self.busy_s += time.perf_counter() - t_in
+                for m in pulls:
+                    self._pull_reply(m)
+                for m in overflow:
+                    m.respond(None)
+                msgs = []
+        except BaseException as e:  # noqa: BLE001 - reported by run_cluster
+            self.error = e
+        finally:
+            # a mid-batch failure leaves drained messages unanswered;
+            # release their workers instead of letting them hit rpc_timeout
+            for m in msgs:
+                if not m._event.is_set():
+                    m.respond(None)
+            self.stop.set()
+
+    def reject_pending(self):
+        """Post-shutdown: unblock any worker still waiting on a reply."""
+        for m in self.mailbox.drain_nowait():
+            m.respond(None)

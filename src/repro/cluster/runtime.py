@@ -1,0 +1,219 @@
+"""Cluster orchestration: ``run_cluster`` mirrors ``run_simulation``.
+
+Same signature shape, same ``History`` result, same ``Algorithm`` objects
+— but executed by real threads through a mailbox instead of a
+single-threaded event loop.  In ``deterministic`` mode the run is
+step-for-step identical to the engine (tested bit-for-bit); ``paced`` and
+``free`` modes trade that for actual wall-clock concurrency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+
+from ..core.algorithms import SSGD, Algorithm
+from ..core.gamma import GammaModel
+from ..core.metrics import History
+from ..core.types import Pytree
+from .clock import VirtualClock
+from .faults import FaultInjector, FaultPlan
+from .mailbox import Mailbox
+from .master import Master, kernel_eligible
+from .worker import Worker
+
+MODES = ("deterministic", "paced", "free")
+
+
+def _schedule_is_constant(algo: Algorithm) -> bool:
+    from ..core.schedules import Schedule
+    s = algo.schedule
+    if not isinstance(s, Schedule):
+        return False            # custom callable: unknown, assume moving
+    warms = s.warmup_steps > 0 and s.num_workers > 1
+    return not warms and not s.milestones
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    num_workers: int = 8
+    total_grads: int = 1000
+    eval_every: int = 100
+    mode: str = "deterministic"
+    coalesce: int = 1              # max messages per fused master receive
+    exec_model: GammaModel = GammaModel()
+    time_scale: float = 1e-3       # model time unit -> seconds (paced mode)
+    faults: FaultPlan | None = None
+    record_telemetry: bool = True
+    use_kernel: bool | None = None  # None = auto (dana-zero, live modes)
+    mailbox_capacity: int = 0       # 0 = unbounded
+    rpc_timeout: float = 120.0
+
+
+def run_cluster(
+    algo: Algorithm,
+    grad_fn: Callable[[Pytree, Any], Pytree],
+    params0: Pytree,
+    next_batch: Callable[[int, int], Any],
+    cfg: ClusterConfig,
+    eval_fn: Callable[[Pytree], Any] | None = None,
+    stats_out: dict | None = None,
+) -> History:
+    """Run one threaded parameter-server training session.
+
+    Arguments match ``repro.core.engine.run_simulation``; ``stats_out``
+    (optional dict) receives runtime statistics: applied message count,
+    wall time, per-worker message counts and the coalescing histogram.
+    """
+    if cfg.mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {cfg.mode!r}")
+    if cfg.num_workers < 1 or cfg.total_grads < 1:
+        raise ValueError("need at least one worker and one gradient")
+    if isinstance(algo, SSGD):
+        raise ValueError(
+            "ssgd needs the engine's synchronous barrier (per-message "
+            "receive would silently change its semantics); use "
+            "run_simulation, or an asynchronous algorithm here")
+    n = cfg.num_workers
+    deterministic = cfg.mode == "deterministic"
+    if deterministic and cfg.faults is not None and cfg.faults.any_dropout:
+        raise ValueError("dropout/rejoin is not supported in deterministic "
+                         "mode (it would leave the virtual clock); use "
+                         "stalls, or a live mode")
+
+    use_kernel = cfg.use_kernel
+    if use_kernel is None:
+        # auto-routing must be numerically silent: the kernel's look-ahead
+        # uses lr(t) where the algorithm path uses lr(t+1), so only enable
+        # it when the schedule cannot move between steps (constant lr);
+        # explicit use_kernel=True opts into the documented deviation
+        use_kernel = (not deterministic and kernel_eligible(algo)
+                      and _schedule_is_constant(algo))
+
+    injector = (FaultInjector(cfg.faults, n, cfg.exec_model.batch_size)
+                if cfg.faults is not None else None)
+    stop = threading.Event()
+    mailbox = Mailbox(cfg.mailbox_capacity)
+    history = History()
+    state = algo.init(params0, n)
+    t0 = time.perf_counter()
+
+    if deterministic:
+        time_fn = None                      # virtual time from the clock
+        now_fn = None
+    elif cfg.mode == "paced":
+        def now_fn():                       # model-time units
+            return (time.perf_counter() - t0) / cfg.time_scale
+        time_fn = (lambda m: m.t_send)
+    else:
+        def now_fn():                       # wall seconds
+            return time.perf_counter() - t0
+        time_fn = (lambda m: m.t_send)
+
+    master = Master(
+        algo, state, mailbox=mailbox, history=history, stop=stop,
+        total_grads=cfg.total_grads,
+        # deterministic mode forces per-message receive so eval points and
+        # event order match the engine exactly
+        coalesce=1 if deterministic else cfg.coalesce,
+        use_kernel=use_kernel, record_telemetry=cfg.record_telemetry,
+        eval_fn=eval_fn, eval_every=cfg.eval_every, injector=injector,
+        time_fn=time_fn)
+
+    # warm-up pulls, in worker order on one thread (engine semantics)
+    init_views = [master.initial_view(i) for i in range(n)]
+    if not deterministic:
+        master.warm()      # compile fused variants before the clock starts
+
+    clock = None
+    draw = None
+    if deterministic:
+        clock = VirtualClock(cfg.exec_model.sampler(n), n)
+    elif cfg.mode == "paced":
+        # one gamma stream per worker (np.random.Generator is not
+        # thread-safe; statistics match, schedules don't need to)
+        samplers = [
+            dataclasses.replace(cfg.exec_model,
+                                seed=cfg.exec_model.seed
+                                + 1000003 * (wid + 1)).sampler(n)
+            for wid in range(n)
+        ]
+        draw = (lambda wid: samplers[wid](wid))
+
+    grad_jit = jax.jit(grad_fn)
+    workers = [
+        Worker(wid, master=master, mailbox=mailbox, grad_jit=grad_jit,
+               next_batch=next_batch, stop=stop, mode=cfg.mode,
+               init_view=init_views[wid], clock=clock, draw=draw,
+               now_fn=now_fn, time_scale=cfg.time_scale, injector=injector,
+               telemetry=cfg.record_telemetry, rpc_timeout=cfg.rpc_timeout)
+        for wid in range(n)
+    ]
+
+    master_thread = threading.Thread(target=master.serve, name="ps-master",
+                                     daemon=True)
+    # CPython's default 5ms GIL switch interval turns every mailbox/reply
+    # hand-off into a multi-millisecond convoy; the cluster is made of many
+    # sub-millisecond critical sections, so ask for fast switching while
+    # the run is live (restored afterwards).
+    prev_switch = sys.getswitchinterval()
+    sys.setswitchinterval(2e-4)
+    try:
+        master_thread.start()
+        for w in workers:
+            w.start()
+
+        master_thread.join()
+        stop.set()
+        if clock is not None:
+            clock.stop()
+        deadline = time.monotonic() + max(cfg.rpc_timeout, 10.0)
+        for w in workers:
+            while w.is_alive():
+                master.reject_pending()   # unblock stragglers mid-push
+                w.join(timeout=0.05)
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"worker {w.wid} failed to shut down")
+    finally:
+        sys.setswitchinterval(prev_switch)
+
+    errors = [("master", master.error)] if master.error else []
+    errors += [(f"worker-{w.wid}", w.error) for w in workers if w.error]
+    if errors:
+        name, first = errors[0]
+        raise RuntimeError(
+            f"cluster run failed in {name} "
+            f"({len(errors)} thread error(s))") from first
+
+    if master.applied != cfg.total_grads:
+        raise RuntimeError(f"cluster stopped early: applied "
+                           f"{master.applied}/{cfg.total_grads} gradients")
+
+    history.final_params = algo.master_params(master.state)
+    if stats_out is not None:
+        t_end = time.perf_counter()
+        applied_total = sum(k * v for k, v in
+                            master.coalesce_counts.items())
+        steady = None
+        if master.steady_t is not None and t_end > master.steady_t:
+            steady = ((master.applied - master._steady_mark)
+                      / (t_end - master.steady_t))
+        stats_out.update(
+            applied=master.applied,
+            wall_s=t_end - t0,
+            updates_per_s=master.applied / max(t_end - t0, 1e-9),
+            steady_updates_per_s=steady,
+            master_busy_s=master.busy_s,
+            master_updates_per_s=master.applied / max(master.busy_s, 1e-9),
+            coalesce_counts=dict(sorted(master.coalesce_counts.items())),
+            mean_coalesce=(applied_total
+                           / max(sum(master.coalesce_counts.values()), 1)),
+            grads_per_worker={w.wid: w.grads_sent for w in workers},
+            use_kernel=use_kernel,
+        )
+    return history

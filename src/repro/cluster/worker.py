@@ -1,0 +1,145 @@
+"""Worker thread: pull view -> compute gradient -> push -> repeat.
+
+Pacing is pluggable:
+
+* ``deterministic`` — the worker acquires its turn from the virtual clock
+  (engine event order), so the whole cluster serializes into exactly the
+  discrete-event schedule.
+* ``paced``  — the worker sleeps a gamma-model execution time (scaled by
+  ``time_scale``) before each push: wall-clock simulation fidelity.
+* ``free``   — no pacing; the worker pushes as fast as it can compute
+  (throughput mode — this is what fills the master's mailbox and makes
+  coalesced receive pay off).
+
+The push is a fused push-pull RPC: the reply carries the post-update view
+(the engine's receive->send semantics), so a worker never computes two
+gradients on the same view.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+from .clock import VirtualClock
+from .faults import FaultInjector
+from .mailbox import GradMsg, Mailbox
+from .master import Master
+
+
+class Worker(threading.Thread):
+    def __init__(self, wid: int, *, master: Master, mailbox: Mailbox,
+                 grad_jit: Callable, next_batch: Callable,
+                 stop: threading.Event, mode: str,
+                 init_view: tuple[Any, int],
+                 clock: VirtualClock | None = None,
+                 draw: Callable[[int], float] | None = None,
+                 now_fn: Callable[[], float] | None = None,
+                 time_scale: float = 1e-3,
+                 injector: FaultInjector | None = None,
+                 telemetry: bool = True, rpc_timeout: float = 120.0):
+        super().__init__(name=f"ps-worker-{wid}", daemon=True)
+        self.wid = wid
+        self.master = master
+        self.mailbox = mailbox
+        self.grad_jit = grad_jit
+        self.next_batch = next_batch
+        self.stop = stop
+        self.mode = mode
+        self.clock = clock
+        self.draw = draw
+        self.now_fn = now_fn or (lambda: 0.0)
+        self.time_scale = time_scale
+        self.injector = injector
+        self.telemetry = telemetry
+        self.rpc_timeout = rpc_timeout
+        self._view, self._view_step = init_view
+        self.error: BaseException | None = None
+        self.grads_sent = 0
+
+    # -- thread entry ----------------------------------------------------
+    def run(self):
+        try:
+            if self.mode == "deterministic":
+                self._run_deterministic()
+            else:
+                self._run_live()
+        except BaseException as e:  # noqa: BLE001 - reported by run_cluster
+            self.error = e
+            self.stop.set()
+            if self.clock is not None:
+                self.clock.stop()
+
+    # -- one RPC ---------------------------------------------------------
+    def _push(self, grad, t_send: float) -> bool:
+        msg = GradMsg(self.wid, grad,
+                      self._view if (self.telemetry and grad is not None)
+                      else None,
+                      self._view_step, t_send)
+        if not self.mailbox.put(msg, self.stop):
+            return False
+        reply = msg.wait_reply(self.rpc_timeout)
+        if reply is None:
+            return False
+        self._view, self._view_step = reply.view, reply.step
+        if grad is not None:
+            self.grads_sent += 1
+        return True
+
+    # -- deterministic mode ---------------------------------------------
+    def _run_deterministic(self):
+        counter = 0
+        while True:
+            t = self.clock.acquire(self.wid)
+            if t is None:
+                return
+            ok = False
+            try:
+                if (not self.stop.is_set()
+                        and self.master.applied < self.master.total):
+                    batch = self.next_batch(self.wid, counter)
+                    counter += 1
+                    grad = self.grad_jit(self._view, batch)
+                    ok = self._push(grad, t)
+            finally:
+                if ok:
+                    stall = (self.injector.stall(self.wid)
+                             if self.injector is not None else 0.0)
+                    self.clock.release(self.wid, extra=stall)
+                else:
+                    self.clock.withdraw(self.wid)
+            if not ok:
+                return
+
+    # -- paced / free modes ----------------------------------------------
+    def _run_live(self):
+        counter = 0
+        while (not self.stop.is_set()
+               and self.master.applied < self.master.total):
+            stall = 0.0
+            if self.injector is not None:
+                back = self.injector.offline_until(self.wid,
+                                                   self.master.step)
+                if back is not None:
+                    if not self._await_rejoin(back):
+                        return
+                    # rejoin: stale view discarded, pull-only request
+                    if not self._push(None, self.now_fn()):
+                        return
+                    continue
+                stall = self.injector.stall(self.wid)
+            dt = stall + (self.draw(self.wid) if self.mode == "paced"
+                          else 0.0)
+            if dt > 0.0 and self.stop.wait(dt * self.time_scale):
+                return
+            batch = self.next_batch(self.wid, counter)
+            counter += 1
+            grad = self.grad_jit(self._view, batch)
+            if not self._push(grad, self.now_fn()):
+                return
+
+    def _await_rejoin(self, back_step: int) -> bool:
+        while not self.stop.is_set() and self.master.step < back_step:
+            if self.master.applied >= self.master.total:
+                return False
+            self.stop.wait(0.002)
+        return not self.stop.is_set()

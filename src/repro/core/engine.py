@@ -63,7 +63,9 @@ def run_simulation(
         history.record_eval(time=time, step=step, loss=loss, metric=metric)
 
     if isinstance(algo, SSGD):
-        _run_ssgd(algo, grad_fn, next_batch, cfg, draw, state, history, _eval)
+        state = _run_ssgd(algo, grad_fn, next_batch, cfg, draw, state,
+                          history, _eval)
+        history.final_params = algo.master_params(state)
         return history
 
     # ---- asynchronous event loop ---------------------------------------
@@ -79,8 +81,12 @@ def run_simulation(
     views: list[Pytree] = []
     pull_step = [0] * n
     heap: list[tuple[float, int]] = []
+    # One jit wrapper, traced once: the worker index is a traced int32 (every
+    # algorithm's send path indexes dynamically), instead of a fresh jit
+    # wrapper — and a fresh trace — per worker per call.
+    send_jit = jax.jit(algo.send)
     for i in range(n):
-        view, state = jax.jit(algo.send, static_argnums=1)(state, i)
+        view, state = send_jit(state, jnp.int32(i))
         views.append(view)
         heapq.heappush(heap, (draw(i), i))
 
@@ -102,6 +108,7 @@ def run_simulation(
         if done % cfg.eval_every == 0 or done == cfg.total_grads:
             _eval(algo.master_params(state), t_now, int(state["t"]))
         heapq.heappush(heap, (t_now + draw(i), i))
+    history.final_params = algo.master_params(state)
     return history
 
 
@@ -135,3 +142,4 @@ def _run_ssgd(algo, grad_fn, next_batch, cfg, draw, state, history, _eval):
         grads_done = (r + 1) * n
         if grads_done % max(cfg.eval_every, 1) < n or r == rounds - 1:
             _eval(algo.master_params(state), t_now, int(state["t"]))
+    return state

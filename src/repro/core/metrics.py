@@ -21,6 +21,10 @@ class History:
     eval_step: list = dataclasses.field(default_factory=list)
     eval_loss: list = dataclasses.field(default_factory=list)
     eval_metric: list = dataclasses.field(default_factory=list)
+    # master parameters at the end of the run (set by both the discrete-event
+    # engine and the cluster runtime; the backend-equivalence tests compare
+    # these bit-for-bit)
+    final_params: Any = None
 
     def record(self, *, time, step, worker, lag, gap, grad_norm):
         self.time.append(float(time))

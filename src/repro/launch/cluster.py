@@ -1,0 +1,175 @@
+"""CLI for the threaded parameter-server cluster runtime.
+
+  PYTHONPATH=src python -m repro.launch.cluster --algo dana-zero \
+      --workers 8 --grads 2000 --mode free --coalesce 4
+
+  # deterministic mode, cross-validated against the discrete-event engine
+  PYTHONPATH=src python -m repro.launch.cluster --algo dana-zero \
+      --workers 4 --grads 400 --mode deterministic --compare-engine
+
+  # fault injection: drop worker 2 between master steps 200 and 600,
+  # 5% transient stalls, out-of-order delivery within the coalesce window
+  PYTHONPATH=src python -m repro.launch.cluster --mode paced --workers 8 \
+      --grads 2000 --dropout 2:200:600 --stall-prob 0.05 --reorder-prob 0.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from ..cluster import ClusterConfig, FaultPlan, run_cluster
+from ..core.algorithms import REGISTRY, make_algorithm
+from ..core.engine import SimulationConfig, run_simulation
+from ..core.gamma import GammaModel
+from ..core.schedules import Schedule
+from ..core.types import HyperParams
+from ..data.synthetic import ClassificationTask, LMTask
+from ..models.toy import make_classifier_fns
+
+
+def _parse_dropout(specs):
+    out = []
+    for spec in specs or ():
+        try:
+            wid, start, end = (int(x) for x in spec.split(":"))
+        except ValueError as e:
+            raise SystemExit(
+                f"--dropout expects WORKER:OUT_STEP:REJOIN_STEP, got "
+                f"{spec!r}") from e
+        out.append((wid, start, end))
+    return tuple(out)
+
+
+def _setup(args):
+    if args.preset == "classifier":
+        task = ClassificationTask(dim=args.dim, num_classes=10,
+                                  batch_size=args.batch, seed=args.seed)
+        init, grad_fn, make_eval = make_classifier_fns(
+            [args.dim, args.width, args.width, 10])
+        params0 = init(jax.random.PRNGKey(args.seed))
+        return params0, grad_fn, task.batch, make_eval(task.eval_batch())
+    # tiny LM preset (the transformer stand-in)
+    import dataclasses as _dc
+    from ..configs import get_config
+    from ..models.api import build_model
+    cfg = get_config("qwen2-1.5b").reduced()
+    cfg = _dc.replace(cfg, vocab_size=128, d_model=64, num_heads=4,
+                      num_kv_heads=2, head_dim=32, d_ff=256)
+    model = build_model(cfg)
+    task = LMTask(vocab_size=128, seq_len=64, batch_size=args.batch,
+                  seed=args.seed)
+    params0 = model.init(jax.random.PRNGKey(args.seed))
+    grad_fn = (lambda p, toks:
+               jax.grad(lambda q: model.loss(q, {"tokens": toks}))(p))
+    ev = task.eval_batch(8)
+    return params0, grad_fn, task.batch, (lambda p:
+                                          model.loss(p, {"tokens": ev}))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--algo", default="dana-zero",
+                    choices=sorted(REGISTRY))
+    ap.add_argument("--preset", default="classifier",
+                    choices=["classifier", "lm"])
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--grads", type=int, default=1000)
+    ap.add_argument("--mode", default="free",
+                    choices=["deterministic", "paced", "free"])
+    ap.add_argument("--coalesce", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--warmup-frac", type=float, default=0.0)
+    ap.add_argument("--eval-every", type=int, default=200)
+    ap.add_argument("--heterogeneous", action="store_true")
+    ap.add_argument("--time-scale", type=float, default=1e-3)
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="disable the fused dana_update kernel routing")
+    ap.add_argument("--no-telemetry", action="store_true")
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stall-prob", type=float, default=0.0)
+    ap.add_argument("--stall-scale", type=float, default=5.0)
+    ap.add_argument("--dropout", nargs="*", default=None,
+                    metavar="WORKER:OUT:REJOIN")
+    ap.add_argument("--reorder-prob", type=float, default=0.0)
+    ap.add_argument("--compare-engine", action="store_true",
+                    help="(deterministic mode) also run the discrete-event "
+                         "engine and report the max parameter difference")
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    args = ap.parse_args(argv)
+
+    params0, grad_fn, next_batch, eval_fn = _setup(args)
+    sched = None
+    if args.warmup_frac > 0:
+        sched = Schedule(base_lr=args.lr, num_workers=args.workers,
+                         warmup_steps=int(args.warmup_frac * args.grads))
+    hp = HyperParams(lr=args.lr, momentum=args.momentum)
+    gm = (GammaModel.heterogeneous_env(seed=args.seed)
+          if args.heterogeneous else GammaModel.homogeneous(seed=args.seed))
+    faults = None
+    if args.stall_prob or args.dropout or args.reorder_prob:
+        faults = FaultPlan(seed=args.seed, stall_prob=args.stall_prob,
+                           stall_scale=args.stall_scale,
+                           dropout=_parse_dropout(args.dropout),
+                           reorder_prob=args.reorder_prob)
+    cfg = ClusterConfig(
+        num_workers=args.workers, total_grads=args.grads,
+        eval_every=args.eval_every, mode=args.mode,
+        coalesce=args.coalesce, exec_model=gm,
+        time_scale=args.time_scale, faults=faults,
+        record_telemetry=not args.no_telemetry,
+        use_kernel=False if args.no_kernel else None)
+
+    algo = make_algorithm(args.algo, hp, sched)
+    stats: dict = {}
+    hist = run_cluster(algo, grad_fn, params0, next_batch, cfg, eval_fn,
+                       stats_out=stats)
+    summary = hist.summary()
+    summary.update({k: v for k, v in stats.items()
+                    if k != "grads_per_worker"})
+    print("== cluster run ==")
+    for k, v in summary.items():
+        print(f"  {k}: {v}")
+    print(f"  grads_per_worker: {stats['grads_per_worker']}")
+
+    if args.compare_engine:
+        if args.mode != "deterministic":
+            raise SystemExit("--compare-engine requires --mode "
+                             "deterministic")
+        algo2 = make_algorithm(args.algo, hp, sched)
+        sim = SimulationConfig(num_workers=args.workers,
+                               total_grads=args.grads,
+                               eval_every=args.eval_every, exec_model=gm,
+                               record_telemetry=not args.no_telemetry)
+        h2 = run_simulation(algo2, grad_fn, params0, next_batch, sim,
+                            eval_fn)
+        diffs = [float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                 for a, b in zip(jax.tree.leaves(hist.final_params),
+                                 jax.tree.leaves(h2.final_params))]
+        print("== engine cross-validation ==")
+        print(f"  max param diff vs run_simulation: {max(diffs):.3e}  "
+              f"({'BIT-EXACT' if max(diffs) == 0.0 else 'MISMATCH'})")
+        summary["engine_max_param_diff"] = max(diffs)
+
+    if args.out:
+        d = os.path.dirname(args.out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"summary": summary,
+                       "eval_loss": hist.eval_loss,
+                       "eval_step": hist.eval_step}, f, indent=1,
+                      default=float)
+        print(f"[saved] {args.out}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

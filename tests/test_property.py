@@ -7,7 +7,10 @@ hand-picked orders of test_algorithms.py.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import HyperParams, make_algorithm
 from repro.core.schedules import Schedule, momentum_correction
