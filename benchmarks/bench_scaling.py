@@ -29,8 +29,10 @@ def main(argv=None):
     ap.add_argument("--heterogeneous", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    out = args.out or (f"results/bench_scaling_{args.preset}"
-                       + ("_hetero" if args.heterogeneous else "") + ".json")
+    # None -> default artifact; "" -> explicitly no artifact (smoke runs)
+    out = args.out if args.out is not None else (
+        f"results/bench_scaling_{args.preset}"
+        + ("_hetero" if args.heterogeneous else "") + ".json")
 
     setup = classifier_setup() if args.preset == "classifier" else lm_setup()
     lr = args.lr if args.lr is not None else (

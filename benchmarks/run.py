@@ -2,13 +2,20 @@
 
   PYTHONPATH=src python -m benchmarks.run             # default (fast) sizes
   PYTHONPATH=src python -m benchmarks.run --full      # paper-scale sweeps
+  PYTHONPATH=src python -m benchmarks.run --quick     # smoke profile (CI)
   PYTHONPATH=src python -m benchmarks.run --only gap scaling
 
-Artifacts land in results/*.json; EXPERIMENTS.md cites them.
+Artifacts land in results/*.json; EXPERIMENTS.md cites them.  Every
+invocation additionally APPENDS one entry (profile, per-suite wall time /
+ok flag / claims) to the repo-root ``BENCH_kernels.json`` trajectory, so
+benchmark behavior over the PR history is greppable and a rotted driver
+shows up as a missing/failed entry instead of silence.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -16,6 +23,11 @@ from . import (bench_cluster, bench_convergence, bench_gamma, bench_gap,
                bench_heterogeneous, bench_kernels, bench_optimizers,
                bench_scaling, bench_speedup)
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY = os.path.join(_ROOT, "BENCH_kernels.json")
+
+# name -> (module, fast argv, full argv).  QUICK overrides fast for the
+# --quick smoke profile (tiny sizes; exercised by tests/test_bench_smoke).
 SUITES = {
     "gamma": (bench_gamma, [], []),                       # Fig. 3
     "speedup": (bench_speedup, [], []),                   # Fig. 12
@@ -40,7 +52,7 @@ SUITES = {
                    ["--grads", "3000", "--workers", "4", "8", "16", "24"]),
     "cluster": (bench_cluster,                            # App. C.1 bottleneck
                 ["--grads", "2500", "--workers", "8",
-                 "--coalesce", "1", "4"],
+                 "--coalesce", "1", "4", "8"],
                 ["--grads", "8000", "--workers", "8", "16", "32",
                  "--coalesce", "1", "2", "4", "8"]),
     "scaling-lm": (bench_scaling,                         # Fig. 7 / Tab. 5
@@ -50,33 +62,101 @@ SUITES = {
                     "8", "16", "32"]),
 }
 
+# --out "" -> smoke runs never clobber the recorded results/*.json
+QUICK = {
+    "gamma": ["--samples", "20000", "--out", ""],
+    "speedup": ["--rounds", "300", "--out", ""],
+    "kernels": ["--sizes", "4096", "--batch-rows", "64",
+                "--batch-k", "4", "--out", ""],
+    "gap": ["--grads", "150", "--out", ""],
+    "convergence": ["--grads", "150", "--algos", "dana-zero",
+                    "--out", ""],
+    "scaling": ["--grads", "150", "--workers", "2",
+                "--algos", "dana-zero", "--out", ""],
+    # needs one non-dana algo: the suite's claims take a min() over them
+    "heterogeneous": ["--grads", "150", "--workers", "2",
+                      "--algos", "nag-asgd", "dana-slim", "--out", ""],
+    "optimizers": ["--grads", "150", "--workers", "2",
+                   "--algos", "dana-nadam", "--out", ""],
+    "cluster": ["--grads", "160", "--workers", "4",
+                "--coalesce", "1", "4", "--reps", "10", "--out", ""],
+    "scaling-lm": ["--preset", "lm", "--grads", "60", "--workers", "2",
+                   "--algos", "dana-slim", "--out", ""],
+}
+
+
+def _append_trajectory(entry: dict, path: str):
+    """Append-style trajectory: a JSON list, one entry per run."""
+    trail = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                trail = json.load(f)
+            if not isinstance(trail, list):
+                trail = [trail]
+        except (json.JSONDecodeError, OSError):
+            trail = []
+    trail.append(entry)
+    with open(path, "w") as f:
+        json.dump(trail, f, indent=1, default=str)
+    print(f"[trajectory] appended entry #{len(trail)} to {path}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweep sizes")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke profile: tiny sizes, drivers only")
     ap.add_argument("--only", nargs="*", default=None,
                     choices=list(SUITES))
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="skip the BENCH_kernels.json append")
     args = ap.parse_args(argv)
+    if args.full and args.quick:
+        ap.error("--full and --quick are mutually exclusive")
+    profile = "full" if args.full else "quick" if args.quick else "fast"
 
     names = args.only or list(SUITES)
     failures = []
+    suites_out = {}
+    t_run = time.time()
     for name in names:
         mod, fast, full = SUITES[name]
-        argv_i = (full if args.full else fast)
+        argv_i = (full if args.full
+                  else QUICK.get(name, fast) if args.quick else fast)
         print(f"\n===== {name} {' '.join(argv_i)} =====", flush=True)
         t0 = time.time()
+        ok, claims = True, None
         try:
-            mod.main(argv_i)
+            out = mod.main(argv_i)
+            if isinstance(out, tuple) and len(out) == 2 \
+                    and isinstance(out[1], dict):
+                claims = out[1]
         except Exception as e:  # noqa: BLE001
+            ok = False
             failures.append((name, repr(e)))
             print(f"[FAILED] {name}: {e!r}", flush=True)
-        print(f"===== {name} done in {time.time() - t0:.1f}s =====",
-              flush=True)
+        wall = time.time() - t0
+        suites_out[name] = {"ok": ok, "wall_s": round(wall, 3),
+                            "claims": claims}
+        print(f"===== {name} done in {wall:.1f}s =====", flush=True)
+
+    if not args.no_trajectory:
+        # module-attr lookup at call time (tests monkeypatch TRAJECTORY)
+        _append_trajectory(path=TRAJECTORY, entry={
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "profile": profile,
+            "argv": list(argv) if argv is not None else sys.argv[1:],
+            "wall_s": round(time.time() - t_run, 3),
+            "suites": suites_out,
+            "failures": failures,
+        })
     if failures:
         print("\nFAILURES:", failures)
         sys.exit(1)
     print("\nall benchmarks passed")
+    return suites_out
 
 
 if __name__ == "__main__":

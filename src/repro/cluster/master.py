@@ -9,14 +9,23 @@ still gets the view it would have gotten from per-message processing) —
 but pays one trace/dispatch and one host-device round trip for the whole
 batch instead of k of them.
 
-When the algorithm is exactly DANA-Zero, the per-message body is routed
-through the fused Pallas ``dana_update`` kernel (``repro.kernels``): one
-read-modify-write pass over (theta, v_i, v0) per message instead of the
-composed elementwise chain — on TPU this is the bandwidth-optimal master
-round; off-TPU it dispatches the jnp reference and stays bit-identical to
-the algorithm path under a constant learning rate (the kernel's look-ahead
-uses lr(t) where the algorithm's send would use lr(t+1); these only differ
-mid-ramp of a schedule).
+On top of coalescing sit two kernel paths:
+
+* **flat** (default when ``use_kernel``): the whole per-worker-momentum
+  family (dana-zero, multi-asgd, dana-slim, nag-asgd, dana-nadam) runs on
+  flat (R, 128) state packed ONCE at init — ``repro.kernels.flat_update``
+  applies all k drained messages in a single batched kernel (Pallas on
+  TPU, bit-identical jnp reference elsewhere).  No per-call, per-leaf
+  padding; pytrees only at the edges (incoming grads, outgoing views).
+* **legacy tree kernel** (``flat=False``, DANA-Zero only): PR 1's
+  per-message ``dana_update`` routing — k sequential kernel rounds inside
+  the fused jit, re-padding every leaf per call.  Kept as the benchmark
+  baseline for the batched path.
+
+Both kernel paths use lr(t) for the look-ahead where the algorithm's send
+would use lr(t+1); the flat path additionally skips the momentum
+-correction rescale, so it requires a constant learning rate (enforced) —
+under which both are bit-identical to the algorithm path (tested).
 """
 from __future__ import annotations
 
@@ -30,34 +39,47 @@ import numpy as np
 
 from ..core.algorithms import Algorithm, DanaZero
 from ..core.metrics import History
+from ..core.schedules import schedule_is_constant
 from ..core.types import (tree_gap, tree_index, tree_l2, tree_scale,
                           tree_set_index)
 from ..kernels.dana_update import dana_master_update
+from ..kernels.flat_update import FlatAlgorithm, kernel_eligible
 from .faults import FaultInjector
 from .mailbox import GradMsg, Mailbox, Reply
-
-
-def kernel_eligible(algo: Algorithm) -> bool:
-    """The fused dana_update kernel implements exactly Alg. 4 + App. A.2;
-    subclasses (DANA-DC, DANA-Hetero) change receive/send and must take
-    the generic path."""
-    return type(algo) is DanaZero
 
 
 class Master:
     def __init__(self, algo: Algorithm, state: dict, *,
                  mailbox: Mailbox, history: History, stop: threading.Event,
                  total_grads: int, coalesce: int = 1,
-                 use_kernel: bool = False,
+                 use_kernel: bool = False, flat: bool | None = None,
                  record_telemetry: bool = True,
                  eval_fn: Callable | None = None, eval_every: int = 100,
                  injector: FaultInjector | None = None,
                  time_fn: Callable[[GradMsg], float] | None = None):
-        if use_kernel and not kernel_eligible(algo):
-            raise ValueError(
-                f"use_kernel=True but {algo.name!r} is not kernel-eligible")
         self.algo = algo
-        self.state = state
+        self._tree_state: dict | None = state
+        self._flat_algo: FlatAlgorithm | None = None
+        self._flat_state: dict | None = None
+        if use_kernel:
+            if flat is None:
+                # the flat path requires a constant lr; DANA-Zero with a
+                # moving schedule keeps PR 1's legacy per-message kernel
+                # (which applies momentum correction in tree space)
+                flat = (schedule_is_constant(algo.schedule)
+                        or type(algo) is not DanaZero)
+            if flat:
+                if not kernel_eligible(algo):
+                    raise ValueError(f"use_kernel=True but {algo.name!r} "
+                                     f"is not kernel-eligible")
+                self._flat_algo = FlatAlgorithm(algo)
+                self._flat_state = self._flat_algo.adopt(state)
+                self._tree_state = None
+            elif type(algo) is not DanaZero:
+                raise ValueError(
+                    f"the legacy (flat=False) kernel path implements "
+                    f"exactly DANA-Zero, got {algo.name!r}")
+        self.state_is_flat = self._flat_algo is not None
         self.mailbox = mailbox
         self.history = history
         self.stop = stop
@@ -72,6 +94,12 @@ class Master:
         self._step = 0                     # master update counter (host copy)
         self._fused: dict = {}             # (k, telemetry) -> jitted pass
         self._send_jit = jax.jit(algo.send)
+        if self.state_is_flat:
+            # flat mode keeps the WIRE format flat too: workers receive
+            # (R, 128) views and push (R, 128) gradients (runtime wraps
+            # their grad_fn with unpack/pack), so the master thread never
+            # touches a pytree on the hot path
+            self._flat_send_jit = jax.jit(self._flat_algo._view_flat)
         self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
         # time source for History rows (virtual in deterministic/paced
         # modes, wall-clock seconds in free mode)
@@ -91,54 +119,111 @@ class Master:
     def step(self) -> int:
         return self._step
 
+    @property
+    def state(self) -> dict:
+        """The algorithm's pytree state (unpacked on demand in flat mode)."""
+        if self.state_is_flat:
+            return self._flat_algo.tree_state(self._flat_state)
+        return self._tree_state
+
+    def master_params(self):
+        if self.state_is_flat:
+            return self._flat_algo.master_params(self._flat_state)
+        return self.algo.master_params(self._tree_state)
+
     def initial_view(self, i: int):
         """Initial parameter pull for worker i (call in order 0..n-1 from
         ONE thread before workers start — mirrors the engine's warm-up)."""
-        view, self.state = self._send_jit(self.state, jnp.int32(i))
+        if self.state_is_flat:
+            return self._flat_send_jit(self._flat_state), self._step
+        view, self._tree_state = self._send_jit(self._tree_state,
+                                                jnp.int32(i))
         return view, self._step
 
     def warm(self):
         """Pre-compile every fused-receive variant the drain policy can
         produce (powers of two up to the coalesce window) so no compile
         lands mid-run.  Zero gradients, discarded output state."""
-        zero_grad = jax.tree.map(jnp.zeros_like,
-                                 self.algo.master_params(self.state))
+        if self.state_is_flat:
+            zero_grad = jnp.zeros_like(self._flat_state["theta"])
+            view = self._flat_state["theta"]
+        else:
+            zero_grad = jax.tree.map(jnp.zeros_like, self.master_params())
+            view = self.master_params()
         k = 1
         while k <= self.coalesce:
-            fn = self._get_fused(k, self.record_telemetry)
             ids = jnp.zeros((k,), jnp.int32)
             nows = jnp.zeros((k,), jnp.float32)
             grads = tuple(zero_grad for _ in range(k))
-            views = (tuple(self.algo.master_params(self.state)
-                           for _ in range(k))
+            views = (tuple(view for _ in range(k))
                      if self.record_telemetry else None)
-            out = fn(self.state, ids, nows, grads, views)
+            fn, st = self._fused_for(k, self.record_telemetry)
+            out = fn(st, ids, nows, grads, views)
             jax.block_until_ready(jax.tree.leaves(out[0])[0])
             k *= 2
 
     # -- fused coalesced receive ----------------------------------------
+    def _fused_for(self, k: int, telemetry: bool):
+        if self.state_is_flat:
+            return self._get_fused_flat(k, telemetry), self._flat_state
+        return self._get_fused(k, telemetry), self._tree_state
+
+    def _get_fused_flat(self, k: int, telemetry: bool):
+        """ONE batched flat kernel for the whole k-message drain.
+
+        Everything on the wire is already flat: ``grads`` and ``views``
+        are (R, 128) buffers (the workers' grad jit packs/unpacks at
+        their end) and the returned views are raw (R, 128) hat rows —
+        the master thread does no pytree work at all.
+        """
+        key = ("flat", k, telemetry)
+        fn = self._fused.get(key)
+        if fn is not None:
+            return fn
+        fa = self._flat_algo
+        inv_sqrt_p = 1.0 / float(np.sqrt(fa.spec.n_elems))
+
+        def fused(flat, ids, nows, grads, views):
+            g_flat = jnp.stack(grads)
+            flat, hats, pres = fa.apply_batch(flat, ids, g_flat,
+                                              telemetry=telemetry)
+            out_views = tuple(hats[j] for j in range(k))
+            if telemetry:
+                d = pres - jnp.stack(views)  # zero in the padding region
+                gaps = jnp.sqrt(jnp.sum(d * d, axis=(1, 2))) * inv_sqrt_p
+                gnorms = jnp.sqrt(jnp.sum(g_flat * g_flat, axis=(1, 2)))
+                return flat, out_views, gaps, gnorms
+            return flat, out_views, None, None
+
+        fn = jax.jit(fused)
+        self._fused[key] = fn
+        return fn
+
     def _get_fused(self, k: int, telemetry: bool):
         key = (k, telemetry)
         fn = self._fused.get(key)
         if fn is not None:
             return fn
         algo = self.algo
-        kernel = self.use_kernel
+        kernel = self.use_kernel and not self.state_is_flat
 
         def _one(state, i, grad, now):
             if not kernel:
-                state = algo.receive(state, i, grad, now)
-                view, state = algo.send(state, i)
-                return state, view
-            # fused Pallas/ref dana_update round (Alg. 4 + App. A.2)
-            lr, corr = algo._lr_and_correction(state)
-            vs = tree_scale(corr, state["v"])
-            v0 = tree_scale(corr, state["v0"])
-            vi_old = tree_index(vs, i)
+                return algo.receive_send(state, i, grad, now)
+            # legacy per-message Pallas/ref dana_update round (PR 1):
+            # true-scale values in, stored scale (v_true / vscale) out
+            lr, vscale = algo._lr_and_vscale(state)
+            vi_old = tree_index(state["v"], i)
             theta, vi, v0n, theta_hat = dana_master_update(
-                state["theta0"], vi_old, v0, grad, lr, algo.hp.momentum)
+                state["theta0"], tree_scale(vscale, vi_old),
+                tree_scale(vscale, state["v0"]), grad, lr,
+                algo.hp.momentum)
+            inv = 1.0 / vscale
             state = dict(state)
-            state.update(theta0=theta, v=tree_set_index(vs, i, vi), v0=v0n,
+            state.update(theta0=theta,
+                         v=tree_set_index(state["v"], i,
+                                          tree_scale(inv, vi)),
+                         v0=tree_scale(inv, v0n), vscale=vscale,
                          t=state["t"] + 1, lr_prev=lr)
             return state, theta_hat
 
@@ -163,14 +248,17 @@ class Master:
     def _apply(self, work: list[GradMsg]):
         k = len(work)
         telemetry = self.record_telemetry
-        fn = self._get_fused(k, telemetry)
+        fn, st = self._fused_for(k, telemetry)
         ids = jnp.asarray([m.worker_id for m in work], jnp.int32)
         nows = jnp.asarray([m.t_send for m in work], jnp.float32)
         grads = tuple(m.grad for m in work)
         views = tuple(m.view for m in work) if telemetry else None
         t0 = self._step
-        self.state, out_views, gaps, gnorms = fn(
-            self.state, ids, nows, grads, views)
+        st, out_views, gaps, gnorms = fn(st, ids, nows, grads, views)
+        if self.state_is_flat:
+            self._flat_state = st
+        else:
+            self._tree_state = st
         self._step = t0 + k
         if telemetry:           # one host transfer per batch, not 2k
             gaps = np.asarray(gaps)
@@ -197,14 +285,17 @@ class Master:
     def _eval(self, t, step):
         if self._eval_jit is None:
             return
-        out = self._eval_jit(self.algo.master_params(self.state))
+        out = self._eval_jit(self.master_params())
         loss, metric = (out if isinstance(out, tuple)
                         else (out, float("nan")))
         self.history.record_eval(time=t, step=step, loss=loss, metric=metric)
 
     def _pull_reply(self, m: GradMsg):
-        view, self.state = self._send_jit(self.state,
-                                          jnp.int32(m.worker_id))
+        if self.state_is_flat:
+            view = self._flat_send_jit(self._flat_state)
+        else:
+            view, self._tree_state = self._send_jit(self._tree_state,
+                                                    jnp.int32(m.worker_id))
         m.respond(Reply(view=view, step=self._step))
 
     # -- main loop -------------------------------------------------------

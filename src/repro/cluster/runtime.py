@@ -19,23 +19,16 @@ import jax
 from ..core.algorithms import SSGD, Algorithm
 from ..core.gamma import GammaModel
 from ..core.metrics import History
+from ..core.schedules import schedule_is_constant
 from ..core.types import Pytree
+from ..kernels.flat_update import kernel_eligible
 from .clock import VirtualClock
 from .faults import FaultInjector, FaultPlan
 from .mailbox import Mailbox
-from .master import Master, kernel_eligible
+from .master import Master
 from .worker import Worker
 
 MODES = ("deterministic", "paced", "free")
-
-
-def _schedule_is_constant(algo: Algorithm) -> bool:
-    from ..core.schedules import Schedule
-    s = algo.schedule
-    if not isinstance(s, Schedule):
-        return False            # custom callable: unknown, assume moving
-    warms = s.warmup_steps > 0 and s.num_workers > 1
-    return not warms and not s.milestones
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,12 +80,13 @@ def run_cluster(
 
     use_kernel = cfg.use_kernel
     if use_kernel is None:
-        # auto-routing must be numerically silent: the kernel's look-ahead
-        # uses lr(t) where the algorithm path uses lr(t+1), so only enable
-        # it when the schedule cannot move between steps (constant lr);
-        # explicit use_kernel=True opts into the documented deviation
+        # auto-routing must be numerically silent: the flat fused path
+        # uses lr(t) for the look-ahead where the algorithm path uses
+        # lr(t+1) and skips the momentum-correction rescale, so only
+        # enable it when the schedule cannot move between steps (constant
+        # lr); explicit use_kernel=True opts into the documented deviation
         use_kernel = (not deterministic and kernel_eligible(algo)
-                      and _schedule_is_constant(algo))
+                      and schedule_is_constant(algo.schedule))
 
     injector = (FaultInjector(cfg.faults, n, cfg.exec_model.batch_size)
                 if cfg.faults is not None else None)
@@ -144,7 +138,15 @@ def run_cluster(
         ]
         draw = (lambda wid: samplers[wid](wid))
 
-    grad_jit = jax.jit(grad_fn)
+    if master.state_is_flat:
+        # flat wire format: the worker unpacks its (R, 128) view and packs
+        # its gradient inside ITS OWN jit — the pytree<->flat traffic runs
+        # on the (parallel) worker threads, never on the master hot path
+        spec = master._flat_algo.spec
+        grad_jit = jax.jit(lambda fv, batch: spec.pack(
+            grad_fn(spec.unpack(fv), batch)))
+    else:
+        grad_jit = jax.jit(grad_fn)
     workers = [
         Worker(wid, master=master, mailbox=mailbox, grad_jit=grad_jit,
                next_batch=next_batch, stop=stop, mode=cfg.mode,
@@ -194,7 +196,7 @@ def run_cluster(
         raise RuntimeError(f"cluster stopped early: applied "
                            f"{master.applied}/{cfg.total_grads} gradients")
 
-    history.final_params = algo.master_params(master.state)
+    history.final_params = master.master_params()
     if stats_out is not None:
         t_end = time.perf_counter()
         applied_total = sum(k * v for k, v in

@@ -3,15 +3,17 @@ from .algorithms import (ASGD, DCASGD, LWP, REGISTRY, Algorithm, DanaDC,
                          DanaHetero, DanaSlim, DanaZero, MultiASGD, NagASGD,
                          SSGD, YellowFin, make_algorithm)
 from .engine import SimulationConfig, run_simulation
+from .flat import FlatSpec
 from .gamma import GammaModel
 from .metrics import History
-from .schedules import Schedule, constant, momentum_correction
+from .schedules import (Schedule, constant, momentum_correction,
+                        schedule_is_constant)
 from .types import HyperParams, tree_gap
 
 __all__ = [
     "ASGD", "DCASGD", "LWP", "REGISTRY", "Algorithm", "DanaDC", "DanaHetero",
     "DanaSlim", "DanaZero", "MultiASGD", "NagASGD", "SSGD", "YellowFin",
-    "make_algorithm", "SimulationConfig", "run_simulation", "GammaModel",
-    "History", "Schedule", "constant", "momentum_correction", "HyperParams",
-    "tree_gap",
+    "make_algorithm", "SimulationConfig", "run_simulation", "FlatSpec",
+    "GammaModel", "History", "Schedule", "constant", "momentum_correction",
+    "schedule_is_constant", "HyperParams", "tree_gap",
 ]

@@ -90,6 +90,15 @@ class Algorithm:
     def receive(self, state: dict, i, grad: Pytree, now=0.0) -> dict:
         raise NotImplementedError
 
+    def receive_send(self, state: dict, i, grad: Pytree,
+                     now=0.0) -> tuple[dict, Pytree]:
+        """One master round: apply worker i's gradient, return its fresh
+        view.  The engine and cluster master call this (it is what the
+        fused flat kernel path overrides as a single pass)."""
+        state = self.receive(state, i, grad, now)
+        view, state = self.send(state, i)
+        return state, view
+
     def master_params(self, state: dict) -> Pytree:
         return state["theta0"]
 
@@ -99,6 +108,27 @@ class Algorithm:
         lr = self.schedule(state["t"])
         factor = momentum_correction(None, lr, state["lr_prev"])
         return lr, factor
+
+    # Lazy momentum-correction scale for (N, ...)-stacked momentum.
+    # Eagerly applying ``tree_scale(corr, state["v"])`` touches the whole
+    # stacked buffer on EVERY receive — O(N*P) for an O(P) message.  The
+    # stacked buffer instead stores v_true / vscale and the scalar
+    # ``vscale`` absorbs the running product of correction factors, so a
+    # receive touches only row i (plus any running sum).  Under a constant
+    # schedule corr == 1, vscale stays exactly 1.0, and stored buffers
+    # equal the true ones bit-for-bit.
+    def _lr_and_vscale(self, state: dict):
+        lr = self.schedule(state["t"])
+        corr = momentum_correction(None, lr, state["lr_prev"])
+        # a schedule driving lr to exactly 0 (decay_factor=0) would zero
+        # the accumulator and poison the 1/vscale stored-scale updates
+        # with inf; floored, the TRUE momentum vscale*v still underflows
+        # to the eager path's zeros while the accumulator stays finite
+        return lr, state["vscale"] * jnp.maximum(corr, 1e-30)
+
+    @staticmethod
+    def _vscale_init():
+        return jnp.asarray(1.0, jnp.float32)
 
 
 class ASGD(Algorithm):
@@ -127,20 +157,22 @@ class NagASGD(Algorithm):
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
         s["v"] = tree_zeros_like(s["theta0"])
+        s["vscale"] = self._vscale_init()
         return s
 
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
-        v = tree_scale(corr, state["v"])
-        v = tree_axpy(g, v, grad)                     # v <- gamma*v + g
+        v = tree_axpy(g, state["v"],                  # v <- gamma*v + g
+                      tree_scale(1.0 / vscale, grad))  # (stored scale)
         if self.nesterov:
-            upd = tree_axpy(g, v, grad)               # gamma*v_new + g
+            upd = tree_axpy(g * vscale, v, grad)      # gamma*v_true + g
+            state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
         else:
-            upd = v
-        state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
+            state["theta0"] = tree_axpy(-lr * vscale, v, state["theta0"])
         state["v"] = v
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state
@@ -167,14 +199,17 @@ class MultiASGD(Algorithm):
 
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
-        vs = tree_scale(corr, state["v"])
-        vi = tree_index(vs, i)
-        vi = tree_axpy(g, vi, grad)
-        upd = tree_axpy(g, vi, grad) if self.nesterov else vi
-        state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
-        state["v"] = tree_set_index(vs, i, vi)
+        vi = tree_index(state["v"], i)              # stored scale
+        vi = tree_axpy(g, vi, tree_scale(1.0 / vscale, grad))
+        if self.nesterov:
+            upd = tree_axpy(g * vscale, vi, grad)   # gamma*v_true + g
+            state["theta0"] = tree_axpy(-lr, upd, state["theta0"])
+        else:
+            state["theta0"] = tree_axpy(-lr * vscale, vi, state["theta0"])
+        state["v"] = tree_set_index(state["v"], i, vi)
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state
@@ -182,6 +217,7 @@ class MultiASGD(Algorithm):
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
         s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        s["vscale"] = self._vscale_init()
         return s
 
 
@@ -196,6 +232,7 @@ class DCASGD(Algorithm):
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
         s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        s["vscale"] = self._vscale_init()
         s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
         return s
 
@@ -207,16 +244,17 @@ class DCASGD(Algorithm):
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
         lam = self.hp.dc_lambda
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
         sent_i = tree_index(state["sent"], i)
         delta = tree_sub(state["theta0"], sent_i)
         ghat = tree_add(grad, tree_scale(lam, tree_mul(tree_mul(grad, grad),
                                                        delta)))
-        vs = tree_scale(corr, state["v"])
-        vi = tree_axpy(g, tree_index(vs, i), ghat)
-        state["theta0"] = tree_axpy(-lr, vi, state["theta0"])
-        state["v"] = tree_set_index(vs, i, vi)
+        vi = tree_axpy(g, tree_index(state["v"], i),
+                       tree_scale(1.0 / vscale, ghat))
+        state["theta0"] = tree_axpy(-lr * vscale, vi, state["theta0"])
+        state["v"] = tree_set_index(state["v"], i, vi)
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state
@@ -270,26 +308,27 @@ class DanaZero(Algorithm):
         s = self._base_state(params, num_workers)
         s["v"] = _stacked_zeros(s["theta0"], num_workers)
         s["v0"] = tree_zeros_like(s["theta0"])
+        s["vscale"] = self._vscale_init()
         return s
 
     def send(self, state, i):
         lr = self.schedule(state["t"])
-        view = tree_axpy(-lr * self.hp.momentum, state["v0"], state["theta0"])
+        view = tree_axpy(-lr * self.hp.momentum * state["vscale"],
+                         state["v0"], state["theta0"])
         return view, state
 
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
-        vs = tree_scale(corr, state["v"])
-        v0 = tree_scale(corr, state["v0"])
-        vi_old = tree_index(vs, i)
-        vi = tree_axpy(g, vi_old, grad)                   # v_i <- g*v_i + grad
-        # O(k) incremental sum maintenance (Appendix A.2)
-        v0 = tree_add(tree_sub(v0, vi_old), vi)
-        state["theta0"] = tree_axpy(-lr, vi, state["theta0"])
-        state["v"] = tree_set_index(vs, i, vi)
+        vi_old = tree_index(state["v"], i)                # stored scale
+        vi = tree_axpy(g, vi_old, tree_scale(1.0 / vscale, grad))
+        # O(k) incremental sum maintenance (Appendix A.2); v0 shares vscale
+        v0 = tree_add(tree_sub(state["v0"], vi_old), vi)
+        state["theta0"] = tree_axpy(-lr * vscale, vi, state["theta0"])
+        state["v"] = tree_set_index(state["v"], i, vi)
         state["v0"] = v0
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state
@@ -311,17 +350,19 @@ class DanaSlim(Algorithm):
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
         s["v"] = _stacked_zeros(s["theta0"], num_workers)   # worker-side
+        s["vscale"] = self._vscale_init()
         return s
 
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
-        vs = tree_scale(corr, state["v"])
-        vi = tree_axpy(g, tree_index(vs, i), grad)          # worker-side
-        u = tree_axpy(g, vi, grad)                          # send gamma*v + g
+        vi = tree_axpy(g, tree_index(state["v"], i),        # worker-side
+                       tree_scale(1.0 / vscale, grad))
+        u = tree_axpy(g * vscale, vi, grad)                 # gamma*v_true + g
         state["theta0"] = tree_axpy(-lr, u, state["theta0"])  # ASGD master
-        state["v"] = tree_set_index(vs, i, vi)
+        state["v"] = tree_set_index(state["v"], i, vi)
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state
@@ -377,10 +418,11 @@ class DanaHetero(DanaZero):
         lr = self.schedule(state["t"])
         rates = 1.0 / jnp.maximum(state["interval"], 1e-6)   # [N]
         w = rates / jnp.maximum(rates[i], 1e-6)              # r_j / r_i
-        # weighted sum of per-worker momentum vectors
+        # weighted sum of per-worker momentum vectors (stored scale)
         weighted = jax.tree.map(
             lambda vstack: jnp.tensordot(w, vstack, axes=1), state["v"])
-        view = tree_axpy(-lr * self.hp.momentum, weighted, state["theta0"])
+        view = tree_axpy(-lr * self.hp.momentum * state["vscale"],
+                         weighted, state["theta0"])
         return view, state
 
     def receive(self, state, i, grad, now=0.0):
@@ -676,6 +718,7 @@ class GapAware(Algorithm):
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
         s["v"] = _stacked_zeros(s["theta0"], num_workers)
+        s["vscale"] = self._vscale_init()
         s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
         s["avg_step"] = jnp.asarray(1e-8, jnp.float32)
         return s
@@ -688,22 +731,23 @@ class GapAware(Algorithm):
     def receive(self, state, i, grad, now=0.0):
         from .types import tree_gap, tree_size
         g = self.hp.momentum
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
         sent_i = tree_index(state["sent"], i)
         gap = tree_gap(state["theta0"], sent_i)
         penalty = 1.0 + gap / jnp.maximum(state["avg_step"], 1e-12)
         ghat = tree_scale(1.0 / penalty, grad)
-        vs = tree_scale(corr, state["v"])
-        vi = tree_axpy(g, tree_index(vs, i), ghat)
-        state["theta0"] = tree_axpy(-lr, vi, state["theta0"])
+        vi = tree_axpy(g, tree_index(state["v"], i),
+                       tree_scale(1.0 / vscale, ghat))
+        state["theta0"] = tree_axpy(-lr * vscale, vi, state["theta0"])
         # track the RMS size of one master update (the gap unit)
         k = tree_size(vi)
-        step_rms = lr * tree_l2_local(vi) / jnp.sqrt(
+        step_rms = lr * vscale * tree_l2_local(vi) / jnp.sqrt(
             jnp.asarray(k, jnp.float32))
         state["avg_step"] = self.EMA * state["avg_step"] \
             + (1 - self.EMA) * step_rms
-        state["v"] = tree_set_index(vs, i, vi)
+        state["v"] = tree_set_index(state["v"], i, vi)
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state

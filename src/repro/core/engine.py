@@ -32,6 +32,11 @@ class SimulationConfig:
     eval_every: int = 100          # master updates between eval points
     exec_model: GammaModel = GammaModel()
     record_telemetry: bool = True
+    # Run the master hot path on flat (R, 128) state through the batched
+    # fused kernel (repro.kernels.flat_update; Pallas on TPU, bit-identical
+    # jnp reference elsewhere).  Requires a kernel-eligible algorithm and a
+    # constant learning rate — raises otherwise.
+    use_kernel: bool = False
 
 
 def run_simulation(
@@ -51,7 +56,6 @@ def run_simulation(
     n = cfg.num_workers
     history = History()
     draw = cfg.exec_model.sampler(n)
-    state = algo.init(params0, n)
 
     eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
 
@@ -63,19 +67,31 @@ def run_simulation(
         history.record_eval(time=time, step=step, loss=loss, metric=metric)
 
     if isinstance(algo, SSGD):
+        if cfg.use_kernel:
+            raise ValueError(
+                "ssgd is not kernel-eligible (it needs the synchronous "
+                "barrier, not the per-message flat path)")
+        state = algo.init(params0, n)
         state = _run_ssgd(algo, grad_fn, next_batch, cfg, draw, state,
                           history, _eval)
         history.final_params = algo.master_params(state)
         return history
 
+    # flat fused execution: same loop, state packed once into (R, 128)
+    # buffers and receive->send applied by the batched kernel
+    algo_exec = algo
+    if cfg.use_kernel:
+        from ..kernels.flat_update import FlatAlgorithm
+        algo_exec = FlatAlgorithm(algo)
+    state = algo_exec.init(params0, n)
+
     # ---- asynchronous event loop ---------------------------------------
     @jax.jit
     def step_fn(state, view, batch, i, now):
         grad = grad_fn(view, batch)
-        gap = tree_gap(algo.master_params(state), view)
+        gap = tree_gap(algo_exec.master_params(state), view)
         gnorm = tree_l2(grad)
-        state = algo.receive(state, i, grad, now)
-        new_view, state = algo.send(state, i)
+        state, new_view = algo_exec.receive_send(state, i, grad, now)
         return state, new_view, gap, gnorm
 
     views: list[Pytree] = []
@@ -84,7 +100,7 @@ def run_simulation(
     # One jit wrapper, traced once: the worker index is a traced int32 (every
     # algorithm's send path indexes dynamically), instead of a fresh jit
     # wrapper — and a fresh trace — per worker per call.
-    send_jit = jax.jit(algo.send)
+    send_jit = jax.jit(algo_exec.send)
     for i in range(n):
         view, state = send_jit(state, jnp.int32(i))
         views.append(view)
@@ -106,9 +122,9 @@ def run_simulation(
         pull_step[i] = int(state["t"])
         done += 1
         if done % cfg.eval_every == 0 or done == cfg.total_grads:
-            _eval(algo.master_params(state), t_now, int(state["t"]))
+            _eval(algo_exec.master_params(state), t_now, int(state["t"]))
         heapq.heappush(heap, (t_now + draw(i), i))
-    history.final_params = algo.master_params(state)
+    history.final_params = algo_exec.master_params(state)
     return history
 
 

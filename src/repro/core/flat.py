@@ -1,0 +1,99 @@
+"""Flat-state layout: pack a pytree once into contiguous (R, 128) rows.
+
+The master hot loop views every algorithm's state as a handful of dense
+f32 streams (theta, per-worker momentum, running sums).  Re-padding every
+pytree leaf on every receive — what ``dana_update/ops.py`` does per call —
+is pure overhead: the layout never changes between messages.  ``FlatSpec``
+computes the layout ONCE at ``init`` and then packing/unpacking is a
+single concatenate/split, so the whole coalesced batch can run as one
+kernel over one contiguous buffer.
+
+Layout: all leaves raveled in treedef order, concatenated, zero-padded to
+a whole number of 128-lane rows (TPU lane dimension), viewed as (R, 128).
+Per-worker stacked state (leaves shaped (N, ...)) packs to (N, R, 128)
+with the SAME per-row layout, so row r of worker i's slab and row r of
+theta describe the same parameters.
+
+Zero padding is load-bearing: every update rule in the family maps
+(0, 0, ..., 0) -> 0 in the padding region (momentum of zero gradient stays
+zero), so packed buffers never leak padding into real rows and norms over
+flat buffers equal pytree norms.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+
+
+class FlatSpec:
+    """Layout of one pytree flattened to (rows, 128) f32.
+
+    Built once from a template tree; ``pack``/``unpack`` are then pure
+    reshape/concat/split traffic with no host-side tree walking beyond
+    the (static) leaf list.
+    """
+
+    def __init__(self, treedef, shapes, dtypes, *, row_align: int = 8):
+        self.treedef = treedef
+        self.shapes = tuple(tuple(s) for s in shapes)
+        self.dtypes = tuple(dtypes)
+        self.sizes = tuple(int(math.prod(s)) for s in self.shapes)
+        self.n_elems = int(sum(self.sizes))
+        rows = -(-self.n_elems // LANES)
+        self.rows = -(-rows // row_align) * row_align
+        self.padded = self.rows * LANES
+        offs, o = [], 0
+        for s in self.sizes:
+            offs.append(o)
+            o += s
+        self.offsets = tuple(offs)
+
+    @classmethod
+    def from_tree(cls, tree, *, row_align: int = 8) -> "FlatSpec":
+        leaves, treedef = jax.tree.flatten(tree)
+        return cls(treedef, [l.shape for l in leaves],
+                   [l.dtype for l in leaves], row_align=row_align)
+
+    # -- pack -----------------------------------------------------------
+    def pack(self, tree) -> jax.Array:
+        """Pytree -> (rows, 128) f32, zero-padded."""
+        leaves = self.treedef.flatten_up_to(tree)
+        flat = jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves])
+        return jnp.pad(flat, (0, self.padded - self.n_elems)).reshape(
+            self.rows, LANES)
+
+    def pack_stacked(self, tree) -> jax.Array:
+        """Pytree of (N, ...) leaves -> (N, rows, 128) f32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        n = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+        return jnp.pad(flat, ((0, 0), (0, self.padded - self.n_elems))) \
+            .reshape(n, self.rows, LANES)
+
+    # -- unpack ---------------------------------------------------------
+    def unpack(self, buf: jax.Array):
+        """(rows, 128) -> pytree (original shapes/dtypes, padding dropped)."""
+        flat = buf.reshape(-1)
+        leaves = [
+            flat[o:o + s].reshape(shape).astype(dt)
+            for o, s, shape, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def unpack_stacked(self, buf: jax.Array):
+        """(N, rows, 128) -> pytree of (N, ...) leaves."""
+        n = buf.shape[0]
+        flat = buf.reshape(n, -1)
+        leaves = [
+            flat[:, o:o + s].reshape((n,) + shape).astype(dt)
+            for o, s, shape, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes)
+        ]
+        return jax.tree.unflatten(self.treedef, leaves)

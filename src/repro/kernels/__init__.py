@@ -7,8 +7,13 @@ Each kernel package ships:
   ref.py    — pure-jnp oracle used by the tests
 
 Kernels:
-  dana_update   fused DANA-Zero master round (the paper's Sec. C.1 master
-                bottleneck): one HBM pass for v/v0/theta/theta_hat
+  flat_update   batched k-message master round on flat (R, 128) state for
+                the whole per-worker-momentum family (dana-zero,
+                multi-asgd, dana-slim, nag-asgd, dana-nadam): the paper's
+                Sec. C.1 master bottleneck, one pallas_call per coalesced
+                batch (+ the FlatAlgorithm executor the engine/cluster use)
+  dana_update   PR 1's per-message fused DANA-Zero round (kept as the
+                baseline the batched kernel is benchmarked against)
   swa_attention sliding-window flash attention (recurrentgemma local
                 attention; dense long-context variant)
   rglru_scan    RG-LRU recurrence (RecurrentGemma)

@@ -42,8 +42,11 @@ def _kernel(scal_ref, theta_ref, vi_ref, v0_ref, g_ref,
 def dana_master_update_2d(theta, v_i, v0, g, lr, gamma, *, interpret=True):
     """theta/v_i/v0/g: (R, 128) float arrays; lr/gamma scalars."""
     r, lanes = theta.shape
-    assert lanes == LANES and r % BLOCK_ROWS == 0 or r <= BLOCK_ROWS, \
-        (r, lanes)
+    # NOTE: these used to be one chained assert whose `and`/`or` precedence
+    # silently skipped the lane check whenever r <= BLOCK_ROWS.
+    assert lanes == LANES, f"lane dim must be {LANES}, got {lanes}"
+    assert (r % BLOCK_ROWS == 0) or (r <= BLOCK_ROWS), \
+        f"rows must divide {BLOCK_ROWS} or fit one block, got {r}"
     block_r = min(BLOCK_ROWS, r)
     grid = (r // block_r,)
     scal = jnp.stack([jnp.asarray(lr, theta.dtype),

@@ -1,0 +1,7 @@
+from .ops import (FamilySpec, FlatAlgorithm, family_spec_for,
+                  flat_master_update_batch, kernel_eligible, pack_state,
+                  unpack_state)
+
+__all__ = ["FamilySpec", "FlatAlgorithm", "family_spec_for",
+           "flat_master_update_batch", "kernel_eligible", "pack_state",
+           "unpack_state"]

@@ -1,0 +1,248 @@
+"""Flat-state dispatch for the per-worker-momentum algorithm family.
+
+``FlatAlgorithm`` wraps a kernel-eligible ``Algorithm`` and executes its
+receive->send hot path on flat (R, 128) buffers (``repro.core.flat``):
+state is packed ONCE at init, every coalesced batch runs as ONE batched
+kernel (Pallas on TPU, the jnp reference elsewhere — bit-identical under
+a constant learning rate), and pytrees only appear at the edges (incoming
+gradients, outgoing views).
+
+Kernel-eligible algorithms (exact types; subclasses that change the
+update must take the generic tree path):
+
+  dana-zero    per-worker momentum + v0 running sum + look-ahead   [Alg. 4]
+  multi-asgd   per-worker momentum, heavy-ball (or Bengio) master  [Alg. 9]
+  dana-slim    per-worker momentum, Bengio-NAG master              [Alg. 6]
+  nag-asgd     shared momentum == the same kernel with N=1         [Alg. 8]
+  dana-nadam   per-worker first moment + m0 sum + shared second
+               moment, Nadam-preconditioned look-ahead             [Sec. 7]
+
+Eligibility requires a constant learning rate: the fused kernel uses
+lr(t) where the algorithm's send would use lr(t+1), and it skips the
+momentum-correction rescale — both are identities only when the schedule
+cannot move (``schedule_is_constant``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ...core.flat import FlatSpec
+from ...core.schedules import schedule_is_constant
+from .kernel import flat_master_update_batch_2d
+from .ref import flat_master_update_batch_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """Static shape of one family member's update rule."""
+    momentum_key: str            # state key of the per-worker momentum
+    sum_key: str | None          # running-sum key (v0/m0) or None
+    u2_key: str | None           # second-moment key (adaptive) or None
+    nesterov: bool               # master update uses gamma*v' + cg*g
+    shared_momentum: bool        # momentum not stacked (nag-asgd): N=1 slab
+    grad_coef: float = 1.0       # cg: 1, or (1 - beta1) for Nadam
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def family_spec_for(algo) -> FamilySpec | None:
+    """FamilySpec for ``algo``, or None if it must take the tree path."""
+    from ...core.algorithms import (DanaNadam, DanaSlim, DanaZero,
+                                    MultiASGD, NagASGD)
+    t = type(algo)
+    if t is DanaZero:
+        return FamilySpec("v", "v0", None, nesterov=False,
+                          shared_momentum=False)
+    if t is MultiASGD:
+        return FamilySpec("v", None, None, nesterov=algo.nesterov,
+                          shared_momentum=False)
+    if t is DanaSlim:
+        return FamilySpec("v", None, None, nesterov=True,
+                          shared_momentum=False)
+    if t is NagASGD:
+        return FamilySpec("v", None, None, nesterov=algo.nesterov,
+                          shared_momentum=True)
+    if t is DanaNadam:
+        return FamilySpec("m", "m0", "u", nesterov=True,
+                          shared_momentum=False,
+                          grad_coef=1.0 - algo.hp.momentum,
+                          b2=algo.B2, eps=algo.EPS)
+    return None
+
+
+def kernel_eligible(algo) -> bool:
+    """True iff ``algo``'s hot path can run on the flat fused kernel."""
+    return family_spec_for(algo) is not None
+
+
+# ---------------------------------------------------------------------------
+# state <-> flat buffers
+# ---------------------------------------------------------------------------
+def pack_state(algo, state: dict, spec: FlatSpec | None = None):
+    """Algorithm state dict -> flat dict {theta, v, [v0], [u2], t, ...}."""
+    fam = family_spec_for(algo)
+    if spec is None:
+        spec = FlatSpec.from_tree(state["theta0"])
+    flat = {"theta": spec.pack(state["theta0"]),
+            "t": state["t"], "lr_prev": state["lr_prev"]}
+    if fam.shared_momentum:
+        flat["v"] = spec.pack(state[fam.momentum_key])[None]
+    else:
+        flat["v"] = spec.pack_stacked(state[fam.momentum_key])
+    if fam.sum_key is not None:
+        flat["v0"] = spec.pack(state[fam.sum_key])
+    if fam.u2_key is not None:
+        flat["u2"] = spec.pack(state[fam.u2_key])
+    if "vscale" in state:
+        flat["vscale"] = state["vscale"]
+    return flat, spec
+
+
+def unpack_state(algo, flat: dict, spec: FlatSpec) -> dict:
+    """Flat dict -> the algorithm's pytree state dict."""
+    fam = family_spec_for(algo)
+    state = {"theta0": spec.unpack(flat["theta"]),
+             "t": flat["t"], "lr_prev": flat["lr_prev"]}
+    if fam.shared_momentum:
+        state[fam.momentum_key] = spec.unpack(flat["v"][0])
+    else:
+        state[fam.momentum_key] = spec.unpack_stacked(flat["v"])
+    if fam.sum_key is not None:
+        state[fam.sum_key] = spec.unpack(flat["v0"])
+    if fam.u2_key is not None:
+        state[fam.u2_key] = spec.unpack(flat["u2"])
+    if "vscale" in flat:
+        state["vscale"] = flat["vscale"]
+    return state
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+def flat_master_update_batch(theta, v, v0, u2, g, ids, lrs, gammas, cgs, *,
+                             nesterov, b2=0.999, eps=1e-8, telemetry=False,
+                             use_pallas=None):
+    """Pallas on TPU, jnp reference elsewhere (bit-identical off-TPU)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flat_master_update_batch_2d(
+            theta, v, v0, u2, g, ids, lrs, gammas, cgs, nesterov=nesterov,
+            b2=b2, eps=eps, telemetry=telemetry, interpret=not _on_tpu())
+    return flat_master_update_batch_ref(
+        theta, v, v0, u2, g, ids, lrs, gammas, cgs, nesterov=nesterov,
+        b2=b2, eps=eps, telemetry=telemetry)
+
+
+# ---------------------------------------------------------------------------
+# the flat executor
+# ---------------------------------------------------------------------------
+class FlatAlgorithm:
+    """Flat-state executor with the Algorithm calling convention.
+
+    ``init``/``send``/``receive_send``/``master_params`` mirror
+    ``repro.core.algorithms.Algorithm`` but the state is the flat dict, so
+    the engine and the cluster master can swap it in without changing
+    their loops.  Use ``tree_state`` to get the pytree state back.
+    """
+
+    def __init__(self, algo, use_pallas: bool | None = None):
+        fam = family_spec_for(algo)
+        if fam is None:
+            raise ValueError(
+                f"{algo.name!r} is not kernel-eligible; flat execution "
+                f"covers exactly the per-worker-momentum family")
+        if not schedule_is_constant(algo.schedule):
+            raise ValueError(
+                "flat fused execution requires a constant learning rate "
+                "(the kernel skips momentum correction and uses lr(t) for "
+                "the look-ahead); use the tree path for moving schedules")
+        self.algo = algo
+        self.fam = fam
+        self.name = algo.name
+        self.hp = algo.hp
+        self.schedule = algo.schedule
+        self.use_pallas = use_pallas
+        self.spec: FlatSpec | None = None
+
+    # -- Algorithm API ---------------------------------------------------
+    def init(self, params, num_workers: int) -> dict:
+        state = self.algo.init(params, num_workers)
+        return self.adopt(state)
+
+    def adopt(self, state: dict) -> dict:
+        """Pack an ALREADY-initialized algorithm state into flat form."""
+        flat, self.spec = pack_state(self.algo, state)
+        return flat
+
+    def master_params(self, flat: dict):
+        return self.spec.unpack(flat["theta"])
+
+    def tree_state(self, flat: dict) -> dict:
+        return unpack_state(self.algo, flat, self.spec)
+
+    def _view_flat(self, flat: dict):
+        """The post-update view the family's send computes, on flat rows."""
+        fam = self.fam
+        if fam.sum_key is None:
+            return flat["theta"]
+        lr = self.schedule(flat["t"])
+        gamma = jnp.float32(self.hp.momentum)
+        if fam.u2_key is not None:
+            denom = jnp.sqrt(flat["u2"]) + fam.eps
+            return flat["theta"] - lr * gamma * flat["v0"] / denom
+        vscale = flat.get("vscale", jnp.float32(1.0))
+        return flat["theta"] - lr * gamma * vscale * flat["v0"]
+
+    def send(self, flat: dict, i=0):
+        return self.spec.unpack(self._view_flat(flat)), flat
+
+    def _msg_scalars(self, flat: dict, k: int):
+        steps = flat["t"] + jnp.arange(k, dtype=jnp.int32)
+        lrs = jnp.broadcast_to(
+            jnp.asarray(self.schedule(steps), jnp.float32), (k,))
+        gammas = jnp.full((k,), self.hp.momentum, jnp.float32)
+        cgs = jnp.full((k,), self.fam.grad_coef, jnp.float32)
+        return lrs, gammas, cgs
+
+    def apply_batch(self, flat: dict, ids, g_flat, *,
+                    telemetry: bool = False):
+        """Apply k packed messages in one fused pass.
+
+        ids (k,) int32 worker ids; g_flat (k, R, 128) packed gradients.
+        Returns (flat', hats (k,R,128), thetas_pre or None).
+        """
+        k = g_flat.shape[0]
+        if self.fam.shared_momentum:
+            ids = jnp.zeros_like(ids)            # one shared slab row
+        lrs, gammas, cgs = self._msg_scalars(flat, k)
+        theta, v, v0, u2, hats, pres = flat_master_update_batch(
+            flat["theta"], flat["v"], flat.get("v0"), flat.get("u2"),
+            g_flat, ids, lrs, gammas, cgs, nesterov=self.fam.nesterov,
+            b2=self.fam.b2, eps=self.fam.eps, telemetry=telemetry,
+            use_pallas=self.use_pallas)
+        new = dict(flat)
+        new.update(theta=theta, v=v, t=flat["t"] + k, lr_prev=lrs[-1])
+        if v0 is not None:
+            new["v0"] = v0
+        if u2 is not None:
+            new["u2"] = u2
+        return new, hats, pres
+
+    def receive_send(self, flat: dict, i, grad, now=0.0):
+        """One message through the batched path (k=1)."""
+        g_flat = self.spec.pack(grad)[None]
+        ids = jnp.asarray(i, jnp.int32).reshape(1)
+        flat, hats, _ = self.apply_batch(flat, ids, g_flat)
+        return flat, self.spec.unpack(hats[0])
+
+    def receive(self, flat: dict, i, grad, now=0.0):
+        flat, _ = self.receive_send(flat, i, grad, now)
+        return flat

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the batched flat master update.
+
+One call applies k coalesced worker messages IN ORDER to the flat master
+state.  The update rule is the family-shared per-worker-momentum shape
+(paper Alg. 4/6/8/9 + the Nadam extension), parameterized by static flags:
+
+    v_i'   = gamma_j * v_i + cg_j * g_j          (momentum / first moment)
+    u2'    = b2 * u2 + (1 - b2) * g_j^2          [adaptive only]
+    den    = sqrt(u2') + eps                     [adaptive only; else 1]
+    num    = gamma_j * v_i' + cg_j * g_j         [nesterov]  else  v_i'
+    theta' = theta - lr_j * num / den
+    v0'    = v0 - v_i + v_i'                     [track_v0: O(k) running sum]
+    hat_j  = theta' - lr_j * gamma_j * v0' / den [track_v0]  else  theta'
+
+with (per message j) worker id i = ids[j], learning rate lr_j, momentum
+gamma_j and gradient coefficient cg_j (1 for the momentum algorithms,
+1 - beta1 for Nadam).  Messages are sequential by construction: a worker
+appearing twice in one batch sees its own first update.
+
+Expression shapes/associativity deliberately mirror the pytree algorithm
+implementations so the flat path is bit-identical under a constant
+learning rate (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flat_master_update_batch_ref(theta, v, v0, u2, g, ids, lrs, gammas,
+                                 cgs, *, nesterov: bool, b2: float = 0.999,
+                                 eps: float = 1e-8, telemetry: bool = False):
+    """theta (R,128); v (N,R,128); v0/u2 (R,128) or None; g (k,R,128);
+    ids (k,) int; lrs/gammas/cgs (k,) f32.
+
+    Returns (theta', v', v0', u2', hats (k,R,128), thetas_pre or None).
+    """
+    k = g.shape[0]
+    track_v0 = v0 is not None
+    adaptive = u2 is not None
+    hats, pres = [], []
+    for j in range(k):
+        i = ids[j]
+        lr, gamma, cg = lrs[j], gammas[j], cgs[j]
+        if telemetry:
+            pres.append(theta)
+        vi = jax.lax.dynamic_index_in_dim(v, i, axis=0, keepdims=False)
+        gj = g[j]
+        v_new = gamma * vi + cg * gj
+        if adaptive:
+            u2 = b2 * u2 + (1 - b2) * gj * gj
+            denom = jnp.sqrt(u2) + eps
+        num = (gamma * v_new + cg * gj) if nesterov else v_new
+        if adaptive:
+            theta = theta - lr * (num / denom)
+        else:
+            theta = theta - lr * num
+        if track_v0:
+            v0 = (v0 - vi) + v_new
+            if adaptive:
+                hat = theta - lr * gamma * v0 / denom
+            else:
+                hat = theta - lr * gamma * v0
+        else:
+            hat = theta
+        v = jax.lax.dynamic_update_index_in_dim(v, v_new, i, axis=0)
+        hats.append(hat)
+    return (theta, v, v0, u2, jnp.stack(hats),
+            jnp.stack(pres) if telemetry else None)

@@ -204,6 +204,85 @@ def test_multi_asgd_bengio_is_dana_slim():
                                rtol=1e-6, atol=1e-7)
 
 
+def _eager_dana_zero_reference(params0, grad_fn, order, schedule, gamma):
+    """The PRE-lazy-vscale DANA-Zero receive: momentum correction applied
+    eagerly to the WHOLE stacked buffer every message (O(N*P)).  The lazy
+    scalar-accumulator implementation must reproduce this trajectory."""
+    n = max(order) + 1
+    theta = jax.tree.map(lambda l: l.astype(jnp.float32), params0)
+    v = jax.tree.map(lambda l: jnp.zeros((n,) + l.shape, l.dtype), theta)
+    v0 = jax.tree.map(jnp.zeros_like, theta)
+    t, lr_prev = 0, float(schedule(0))
+    views = {}
+    for i in range(n):
+        views[i] = tree_axpy(-float(schedule(t)) * gamma, v0, theta)
+    for i in order:
+        g = grad_fn(views[i], None)
+        lr = float(schedule(t))
+        corr = lr / max(lr_prev, 1e-20) if lr_prev > 0 else 1.0
+        v = tree_scale(corr, v)
+        v0 = tree_scale(corr, v0)
+        vi_old = tree_index(v, i)
+        vi = tree_axpy(gamma, vi_old, g)
+        v0 = jax.tree.map(lambda a, b, c: (a - b) + c, v0, vi_old, vi)
+        theta = tree_axpy(-lr, vi, theta)
+        v = jax.tree.map(
+            lambda vs, x: vs.at[i].set(x), v, vi)
+        t, lr_prev = t + 1, lr
+        views[i] = tree_axpy(-float(schedule(t)) * gamma, v0, theta)
+    return theta, v, v0
+
+
+def test_lazy_vscale_matches_eager_rescale_under_moving_schedule():
+    """Satellite regression: replacing the O(N*P) eager momentum
+    -correction rescale with the lazy scalar accumulator must not change
+    trajectories — warm-up AND a decay milestone exercised."""
+    from repro.core.schedules import Schedule
+    params0, loss, grad_fn = quadratic_fns(dim=18)
+    sched = Schedule(base_lr=0.005, num_workers=3, warmup_steps=6,
+                     milestones=(12,), decay_factor=0.1)
+    order = [0, 1, 2, 2, 1, 0, 1, 2, 0, 0, 1, 2, 1, 0, 2, 1, 0, 2]
+    algo = make_algorithm("dana-zero",
+                          HyperParams(lr=0.005, momentum=0.9), sched)
+    state = _drive(algo, params0, grad_fn, order)
+    ref_theta, ref_v, ref_v0 = _eager_dana_zero_reference(
+        params0, grad_fn, order, sched, 0.9)
+    # the schedule moved, so the lazy scale is genuinely active
+    assert float(state["vscale"]) != 1.0
+    np.testing.assert_allclose(state["theta0"]["x"], ref_theta["x"],
+                               rtol=1e-5, atol=1e-7)
+    # true momentum = vscale * stored buffers
+    np.testing.assert_allclose(float(state["vscale"]) * state["v"]["x"],
+                               ref_v["x"], rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(state["vscale"]) * state["v0"]["x"],
+                               ref_v0["x"], rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ["multi-asgd", "dana-slim", "nag-asgd",
+                                  "dc-asgd", "ga-asgd"])
+def test_lazy_vscale_constant_schedule_keeps_unit_scale(name):
+    """Under a constant lr the accumulator must stay exactly 1.0 (the
+    bit-identity guarantee every equivalence test leans on)."""
+    params0, loss, grad_fn = quadratic_fns(dim=8)
+    algo = make_algorithm(name, HP)
+    state = _drive(algo, params0, grad_fn, [0, 1, 1, 0, 1, 0])
+    assert float(state["vscale"]) == 1.0
+
+
+def test_lazy_vscale_survives_zero_lr_milestone():
+    """decay_factor=0 drives lr (and the correction factor) to exactly 0;
+    the floored accumulator must keep the state finite where a naive
+    1/vscale would go inf/NaN."""
+    from repro.core.schedules import Schedule
+    params0, loss, grad_fn = quadratic_fns(dim=6)
+    sched = Schedule(base_lr=0.01, milestones=(3,), decay_factor=0.0)
+    algo = make_algorithm("dana-zero",
+                          HyperParams(lr=0.01, momentum=0.9), sched)
+    state = _drive(algo, params0, grad_fn, [0, 1, 0, 1, 0, 1, 0])
+    for leaf in (state["theta0"]["x"], state["v"]["x"], state["v0"]["x"]):
+        assert bool(jnp.all(jnp.isfinite(leaf))), leaf
+
+
 def test_multi_asgd_literal_differs_from_dana_slim():
     """...and the literal Alg. 9 (default) does NOT coincide with
     DANA-Slim — the ablation is meaningful."""

@@ -1,0 +1,60 @@
+"""Tier-2 driver smoke: the benchmark runner's --quick profile must keep
+working (drivers rot silently otherwise) and every run must append one
+entry to the repo-root BENCH_kernels.json trajectory."""
+import json
+import os
+
+import pytest
+
+from benchmarks import run as bench_run
+
+
+def test_quick_profile_covers_every_suite():
+    """Each suite has a quick argv, and every quick argv disables the
+    results/ artifact (--out "") so smoke runs never clobber recorded
+    paper-scale results."""
+    for name in bench_run.SUITES:
+        argv = bench_run.QUICK.get(name)
+        assert argv is not None, f"no --quick profile for {name}"
+        assert argv[argv.index("--out") + 1] == "", \
+            f"--quick {name} would write a results/ artifact"
+
+
+def test_bench_scaling_out_empty_writes_nothing(tmp_path, monkeypatch):
+    """bench_scaling must treat --out "" as 'no artifact', not fall
+    through to its default path (the --quick contract)."""
+    from benchmarks import bench_scaling
+    monkeypatch.chdir(tmp_path)
+    bench_scaling.main(["--grads", "40", "--workers", "2",
+                        "--algos", "dana-zero", "--out", ""])
+    assert not (tmp_path / "results").exists()
+
+
+def test_run_quick_kernels_and_cluster_appends_trajectory(tmp_path,
+                                                          monkeypatch):
+    """End-to-end: the driver executes the kernel + cluster suites on the
+    --quick profile and appends exactly one trajectory entry."""
+    traj = tmp_path / "BENCH_kernels.json"
+    monkeypatch.setattr(bench_run, "TRAJECTORY", str(traj))
+    out = bench_run.main(["--quick", "--only", "kernels", "cluster",
+                          "heterogeneous"])
+    assert all(s["ok"] for s in out.values()), out
+    assert out["kernels"]["claims"]["fused_correct"]
+    assert out["kernels"]["claims"]["batched_correct"]
+    trail = json.loads(traj.read_text())
+    assert isinstance(trail, list) and len(trail) == 1
+    entry = trail[0]
+    assert entry["profile"] == "quick"
+    assert entry["failures"] == []
+    assert set(entry["suites"]) == {"kernels", "cluster", "heterogeneous"}
+    # append-style: a second run extends, never overwrites
+    bench_run.main(["--quick", "--only", "kernels"])
+    assert len(json.loads(traj.read_text())) == 2
+
+
+def test_trajectory_append_recovers_from_corruption(tmp_path):
+    p = tmp_path / "BENCH_kernels.json"
+    p.write_text("{not json")
+    bench_run._append_trajectory({"probe": 1}, path=str(p))
+    trail = json.loads(p.read_text())
+    assert trail == [{"probe": 1}]

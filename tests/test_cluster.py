@@ -84,12 +84,12 @@ def test_deterministic_cluster_matches_engine_heterogeneous():
 # ---------------------------------------------------------------------------
 # coalesced receive
 # ---------------------------------------------------------------------------
-def _make_master(name, n, *, use_kernel=False, telemetry=False):
+def _make_master(name, n, *, use_kernel=False, flat=None, telemetry=False):
     algo = make_algorithm(name, HP)
     state = algo.init(PARAMS0, n)
     master = Master(algo, state, mailbox=Mailbox(), history=History(),
                     stop=threading.Event(), total_grads=100,
-                    coalesce=8, use_kernel=use_kernel,
+                    coalesce=8, use_kernel=use_kernel, flat=flat,
                     record_telemetry=telemetry)
     return algo, state, master
 
@@ -132,23 +132,35 @@ def test_coalesced_pass_matches_sequential_receive():
 
 
 def test_kernel_routing_matches_algorithm_path():
-    """The Pallas/ref dana_update routing must match the generic
-    receive/send path under a constant learning rate."""
+    """All three master paths — generic tree, PR 1's legacy per-message
+    dana_update kernel (flat=False), and the batched flat kernel — must
+    agree under a constant learning rate."""
     k = 4
     _, state, m_plain = _make_master("dana-zero", n=4, use_kernel=False)
-    _, _, m_kernel = _make_master("dana-zero", n=4, use_kernel=True)
+    _, _, m_legacy = _make_master("dana-zero", n=4, use_kernel=True,
+                                  flat=False)
+    _, _, m_flat = _make_master("dana-zero", n=4, use_kernel=True)
+    assert not m_legacy.state_is_flat and m_flat.state_is_flat
     ids = jnp.asarray([1, 3, 1, 0], jnp.int32)
     nows = jnp.zeros((k,), jnp.float32)
     grads = _grads(k, seed=7)
+    spec = m_flat._flat_algo.spec
     s_p, v_p, _, _ = m_plain._get_fused(k, False)(state, ids, nows, grads,
                                                   None)
-    s_k, v_k, _, _ = m_kernel._get_fused(k, False)(state, ids, nows, grads,
+    s_k, v_k, _, _ = m_legacy._get_fused(k, False)(state, ids, nows, grads,
                                                    None)
-    _assert_trees_equal(s_p["theta0"], s_k["theta0"])
-    _assert_trees_equal(s_p["v"], s_k["v"])
-    _assert_trees_equal(s_p["v0"], s_k["v0"])
-    for a, b in zip(v_p, v_k):
-        _assert_trees_equal(a, b)
+    s_f, v_f, _, _ = m_flat._get_fused_flat(k, False)(
+        m_flat._flat_state, ids, nows,
+        tuple(spec.pack(g) for g in grads), None)   # flat wire format
+    v_f = tuple(spec.unpack(v) for v in v_f)
+    s_f = m_flat._flat_algo.tree_state(s_f)
+    for s_other in (s_k, s_f):
+        _assert_trees_equal(s_p["theta0"], s_other["theta0"])
+        _assert_trees_equal(s_p["v"], s_other["v"])
+        _assert_trees_equal(s_p["v0"], s_other["v0"])
+    for v_other in (v_k, v_f):
+        for a, b in zip(v_p, v_other):
+            _assert_trees_equal(a, b)
 
 
 def test_master_capacity_coalescing_speedup():
