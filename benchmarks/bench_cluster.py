@@ -13,11 +13,17 @@ measured head-to-head per coalescing factor k:
   whole k-message batch applied by ONE batched kernel
   (``repro.kernels.flat_update``).
 
-Two measurements:
+Three measurements:
 
 * **master capacity** — messages/sec the master's fused receive pass can
   apply, timed synchronously on the real hot path (no threads).  This is
   the clean "master updates/sec" number per path.
+* **sharded capacity** — the same fused pass row-sharded across S
+  concurrent shard servers (S ∈ {1, 2, 4, 8} by default): each shard
+  thread applies the batch to only its row range, so the per-shard work
+  shrinks ~1/S while the shards run in parallel.  On a GIL-bound CPU
+  container the parallel win is bounded by dispatch overhead — the
+  sweep records where sharding starts paying on this hardware.
 * **live throughput** — end-to-end gradients/sec of the threaded cluster
   (free-running workers, telemetry off) per (worker count, k).  Noisier —
   it includes worker grad computation, GIL hand-offs and queue dynamics —
@@ -32,7 +38,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.cluster import ClusterConfig, Mailbox, Master, run_cluster
+from repro.cluster import (ClusterConfig, Mailbox, Master, ShardedMaster,
+                           run_cluster)
 from repro.core.algorithms import DanaZero, make_algorithm
 from repro.core.metrics import History
 from repro.core.types import HyperParams
@@ -110,6 +117,65 @@ def master_capacity_row(algo_name: str, num_workers: int, k: int,
     }
 
 
+def sharded_capacity_row(algo_name: str, num_workers: int, k: int,
+                         shards: int, reps: int = 200,
+                         width: int = 4096):
+    """Messages/sec of S concurrent shard servers applying the same
+    coalesced batches to their row ranges (the ShardedMaster hot path,
+    driven synchronously per shard — no mailbox, no workers).
+
+    Uses a wider MLP than the other sections by default: sharding pays
+    once the per-worker momentum slab outgrows the cache (the state
+    traffic divides by S); on the toy 24-row state every shard is pure
+    dispatch overhead and the sweep would only measure the GIL."""
+    params0, grad_fn, next_batch = _setup(width=width)
+    algo = make_algorithm(algo_name, HP)
+    master = ShardedMaster(algo, algo.init(params0, num_workers),
+                           shards=shards, history=History(),
+                           stop=threading.Event(), total_grads=1,
+                           coalesce=k, record_telemetry=False)
+    gbuf = master.spec.pack(jax.jit(grad_fn)(params0, next_batch(0, 0)))
+    ids = jnp.asarray([j % num_workers for j in range(k)], jnp.int32)
+    nows = jnp.zeros((k,), jnp.float32)
+    plans = []                          # (fn, state0, grads) per shard
+    for srv in master.shards_:
+        fn = srv._get_fused(k, telemetry=False)
+        grads = tuple(gbuf[srv.r0:srv.r1] for _ in range(k))
+        out = fn(srv.state, ids, nows, grads, None)          # compile
+        jax.block_until_ready(out[0]["theta"])
+        plans.append((fn, srv.state, grads))
+
+    def shard_loop(plan, barrier, out, idx):
+        fn, s, grads = plan
+        barrier.wait()
+        for _ in range(reps):
+            s, *_ = fn(s, ids, nows, grads, None)
+        jax.block_until_ready(s["theta"])
+        out[idx] = s
+
+    dt = float("inf")                                        # best of 3
+    for _ in range(3):
+        barrier = threading.Barrier(shards + 1)
+        states: list = [None] * shards
+        threads = [threading.Thread(target=shard_loop,
+                                    args=(p, barrier, states, i))
+                   for i, p in enumerate(plans)]
+        for t in threads:
+            t.start()
+        barrier.wait()
+        t0 = time.perf_counter()
+        for t in threads:
+            t.join()
+        dt = min(dt, (time.perf_counter() - t0) / reps)
+    return {
+        "section": "sharded", "algo": algo_name, "workers": num_workers,
+        "k": k, "shards": shards, "width": width,
+        "rows": master.spec.rows,
+        "us_per_msg": dt / k * 1e6,
+        "master_updates_per_s": k / dt,
+    }
+
+
 def live_row(algo_name: str, num_workers: int, k: int, total_grads: int):
     """End-to-end throughput of the threaded cluster in free mode."""
     params0, grad_fn, next_batch = _setup()
@@ -137,6 +203,12 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, nargs="*", default=[8])
     ap.add_argument("--coalesce", type=int, nargs="*",
                     default=[1, 2, 4, 8])
+    ap.add_argument("--shards", type=int, nargs="*", default=[1, 2, 4, 8],
+                    help="row-shard counts for the sharded capacity sweep"
+                         " (flat path only; empty list skips it)")
+    ap.add_argument("--shard-width", type=int, default=4096,
+                    help="MLP hidden width for the sharded sweep (bigger "
+                         "state -> sharding divides real memory traffic)")
     ap.add_argument("--grads", type=int, default=3000)
     ap.add_argument("--reps", type=int, default=200)
     ap.add_argument("--skip-live", action="store_true")
@@ -150,6 +222,16 @@ def main(argv=None):
             for path in paths:
                 cap_rows.append(master_capacity_row(args.algo, n, k, path,
                                                     reps=args.reps))
+    shard_rows = []
+    if "flat" in paths and args.shards:
+        n0, k_hi = max(args.workers), max(args.coalesce)
+        # the wide state makes each rep ~50x the toy row's; scale reps so
+        # the sweep costs about as much as one capacity row
+        shard_reps = max(3, args.reps // 20)
+        for s in args.shards:
+            shard_rows.append(sharded_capacity_row(
+                args.algo, n0, k_hi, s, reps=shard_reps,
+                width=args.shard_width))
     live_rows = []
     if not args.skip_live:
         for n in args.workers:
@@ -158,6 +240,10 @@ def main(argv=None):
 
     print_csv(cap_rows, ["section", "algo", "workers", "k", "path",
                          "us_per_msg", "master_updates_per_s"])
+    if shard_rows:
+        print_csv(shard_rows, ["section", "algo", "workers", "k", "shards",
+                               "width", "rows", "us_per_msg",
+                               "master_updates_per_s"])
     if live_rows:
         print_csv(live_rows, ["section", "algo", "workers", "k", "path",
                               "updates_per_s", "steady_updates_per_s",
@@ -195,14 +281,26 @@ def main(argv=None):
             _cap(n0, k_hi, "flat") / _cap(n0, k_hi, "kernel"))
         claims["batched_beats_2x_legacy_kernel"] = (
             _cap(n0, k_hi, "flat") >= 2.0 * _cap(n0, k_hi, "kernel"))
+    if shard_rows:
+        # the PR-3 acceptance sweep: S concurrent row-range shard servers
+        # vs one.  The ratio claim tracks the best S (shard scaling on a
+        # CPU container peaks where per-shard work still exceeds the
+        # dispatch/GIL floor; the TPU story is row DMA / S)
+        sweep = {str(r["shards"]): r["master_updates_per_s"]
+                 for r in shard_rows}
+        claims["shard_sweep_updates_per_s"] = sweep
+        if "1" in sweep:
+            best_s = max(sweep, key=sweep.get)
+            claims["sharded_best_shards"] = int(best_s)
+            claims["sharded_best_over_S1_x"] = sweep[best_s] / sweep["1"]
     if live_rows:
         claims["coalesced_live_endtoend_beats_per_message"] = (
             _live(n0, k_hi, "steady_updates_per_s")
             > _live(n0, 1, "steady_updates_per_s"))
     print("claims:", claims)
-    save_json(args.out, {"capacity": cap_rows, "live": live_rows,
-                         "claims": claims})
-    return cap_rows + live_rows, claims
+    save_json(args.out, {"capacity": cap_rows, "sharded": shard_rows,
+                         "live": live_rows, "claims": claims})
+    return cap_rows + shard_rows + live_rows, claims
 
 
 if __name__ == "__main__":

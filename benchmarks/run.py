@@ -54,7 +54,8 @@ SUITES = {
                 ["--grads", "2500", "--workers", "8",
                  "--coalesce", "1", "4", "8"],
                 ["--grads", "8000", "--workers", "8", "16", "32",
-                 "--coalesce", "1", "2", "4", "8"]),
+                 "--coalesce", "1", "2", "4", "8",
+                 "--shards", "1", "2", "4", "8"]),
     "scaling-lm": (bench_scaling,                         # Fig. 7 / Tab. 5
                    ["--preset", "lm", "--grads", "600", "--workers", "1",
                     "4", "8", "--algos", "nag-asgd", "dana-slim"],
@@ -78,8 +79,12 @@ QUICK = {
                       "--algos", "nag-asgd", "dana-slim", "--out", ""],
     "optimizers": ["--grads", "150", "--workers", "2",
                    "--algos", "dana-nadam", "--out", ""],
+    # the sharded capacity sweep must stay exercised in CI: at least two
+    # shard counts so the S-scaling claim is present in the trajectory
+    # (narrow --shard-width keeps the smoke compile cheap)
     "cluster": ["--grads", "160", "--workers", "4",
-                "--coalesce", "1", "4", "--reps", "10", "--out", ""],
+                "--coalesce", "1", "4", "--shards", "1", "2",
+                "--shard-width", "256", "--reps", "10", "--out", ""],
     "scaling-lm": ["--preset", "lm", "--grads", "60", "--workers", "2",
                    "--algos", "dana-slim", "--out", ""],
 }

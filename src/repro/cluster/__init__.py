@@ -15,15 +15,20 @@ Three modes:
 The master supports *coalesced receive* (apply k queued messages in one
 fused jit dispatch, routed through the Pallas ``dana_update`` kernel when
 eligible) and a fault-injection layer (stalls, dropout/rejoin, message
-reordering).
+reordering).  ``ClusterConfig(shards=S)`` replaces the single master with
+S row-range shard servers over the same flat layout
+(``repro.cluster.sharded``) — workers push each gradient once and every
+shard consumes only its row slice.
 """
 from .faults import FaultInjector, FaultPlan
-from .mailbox import GradMsg, Mailbox, Reply
+from .mailbox import FanoutMailbox, GradMsg, Mailbox, Reply
 from .master import Master
 from .runtime import ClusterConfig, run_cluster
+from .sharded import ShardedMaster
 from .worker import Worker
 
 __all__ = [
-    "ClusterConfig", "run_cluster", "Master", "Worker", "Mailbox",
-    "GradMsg", "Reply", "FaultPlan", "FaultInjector",
+    "ClusterConfig", "run_cluster", "Master", "ShardedMaster", "Worker",
+    "Mailbox", "FanoutMailbox", "GradMsg", "Reply", "FaultPlan",
+    "FaultInjector",
 ]

@@ -19,6 +19,13 @@ all driven by one seeded generator so every fault schedule is reproducible:
   applies a drained batch in a permuted order (out-of-order delivery).
   Only observable when the coalescing window is > 1; permutation within
   the drained batch keeps the protocol deadlock-free.
+
+Under the row-sharded master each shard server gets its OWN injector
+(``shard_id`` seeds an independent reorder substream), so out-of-order
+delivery on one shard's link is independent of the others;
+``reorder_shards`` confines reordering to the listed shard ids — the
+fault-isolation contract (a reordered shard leaves the other shards'
+deterministic replay untouched) is tested with it.
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ class FaultPlan:
     stall_scale: float = 5.0
     dropout: tuple = ()            # ((worker_id, out_step, rejoin_step), ...)
     reorder_prob: float = 0.0
+    reorder_shards: tuple | None = None   # shard ids to reorder; None = all
 
     @property
     def any_dropout(self) -> bool:
@@ -45,18 +53,24 @@ class FaultInjector:
 
     Stall draws use one per-worker substream each so that thread scheduling
     cannot change which iteration stalls; reorder draws live on the
-    master's own substream.
+    master's own substream.  A master-side (shard) injector that only ever
+    reorders can be built with ``num_workers=0`` — no stall streams.
     """
 
     def __init__(self, plan: FaultPlan, num_workers: int,
-                 mean_iter_time: float):
+                 mean_iter_time: float, shard_id: int | None = None):
         self.plan = plan
         self.mean_iter_time = mean_iter_time
+        self.shard_id = shard_id
         self._stall_rngs = [
             np.random.default_rng((plan.seed, 7919, wid))
             for wid in range(num_workers)
         ]
-        self._reorder_rng = np.random.default_rng((plan.seed, 104729))
+        # per-shard substream: reordering on one shard's link must be
+        # independent of (and not perturb) the other shards' draws
+        self._reorder_rng = np.random.default_rng(
+            (plan.seed, 104729) if shard_id is None
+            else (plan.seed, 104729, shard_id))
         self._windows: dict[int, list[tuple[int, int]]] = {}
         for wid, out, back in plan.dropout:
             if back <= out:
@@ -88,6 +102,10 @@ class FaultInjector:
     # -- master side -----------------------------------------------------
     def reorder(self, msgs: list) -> list:
         if self.plan.reorder_prob <= 0.0 or len(msgs) < 2:
+            return msgs
+        if (self.plan.reorder_shards is not None
+                and self.shard_id is not None
+                and self.shard_id not in self.plan.reorder_shards):
             return msgs
         if self._reorder_rng.random() >= self.plan.reorder_prob:
             return msgs

@@ -8,6 +8,13 @@ master ``drain``s up to k messages at a time for a coalesced receive.
 Each message doubles as its own reply slot: the push is a fused push-pull
 RPC — the master answers with the post-update parameter view, exactly the
 ``receive`` -> ``send`` sequence of the discrete-event engine.
+
+For the row-sharded multi-master (``repro.cluster.sharded``) the same
+protocol fans out: ``FanoutMailbox`` splits one worker message into S
+``ShardMsg`` parts (each carrying only that shard's row slice of the
+gradient/view) and a ``_ReplyGroup`` reassembles the S shard replies into
+the single ``Reply`` the worker is waiting on — the worker pushes a
+gradient ONCE and never knows the master is sharded.
 """
 from __future__ import annotations
 
@@ -55,6 +62,130 @@ class GradMsg:
             raise TimeoutError(
                 f"worker {self.worker_id}: no master reply in {timeout}s")
         return self._reply
+
+
+class _ReplyGroup:
+    """Reassembles S shard replies into one worker-facing ``Reply``.
+
+    The worker's view is the range-ordered tuple of shard view slices;
+    the reply step is shard 0's (every shard applies every message, so
+    the counters only diverge transiently in live modes — shard 0 is the
+    canonical clock).  Any shard replying ``None`` (shutdown / overflow)
+    fails the whole group.  Telemetry partial sums (per-shard ``sum d^2``
+    / ``sum g^2`` over the shard's rows) accumulate here and flush to the
+    owner's callback once every shard has applied the message.
+    """
+
+    __slots__ = ("parent", "shards", "_lock", "_views", "_left", "_failed",
+                 "_step0", "_tele_cb", "_tele_left", "_d2", "_g2", "_meta")
+
+    def __init__(self, parent: GradMsg, shards: int, tele_cb=None):
+        self.parent = parent
+        self.shards = shards
+        self._lock = threading.Lock()
+        self._views = [None] * shards
+        self._left = shards
+        self._failed = False
+        self._step0 = 0
+        self._tele_cb = tele_cb
+        self._tele_left = shards
+        self._d2 = 0.0
+        self._g2 = 0.0
+        self._meta = None            # (worker, step, lag, t) from shard 0
+
+    def shard_reply(self, sid: int, reply: Reply | None):
+        with self._lock:
+            if reply is None:
+                self._failed = True
+            else:
+                self._views[sid] = reply.view
+                if sid == 0:
+                    self._step0 = reply.step
+            self._left -= 1
+            done = self._left == 0
+            failed = self._failed
+        if done:
+            self.parent.respond(None if failed else
+                                Reply(view=tuple(self._views),
+                                      step=self._step0))
+
+    def add_telemetry(self, sid: int, *, worker: int, step: int, lag: int,
+                      t: float, d2: float, g2: float):
+        with self._lock:
+            self._d2 += d2
+            self._g2 += g2
+            if sid == 0:
+                self._meta = (worker, step, lag, t)
+            self._tele_left -= 1
+            done = self._tele_left == 0 and self._meta is not None
+        if done and self._tele_cb is not None:
+            worker, step, lag, t = self._meta
+            self._tele_cb(worker=worker, step=step, lag=lag, t=t,
+                          d2=self._d2, g2=self._g2)
+
+
+class ShardMsg(GradMsg):
+    """One shard's slice of a fanned-out worker message.  Responding
+    feeds the shared ``_ReplyGroup``; the worker blocks on the parent."""
+
+    __slots__ = ("group", "sid")
+
+    def __init__(self, worker_id: int, grad: Any, view: Any,
+                 view_step: int, t_send: float, *, group: _ReplyGroup,
+                 sid: int):
+        super().__init__(worker_id, grad, view, view_step, t_send)
+        self.group = group
+        self.sid = sid
+
+    def respond(self, reply: Reply | None):
+        super().respond(reply)
+        self.group.shard_reply(self.sid, reply)
+
+
+class FanoutMailbox:
+    """Worker-facing front of the sharded master: ``put`` fans one
+    message out to the S per-shard mailboxes.  Gradients and telemetry
+    views arrive as range-ordered tuples of row slices (the worker's grad
+    jit scatters on its pack path), so shard s simply takes element s —
+    no slicing on the master side.
+
+    The fan-out is ATOMIC (one lock across the S enqueues): every shard
+    sees the identical arrival order, so the first ``total`` gradient
+    messages — the set each shard applies before end-of-run truncation —
+    is the same on every shard.  Without it, two workers' fan-outs can
+    interleave differently per shard and the shards would apply
+    *different* message sets at the total boundary.  The lock covers
+    only queue appends (a blocked bounded ``Mailbox.put`` drains
+    independently of other workers' puts, so it cannot deadlock)."""
+
+    def __init__(self, mailboxes: list["Mailbox"], tele_cb=None):
+        self.mailboxes = list(mailboxes)
+        self._tele_cb = tele_cb
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return max(len(mb) for mb in self.mailboxes)
+
+    def put(self, msg: GradMsg, stop) -> bool:
+        shards = len(self.mailboxes)
+        group = _ReplyGroup(msg, shards, tele_cb=self._tele_cb)
+        parts = [
+            ShardMsg(msg.worker_id,
+                     None if msg.grad is None else msg.grad[s],
+                     None if msg.view is None else msg.view[s],
+                     msg.view_step, msg.t_send, group=group, sid=s)
+            for s in range(shards)
+        ]
+        with self._lock:
+            for s, (part, mb) in enumerate(zip(parts, self.mailboxes)):
+                if not mb.put(part, stop):
+                    # shutdown mid-fanout: shards 0..s-1 already hold
+                    # their parts (their servers / reject_pending will
+                    # answer); fail the rest so the group can complete
+                    for rest in parts[s:]:
+                        rest.respond(None)
+                    return False
+        return True
 
 
 class Mailbox:

@@ -26,6 +26,10 @@ Both kernel paths use lr(t) for the look-ahead where the algorithm's send
 would use lr(t+1); the flat path additionally skips the momentum
 -correction rescale, so it requires a constant learning rate (enforced) —
 under which both are bit-identical to the algorithm path (tested).
+
+When one master still bounds throughput, ``repro.cluster.sharded``
+splits the SAME flat buffers into S row-range shard servers whose serve
+loops mirror this one (``ClusterConfig(shards=S)``).
 """
 from __future__ import annotations
 
@@ -46,6 +50,60 @@ from ..kernels.dana_update import dana_master_update
 from ..kernels.flat_update import FlatAlgorithm, kernel_eligible
 from .faults import FaultInjector
 from .mailbox import GradMsg, Mailbox, Reply
+
+
+def run_serve_loop(server):
+    """The parameter-server drain loop, shared by the single ``Master``
+    and each sharded ``_ShardServer`` (identical hot-path semantics, one
+    implementation to fix).
+
+    Per round: drain up to ``coalesce`` messages -> truncate gradient
+    work to the remaining room (end-of-run overflow is rejected in
+    ARRIVAL order, so under sharding every shard rejects the same
+    messages) -> apply fault reordering to the accepted work -> chunk to
+    the warmed power-of-two fused variants -> reply to pulls -> reject
+    overflow.  ``server`` provides mailbox/stop/total/applied/coalesce/
+    injector plus ``_apply(chunk)`` and ``_pull_reply(msg)``; errors land
+    on ``server.error`` and raise the stop flag.
+    """
+    msgs: list[GradMsg] = []
+    try:
+        while server.applied < server.total and not server.stop.is_set():
+            msgs = server.mailbox.drain(server.coalesce, server.stop,
+                                        pow2=server.coalesce > 1)
+            if not msgs:
+                continue
+            work = [m for m in msgs if m.grad is not None]
+            pulls = [m for m in msgs if m.grad is None]
+            room = server.total - server.applied
+            overflow, work = work[room:], work[:room]
+            if server.injector is not None:
+                work = server.injector.reorder(work)
+            while work:
+                # pull filtering / end-of-run truncation can leave a
+                # non-power-of-two batch; chunk it back to the warmed
+                # fused variants so no compile lands mid-run
+                k = 1 << (min(len(work), server.coalesce).bit_length() - 1)
+                chunk, work = work[:k], work[k:]
+                server.coalesce_counts[k] = \
+                    server.coalesce_counts.get(k, 0) + 1
+                t_in = time.perf_counter()
+                server._apply(chunk)
+                server.busy_s += time.perf_counter() - t_in
+            for m in pulls:
+                server._pull_reply(m)
+            for m in overflow:
+                m.respond(None)
+            msgs = []
+    except BaseException as e:  # noqa: BLE001 - reported by run_cluster
+        server.error = e
+        server.stop.set()
+    finally:
+        # a mid-batch failure leaves drained messages unanswered;
+        # release their workers instead of letting them hit rpc_timeout
+        for m in msgs:
+            if not m._event.is_set():
+                m.respond(None)
 
 
 class Master:
@@ -300,45 +358,10 @@ class Master:
 
     # -- main loop -------------------------------------------------------
     def serve(self):
-        msgs: list[GradMsg] = []
         try:
-            while self.applied < self.total and not self.stop.is_set():
-                msgs = self.mailbox.drain(self.coalesce, self.stop,
-                                          pow2=self.coalesce > 1)
-                if not msgs:
-                    continue
-                if self.injector is not None:
-                    msgs = self.injector.reorder(msgs)
-                work = [m for m in msgs if m.grad is not None]
-                pulls = [m for m in msgs if m.grad is None]
-                room = self.total - self.applied
-                overflow, work = work[room:], work[:room]
-                while work:
-                    # pull filtering / end-of-run truncation can leave a
-                    # non-power-of-two batch; chunk it back to the warmed
-                    # fused variants so no compile lands mid-run
-                    k = 1 << (min(len(work),
-                                  self.coalesce).bit_length() - 1)
-                    chunk, work = work[:k], work[k:]
-                    self.coalesce_counts[k] = \
-                        self.coalesce_counts.get(k, 0) + 1
-                    t_in = time.perf_counter()
-                    self._apply(chunk)
-                    self.busy_s += time.perf_counter() - t_in
-                for m in pulls:
-                    self._pull_reply(m)
-                for m in overflow:
-                    m.respond(None)
-                msgs = []
-        except BaseException as e:  # noqa: BLE001 - reported by run_cluster
-            self.error = e
+            run_serve_loop(self)
         finally:
-            # a mid-batch failure leaves drained messages unanswered;
-            # release their workers instead of letting them hit rpc_timeout
-            for m in msgs:
-                if not m._event.is_set():
-                    m.respond(None)
-            self.stop.set()
+            self.stop.set()         # run over (or failed): cluster done
 
     def reject_pending(self):
         """Post-shutdown: unblock any worker still waiting on a reply."""

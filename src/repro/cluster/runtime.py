@@ -26,6 +26,7 @@ from .clock import VirtualClock
 from .faults import FaultInjector, FaultPlan
 from .mailbox import Mailbox
 from .master import Master
+from .sharded import ShardedMaster
 from .worker import Worker
 
 MODES = ("deterministic", "paced", "free")
@@ -43,6 +44,7 @@ class ClusterConfig:
     faults: FaultPlan | None = None
     record_telemetry: bool = True
     use_kernel: bool | None = None  # None = auto (dana-zero, live modes)
+    shards: int = 1                 # row-range master shards (flat path)
     mailbox_capacity: int = 0       # 0 = unbounded
     rpc_timeout: float = 120.0
 
@@ -66,6 +68,8 @@ def run_cluster(
         raise ValueError(f"mode must be one of {MODES}, got {cfg.mode!r}")
     if cfg.num_workers < 1 or cfg.total_grads < 1:
         raise ValueError("need at least one worker and one gradient")
+    if cfg.shards < 1:
+        raise ValueError(f"need shards >= 1, got {cfg.shards}")
     if isinstance(algo, SSGD):
         raise ValueError(
             "ssgd needs the engine's synchronous barrier (per-message "
@@ -78,20 +82,25 @@ def run_cluster(
                          "mode (it would leave the virtual clock); use "
                          "stalls, or a live mode")
 
+    sharded = cfg.shards > 1
     use_kernel = cfg.use_kernel
     if use_kernel is None:
         # auto-routing must be numerically silent: the flat fused path
         # uses lr(t) for the look-ahead where the algorithm path uses
         # lr(t+1) and skips the momentum-correction rescale, so only
         # enable it when the schedule cannot move between steps (constant
-        # lr); explicit use_kernel=True opts into the documented deviation
-        use_kernel = (not deterministic and kernel_eligible(algo)
-                      and schedule_is_constant(algo.schedule))
+        # lr); explicit use_kernel=True opts into the documented deviation.
+        # The sharded master exists only on the flat path, so shards > 1
+        # forces it (ShardedMaster rejects ineligible algorithms itself).
+        use_kernel = sharded or (not deterministic and kernel_eligible(algo)
+                                 and schedule_is_constant(algo.schedule))
+    if sharded and not use_kernel:
+        raise ValueError("shards > 1 requires the flat kernel master "
+                         "(use_kernel must not be False)")
 
     injector = (FaultInjector(cfg.faults, n, cfg.exec_model.batch_size)
                 if cfg.faults is not None else None)
     stop = threading.Event()
-    mailbox = Mailbox(cfg.mailbox_capacity)
     history = History()
     state = algo.init(params0, n)
     t0 = time.perf_counter()
@@ -108,15 +117,35 @@ def run_cluster(
             return time.perf_counter() - t0
         time_fn = (lambda m: m.t_send)
 
-    master = Master(
-        algo, state, mailbox=mailbox, history=history, stop=stop,
-        total_grads=cfg.total_grads,
-        # deterministic mode forces per-message receive so eval points and
-        # event order match the engine exactly
-        coalesce=1 if deterministic else cfg.coalesce,
-        use_kernel=use_kernel, record_telemetry=cfg.record_telemetry,
-        eval_fn=eval_fn, eval_every=cfg.eval_every, injector=injector,
-        time_fn=time_fn)
+    # deterministic mode forces per-message receive so eval points and
+    # event order match the engine exactly
+    coalesce = 1 if deterministic else cfg.coalesce
+    if sharded:
+        shard_injectors = None
+        if cfg.faults is not None:
+            # shard injectors are reorder-only (num_workers=0: no stall
+            # streams) — worker-side stalls/dropout stay on the shared
+            # `injector` above
+            shard_injectors = [
+                FaultInjector(cfg.faults, 0, cfg.exec_model.batch_size,
+                              shard_id=s)
+                for s in range(cfg.shards)
+            ]
+        master = ShardedMaster(
+            algo, state, shards=cfg.shards, history=history, stop=stop,
+            total_grads=cfg.total_grads, coalesce=coalesce,
+            record_telemetry=cfg.record_telemetry, eval_fn=eval_fn,
+            eval_every=cfg.eval_every, injectors=shard_injectors,
+            time_fn=time_fn, mailbox_capacity=cfg.mailbox_capacity)
+        mailbox = master.frontdoor
+    else:
+        mailbox = Mailbox(cfg.mailbox_capacity)
+        master = Master(
+            algo, state, mailbox=mailbox, history=history, stop=stop,
+            total_grads=cfg.total_grads, coalesce=coalesce,
+            use_kernel=use_kernel, record_telemetry=cfg.record_telemetry,
+            eval_fn=eval_fn, eval_every=cfg.eval_every, injector=injector,
+            time_fn=time_fn)
 
     # warm-up pulls, in worker order on one thread (engine semantics)
     init_views = [master.initial_view(i) for i in range(n)]
@@ -138,7 +167,21 @@ def run_cluster(
         ]
         draw = (lambda wid: samplers[wid](wid))
 
-    if master.state_is_flat:
+    if sharded:
+        # sharded wire format: the worker's own jit gathers its view from
+        # the range-ordered shard slices and scatters its packed gradient
+        # back into per-shard slices — the worker pushes ONE gradient and
+        # each shard consumes only its row range
+        spec = master.spec
+        subs = master.subs
+
+        def _sharded_grad(fv, batch):
+            g = spec.pack(grad_fn(spec.unpack(spec.concat_rows(fv)),
+                                  batch))
+            return tuple(sub.take(g) for sub in subs)
+
+        grad_jit = jax.jit(_sharded_grad)
+    elif master.state_is_flat:
         # flat wire format: the worker unpacks its (R, 128) view and packs
         # its gradient inside ITS OWN jit — the pytree<->flat traffic runs
         # on the (parallel) worker threads, never on the master hot path
@@ -217,5 +260,8 @@ def run_cluster(
                            / max(sum(master.coalesce_counts.values()), 1)),
             grads_per_worker={w.wid: w.grads_sent for w in workers},
             use_kernel=use_kernel,
+            shards=cfg.shards,
         )
+        if sharded:
+            stats_out["shard_applied"] = master.shard_applied
     return history

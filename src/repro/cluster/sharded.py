@@ -1,0 +1,348 @@
+"""Row-sharded multi-master parameter server on the flat layout.
+
+The paper attributes its scaling ceiling to the single parameter server
+(App. C.1): above ~20 workers the master, not the network, bounds
+throughput.  PR 2's flat ``(R, 128)`` layout makes the obvious fix cheap:
+every update rule in the kernel-eligible family is elementwise per row,
+so the SAME flat buffers split into S contiguous row ranges
+(``FlatSpec.row_ranges``) and S independent shard servers — one serving
+thread + one coalesced ``flat_update`` pass per shard — apply each
+worker message to only their rows.  Concatenating the shard states in
+range order reconstructs the single-master state *bit-for-bit* whenever
+the shards apply the same message sequence (deterministic mode always;
+tested), which is the claim that lets asynchronous momentum methods keep
+scaling where a single server saturates.
+
+Protocol: workers push a gradient ONCE — their grad jit packs it flat
+and scatters it into per-shard row slices (``FanoutMailbox`` fans the
+message out atomically, ``_ReplyGroup`` gathers the S view slices back
+into one reply).  Shard clocks are barrier-free: each shard server
+drains its own mailbox at its own pace and advances its own step counter
+with no cross-shard synchronization on the hot path.  Because the
+fan-out is atomic and each shard's queue is FIFO, every shard still
+applies the identical message sequence (and, at end-of-run truncation,
+the identical message SET) — per-shard reorder *injection* is the only
+thing that makes shard orders diverge.  In deterministic mode the
+virtual clock serializes pushes and the run replays the engine exactly.
+
+Cross-shard aggregation happens OFF the hot path:
+
+* telemetry — each shard contributes its rows' partial ``sum d^2`` /
+  ``sum g^2``; the gap/grad-norm row is recorded once all S partials for
+  a message are in (shard 0 carries step/lag/time).
+* eval — each shard snapshots its theta slice when ITS applied count
+  crosses an eval boundary; the eval runs on the assembled full vector
+  once all S slices for that boundary exist.  In deterministic mode this
+  is exactly the engine's eval point; in live modes the slices may come
+  from different message orders (cross-shard snapshot consistency is a
+  known follow-up, see ROADMAP).
+
+Fault injection is per shard: each server owns a ``FaultInjector`` with
+a shard-seeded reorder substream (``FaultPlan.reorder_shards`` confines
+reordering to chosen shards), so a fault on one shard's link leaves the
+other shards' replay bit-for-bit unchanged (tested).
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.algorithms import Algorithm
+from ..core.metrics import History
+from ..kernels.flat_update import (FlatAlgorithm, kernel_eligible,
+                                   merge_flat, slice_flat, unpack_state)
+from .faults import FaultInjector
+from .mailbox import FanoutMailbox, GradMsg, Mailbox, Reply
+from .master import run_serve_loop
+
+
+class _ShardServer:
+    """One row-range shard: a lean single-threaded master over rows
+    [r0, r1).  The serve loop mirrors ``Master.serve`` (drain -> reorder
+    -> chunk to warmed power-of-two fused variants -> apply -> reply) but
+    the state is a row slice and telemetry/eval flow to the owner's
+    aggregators as partials instead of being recorded directly."""
+
+    def __init__(self, sid: int, owner: "ShardedMaster", r0: int, r1: int,
+                 state: dict, mailbox: Mailbox,
+                 injector: FaultInjector | None):
+        self.sid = sid
+        self.owner = owner
+        self.r0, self.r1 = r0, r1
+        self.state = state              # flat dict sliced to rows [r0, r1)
+        self.mailbox = mailbox
+        self.injector = injector
+        self.fa = owner._flat_algo
+        self.stop = owner.stop
+        self.total = owner.total
+        self.coalesce = owner.coalesce
+        self.telemetry = owner.record_telemetry
+        self.applied = 0
+        self._step = 0
+        self._fused: dict = {}
+        self._view_jit = jax.jit(self.fa._view_flat)
+        self.coalesce_counts: dict[int, int] = {}
+        self.busy_s = 0.0
+        self.error: BaseException | None = None
+
+    # -- fused coalesced receive over this shard's rows ------------------
+    def _get_fused(self, k: int, telemetry: bool):
+        key = (k, telemetry)
+        fn = self._fused.get(key)
+        if fn is not None:
+            return fn
+        fa = self.fa
+
+        def fused(flat, ids, nows, grads, views):
+            g = jnp.stack(grads)
+            flat, hats, pres = fa.apply_batch(flat, ids, g,
+                                              telemetry=telemetry)
+            out_views = tuple(hats[j] for j in range(k))
+            if telemetry:
+                d = pres - jnp.stack(views)
+                # partial sums only: the owner adds the S shard partials
+                # and takes the sqrt once per message
+                return (flat, out_views, jnp.sum(d * d, axis=(1, 2)),
+                        jnp.sum(g * g, axis=(1, 2)))
+            return flat, out_views, None, None
+
+        fn = jax.jit(fused)
+        self._fused[key] = fn
+        return fn
+
+    def warm(self):
+        zero = jnp.zeros_like(self.state["theta"])
+        view = self.state["theta"]
+        k = 1
+        while k <= self.coalesce:
+            fn = self._get_fused(k, self.telemetry)
+            out = fn(self.state, jnp.zeros((k,), jnp.int32),
+                     jnp.zeros((k,), jnp.float32),
+                     tuple(zero for _ in range(k)),
+                     tuple(view for _ in range(k)) if self.telemetry
+                     else None)
+            jax.block_until_ready(jax.tree.leaves(out[0])[0])
+            k *= 2
+
+    def _apply(self, work: list):
+        k = len(work)
+        telemetry = self.telemetry
+        fn = self._get_fused(k, telemetry)
+        ids = jnp.asarray([m.worker_id for m in work], jnp.int32)
+        nows = jnp.asarray([m.t_send for m in work], jnp.float32)
+        grads = tuple(m.grad for m in work)
+        views = tuple(m.view for m in work) if telemetry else None
+        t0 = self._step
+        st, out_views, d2, g2 = fn(self.state, ids, nows, grads, views)
+        self.state = st
+        self._step = t0 + k
+        if telemetry:               # one host transfer per batch per shard
+            d2 = np.asarray(d2)
+            g2 = np.asarray(g2)
+        evals = []
+        for j, m in enumerate(work):
+            self.applied += 1
+            if self.sid == 0 and self.applied == self.owner._steady_mark:
+                self.owner.steady_t = time.perf_counter()
+            if telemetry:
+                # partials BEFORE the reply: once the worker unblocks,
+                # every shard has already contributed this message's sums
+                m.group.add_telemetry(
+                    self.sid, worker=m.worker_id, step=t0 + j + 1,
+                    lag=t0 + j - m.view_step, t=self.owner._time_fn(m),
+                    d2=float(d2[j]), g2=float(g2[j]))
+            m.respond(Reply(view=out_views[j], step=t0 + j + 1))
+            if (self.applied % self.owner.eval_every == 0
+                    or self.applied == self.total):
+                evals.append((self.owner._time_fn(m), self.applied))
+        # eval snapshots use the post-batch state (the single master's
+        # semantics with coalescing; exact at k=1, i.e. deterministic mode)
+        for t_ev, step_ev in evals:
+            self.owner._eval_contribute(self.sid, step_ev,
+                                        self.state["theta"], t_ev)
+
+    def _pull_reply(self, m: GradMsg):
+        m.respond(Reply(view=self._view_jit(self.state), step=self._step))
+
+    # -- shard serve loop -------------------------------------------------
+    def serve(self):
+        # the shared loop (drain -> truncate -> reorder -> chunk ->
+        # apply); unlike Master.serve it must NOT raise the stop flag on
+        # normal completion — sibling shards may still be draining
+        # (errors do stop the cluster, inside run_serve_loop)
+        run_serve_loop(self)
+
+
+class ShardedMaster:
+    """S independent row-range shard servers over ONE flat layout.
+
+    Drop-in for ``Master`` in the runtime: same worker-visible surface
+    (``initial_view`` / ``state`` / ``master_params`` / ``applied`` /
+    ``step`` / ``serve`` / ``warm`` / ``reject_pending``), but workers
+    talk to it through ``frontdoor`` (a ``FanoutMailbox``) and the wire
+    format is the range-ordered tuple of row slices.  Requires the flat
+    kernel path (kernel-eligible algorithm + constant learning rate).
+    """
+
+    def __init__(self, algo: Algorithm, state: dict, *, shards: int,
+                 history: History, stop: threading.Event, total_grads: int,
+                 coalesce: int = 1, record_telemetry: bool = True,
+                 eval_fn: Callable | None = None, eval_every: int = 100,
+                 injectors: list[FaultInjector] | None = None,
+                 time_fn: Callable[[GradMsg], float] | None = None,
+                 mailbox_capacity: int = 0,
+                 use_pallas: bool | None = None):
+        if shards < 1:
+            raise ValueError(f"need shards >= 1, got {shards}")
+        if not kernel_eligible(algo):
+            raise ValueError(f"sharded master requires a kernel-eligible "
+                             f"algorithm, got {algo.name!r}")
+        if injectors is not None and len(injectors) != shards:
+            raise ValueError("need one injector per shard")
+        self.algo = algo
+        self._flat_algo = FlatAlgorithm(algo, use_pallas)  # checks schedule
+        flat = self._flat_algo.adopt(state)
+        self.spec = self._flat_algo.spec
+        self.ranges = self.spec.row_ranges(shards)
+        self.subs = [self.spec.subspec(r0, r1) for r0, r1 in self.ranges]
+        self.num_shards = shards
+        self.history = history
+        self.stop = stop
+        self.total = total_grads
+        self.coalesce = max(1, coalesce)
+        self.record_telemetry = record_telemetry
+        self.eval_every = max(1, eval_every)
+        self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
+        self._time_fn = time_fn or (lambda m: m.t_send)
+        self._inv_sqrt_p = 1.0 / math.sqrt(self.spec.n_elems)
+        self._hist_lock = threading.Lock()
+        self._eval_slots: dict = {}     # step -> {"thetas": {sid: rows}, "t"}
+        self._steady_mark = max(1, total_grads // 5)
+        self.steady_t: float | None = None
+        self.error: BaseException | None = None
+        self.state_is_flat = True
+        self.mailboxes = [Mailbox(mailbox_capacity) for _ in range(shards)]
+        self.shards_ = [
+            _ShardServer(s, self, r0, r1, slice_flat(flat, r0, r1),
+                         self.mailboxes[s],
+                         injectors[s] if injectors is not None else None)
+            for s, (r0, r1) in enumerate(self.ranges)
+        ]
+        self.frontdoor = FanoutMailbox(
+            self.mailboxes,
+            tele_cb=self._record_telemetry if record_telemetry else None)
+
+    # -- worker-visible state -------------------------------------------
+    @property
+    def applied(self) -> int:
+        """Messages applied on EVERY shard (the lagging shard's count)."""
+        return min(srv.applied for srv in self.shards_)
+
+    @property
+    def step(self) -> int:
+        return self.shards_[0]._step
+
+    def _gather_flat(self) -> dict:
+        return merge_flat([srv.state for srv in self.shards_])
+
+    @property
+    def state(self) -> dict:
+        return unpack_state(self.algo, self._gather_flat(), self.spec)
+
+    def master_params(self):
+        return self.spec.unpack(self.spec.concat_rows(
+            [srv.state["theta"] for srv in self.shards_]))
+
+    def initial_view(self, i: int):
+        """Initial pull: the range-ordered tuple of shard view slices."""
+        return tuple(srv._view_jit(srv.state)
+                     for srv in self.shards_), self.step
+
+    def warm(self):
+        for srv in self.shards_:
+            srv.warm()
+
+    # -- cross-shard aggregation (off the hot path) ----------------------
+    def _record_telemetry(self, *, worker, step, lag, t, d2, g2):
+        # rows append in message-COMPLETION order: with barrier-free
+        # shard clocks a later message can finish on all shards before an
+        # earlier one, so live-mode History rows are not step-sorted (the
+        # step field carries the order; deterministic mode is serialized
+        # and stays engine-ordered — tested)
+        with self._hist_lock:
+            self.history.record(
+                time=t, step=step, worker=worker, lag=lag,
+                gap=math.sqrt(d2) * self._inv_sqrt_p,
+                grad_norm=math.sqrt(g2))
+
+    def _eval_contribute(self, sid: int, step_ev: int, theta_rows, t_ev):
+        if self._eval_jit is None:
+            return
+        ready = None
+        with self._hist_lock:
+            slot = self._eval_slots.setdefault(
+                step_ev, {"thetas": {}, "t": None})
+            slot["thetas"][sid] = theta_rows
+            if sid == 0:
+                slot["t"] = t_ev
+            if len(slot["thetas"]) == self.num_shards:
+                ready = self._eval_slots.pop(step_ev)
+        if ready is None:
+            return
+        theta = self.spec.concat_rows(
+            [ready["thetas"][s] for s in range(self.num_shards)])
+        out = self._eval_jit(self.spec.unpack(theta))
+        loss, metric = (out if isinstance(out, tuple)
+                        else (out, float("nan")))
+        with self._hist_lock:
+            self.history.record_eval(time=ready["t"], step=step_ev,
+                                     loss=loss, metric=metric)
+
+    # -- lifecycle -------------------------------------------------------
+    def serve(self):
+        """Run all S shard servers; returns when every shard has applied
+        ``total`` gradients (or the cluster stops)."""
+        threads = [
+            threading.Thread(target=srv.serve, name=f"ps-shard-{srv.sid}",
+                             daemon=True)
+            for srv in self.shards_
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        errs = [srv.error for srv in self.shards_ if srv.error is not None]
+        if errs:
+            self.error = errs[0]
+        self.stop.set()
+
+    def reject_pending(self):
+        """Post-shutdown: unblock any worker still waiting on a reply."""
+        for mb in self.mailboxes:
+            for m in mb.drain_nowait():
+                m.respond(None)
+
+    # -- aggregate stats -------------------------------------------------
+    @property
+    def busy_s(self) -> float:
+        """Busy time of the busiest shard — the shards run concurrently,
+        so the critical path (not the sum) is the master-side cost."""
+        return max(srv.busy_s for srv in self.shards_)
+
+    @property
+    def coalesce_counts(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for srv in self.shards_:
+            for k, c in srv.coalesce_counts.items():
+                out[k] = out.get(k, 0) + c
+        return out
+
+    @property
+    def shard_applied(self) -> list[int]:
+        return [srv.applied for srv in self.shards_]

@@ -14,6 +14,12 @@ Pacing is pluggable:
 The push is a fused push-pull RPC: the reply carries the post-update view
 (the engine's receive->send semantics), so a worker never computes two
 gradients on the same view.
+
+The worker is oblivious to the master's layout: view and gradient are
+whatever its ``grad_jit`` produces/consumes — a pytree (tree master), a
+flat (R, 128) buffer (flat master), or a range-ordered tuple of row
+slices (sharded master, where ``mailbox`` is the ``FanoutMailbox`` front
+and one push fans out to every shard).
 """
 from __future__ import annotations
 

@@ -18,6 +18,14 @@ Zero padding is load-bearing: every update rule in the family maps
 (0, 0, ..., 0) -> 0 in the padding region (momentum of zero gradient stays
 zero), so packed buffers never leak padding into real rows and norms over
 flat buffers equal pytree norms.
+
+Because the layout is row-major and every family update rule is
+elementwise per row, any contiguous row range [r0, r1) of a flat buffer
+is itself a self-contained shard of the state: ``row_ranges`` splits the
+row space into S contiguous ranges and ``FlatSubSpec`` packs/extracts
+exactly one range, which is what the row-sharded multi-master
+(``repro.cluster.sharded``) builds on — concatenating the S shard slices
+in range order reconstructs the single-master buffer bit-for-bit.
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ class FlatSpec:
         self.dtypes = tuple(dtypes)
         self.sizes = tuple(int(math.prod(s)) for s in self.shapes)
         self.n_elems = int(sum(self.sizes))
+        self.row_align = int(row_align)
         rows = -(-self.n_elems // LANES)
         self.rows = -(-rows // row_align) * row_align
         self.padded = self.rows * LANES
@@ -97,3 +106,79 @@ class FlatSpec:
                                        self.shapes, self.dtypes)
         ]
         return jax.tree.unflatten(self.treedef, leaves)
+
+    # -- row sharding ----------------------------------------------------
+    def row_ranges(self, shards: int) -> tuple[tuple[int, int], ...]:
+        """Split [0, rows) into ``shards`` contiguous non-empty ranges.
+
+        Boundaries are snapped down to ``row_align`` multiples when that
+        keeps every range non-empty (TPU sublane alignment); tiny states
+        fall back to plain even row splits so S <= rows always works.
+        Concatenating the ranges in order always covers [0, rows) exactly.
+        """
+        if not 1 <= shards <= self.rows:
+            raise ValueError(
+                f"need 1 <= shards <= rows={self.rows}, got {shards}")
+        bounds = [round(s * self.rows / shards) for s in range(shards + 1)]
+        for s in range(1, shards):
+            snapped = (bounds[s] // self.row_align) * self.row_align
+            if bounds[s - 1] < snapped:
+                bounds[s] = snapped
+        return tuple((bounds[s], bounds[s + 1]) for s in range(shards))
+
+    def subspec(self, r0: int, r1: int) -> "FlatSubSpec":
+        return FlatSubSpec(self, r0, r1)
+
+    def concat_rows(self, pieces) -> jax.Array:
+        """Reassemble range-ordered shard slices into one full buffer
+        ((rows, 128) or (N, rows, 128) pieces; inverse of per-shard
+        ``FlatSubSpec.take``)."""
+        return jnp.concatenate(list(pieces), axis=-2)
+
+
+class FlatSubSpec:
+    """One contiguous row range [r0, r1) of a ``FlatSpec`` layout.
+
+    ``take``/``put`` slice the range out of / back into a full flat
+    buffer — ``take`` is the sharded runtime's scatter step (workers
+    pack the full gradient once, then take each shard's rows inside the
+    same jit, where XLA fuses the slices for free).  ``pack`` builds the
+    range's rows directly from a pytree without materializing the full
+    buffer — bit-identical to ``spec.pack(tree)[r0:r1]`` (tested); it
+    exists for callers that hold only this range (per-shard checkpoint
+    restore / streaming packing), not the worker hot path.
+    """
+
+    def __init__(self, spec: FlatSpec, r0: int, r1: int):
+        if not 0 <= r0 < r1 <= spec.rows:
+            raise ValueError(f"bad row range [{r0}, {r1}) for "
+                             f"rows={spec.rows}")
+        self.spec = spec
+        self.r0, self.r1 = int(r0), int(r1)
+        self.rows = self.r1 - self.r0
+        # element span of this range within the concatenated flat vector
+        self.e0 = self.r0 * LANES
+        self.e1 = min(self.r1 * LANES, spec.n_elems)
+
+    # -- slicing a full buffer ------------------------------------------
+    def take(self, buf: jax.Array) -> jax.Array:
+        """(.., rows, 128) -> (.., r1-r0, 128): this range's rows."""
+        return buf[..., self.r0:self.r1, :]
+
+    def put(self, buf: jax.Array, piece: jax.Array) -> jax.Array:
+        """Write this range's rows back into a full buffer."""
+        return buf.at[..., self.r0:self.r1, :].set(piece)
+
+    # -- packing just this range ----------------------------------------
+    def pack(self, tree) -> jax.Array:
+        """Pytree -> only this range's (r1-r0, 128) rows."""
+        leaves = self.spec.treedef.flatten_up_to(tree)
+        parts = []
+        for leaf, o, s in zip(leaves, self.spec.offsets, self.spec.sizes):
+            lo, hi = max(self.e0 - o, 0), min(self.e1 - o, s)
+            if lo < hi:
+                parts.append(jnp.ravel(leaf)[lo:hi].astype(jnp.float32))
+        flat = (jnp.concatenate(parts) if parts
+                else jnp.zeros((0,), jnp.float32))
+        pad = self.rows * LANES - flat.shape[0]
+        return jnp.pad(flat, (0, pad)).reshape(self.rows, LANES)

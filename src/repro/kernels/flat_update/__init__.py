@@ -1,7 +1,7 @@
 from .ops import (FamilySpec, FlatAlgorithm, family_spec_for,
-                  flat_master_update_batch, kernel_eligible, pack_state,
-                  unpack_state)
+                  flat_master_update_batch, kernel_eligible, merge_flat,
+                  pack_state, slice_flat, unpack_state)
 
 __all__ = ["FamilySpec", "FlatAlgorithm", "family_spec_for",
-           "flat_master_update_batch", "kernel_eligible", "pack_state",
-           "unpack_state"]
+           "flat_master_update_batch", "kernel_eligible", "merge_flat",
+           "pack_state", "slice_flat", "unpack_state"]

@@ -105,6 +105,37 @@ def pack_state(algo, state: dict, spec: FlatSpec | None = None):
     return flat, spec
 
 
+_ROW_KEYS = ("theta", "v", "v0", "u2")   # buffers laid out by flat row
+
+
+def slice_flat(flat: dict, r0: int, r1: int) -> dict:
+    """Row-range shard of a flat state dict.
+
+    Every buffer keyed in ``_ROW_KEYS`` is sliced to rows [r0, r1) of its
+    (next-to-last) row axis — the (N, R, 128) momentum slab keeps its
+    worker axis — while scalars (t, lr_prev, vscale) are copied.  Because
+    every family update rule is elementwise per row, running the SAME
+    ``FlatAlgorithm.apply_batch`` on the slice advances exactly the rows a
+    shard owns, bit-identically to the full-state call (tested).
+    """
+    return {k: (v[..., r0:r1, :] if k in _ROW_KEYS else v)
+            for k, v in flat.items()}
+
+
+def merge_flat(pieces: list[dict]) -> dict:
+    """Reassemble range-ordered shard states into one full flat state.
+
+    Row buffers concatenate along the row axis; scalars are taken from
+    the first shard (every shard applies every message, so their t /
+    lr_prev / vscale trajectories are identical).
+    """
+    out = dict(pieces[0])
+    for k in _ROW_KEYS:
+        if k in out:
+            out[k] = jnp.concatenate([p[k] for p in pieces], axis=-2)
+    return out
+
+
 def unpack_state(algo, flat: dict, spec: FlatSpec) -> dict:
     """Flat dict -> the algorithm's pytree state dict."""
     fam = family_spec_for(algo)

@@ -7,6 +7,11 @@
   PYTHONPATH=src python -m repro.launch.cluster --algo dana-zero \
       --workers 4 --grads 400 --mode deterministic --compare-engine
 
+  # row-sharded multi-master (4 shard servers over the flat layout);
+  # deterministic sharding stays bit-exact vs the engine
+  PYTHONPATH=src python -m repro.launch.cluster --algo dana-zero \
+      --workers 8 --grads 2000 --mode free --coalesce 4 --shards 4
+
   # fault injection: drop worker 2 between master steps 200 and 600,
   # 5% transient stalls, out-of-order delivery within the coalesce window
   PYTHONPATH=src python -m repro.launch.cluster --mode paced --workers 8 \
@@ -81,6 +86,8 @@ def main(argv=None):
     ap.add_argument("--mode", default="free",
                     choices=["deterministic", "paced", "free"])
     ap.add_argument("--coalesce", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-range master shards (flat kernel path only)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--warmup-frac", type=float, default=0.0)
@@ -122,7 +129,7 @@ def main(argv=None):
     cfg = ClusterConfig(
         num_workers=args.workers, total_grads=args.grads,
         eval_every=args.eval_every, mode=args.mode,
-        coalesce=args.coalesce, exec_model=gm,
+        coalesce=args.coalesce, shards=args.shards, exec_model=gm,
         time_scale=args.time_scale, faults=faults,
         record_telemetry=not args.no_telemetry,
         use_kernel=False if args.no_kernel else None)

@@ -20,6 +20,18 @@ def test_quick_profile_covers_every_suite():
             f"--quick {name} would write a results/ artifact"
 
 
+def test_quick_cluster_exercises_shard_sweep():
+    """The cluster smoke must sweep at least two shard counts so the
+    row-sharded master's capacity claim stays in the CI trajectory."""
+    argv = bench_run.QUICK["cluster"]
+    i = argv.index("--shards") + 1
+    shards = []
+    while i < len(argv) and not argv[i].startswith("--"):
+        shards.append(int(argv[i]))
+        i += 1
+    assert len(shards) >= 2 and 1 in shards
+
+
 def test_bench_scaling_out_empty_writes_nothing(tmp_path, monkeypatch):
     """bench_scaling must treat --out "" as 'no artifact', not fall
     through to its default path (the --quick contract)."""
@@ -41,6 +53,9 @@ def test_run_quick_kernels_and_cluster_appends_trajectory(tmp_path,
     assert all(s["ok"] for s in out.values()), out
     assert out["kernels"]["claims"]["fused_correct"]
     assert out["kernels"]["claims"]["batched_correct"]
+    # the sharded capacity sweep rides in the cluster suite's claims
+    sweep = out["cluster"]["claims"]["shard_sweep_updates_per_s"]
+    assert set(sweep) == {"1", "2"} and all(v > 0 for v in sweep.values())
     trail = json.loads(traj.read_text())
     assert isinstance(trail, list) and len(trail) == 1
     entry = trail[0]

@@ -1,0 +1,207 @@
+"""Property tests for the flat (R, 128) layout, including row-range
+sub-specs.
+
+The sharded master's correctness rests on three algebraic facts about
+``FlatSpec``:
+
+  * pack -> unpack is the identity for ANY pytree, shapes, dtypes and
+    ``row_align`` (padding never leaks into real elements);
+  * packing preserves the global l2 norm (padding is exactly zero), so
+    flat-space telemetry equals pytree telemetry;
+  * any split into contiguous row ranges is lossless: concatenating the
+    per-range slices (or per-range ``FlatSubSpec.pack`` outputs)
+    reconstructs the full buffer bit-for-bit.
+
+Checked two ways: hypothesis drives arbitrary cases when it is
+installed; a seeded corpus of the same properties always runs so CI
+without hypothesis still covers the row-range layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flat import LANES, FlatSpec
+
+# ---------------------------------------------------------------------------
+# shared property checks
+# ---------------------------------------------------------------------------
+
+
+def _tree_from(shapes, dtypes, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for j, (shape, dt) in enumerate(zip(shapes, dtypes)):
+        x = jax.random.normal(jax.random.fold_in(key, j), shape) * 3.0
+        if jnp.issubdtype(jnp.dtype(dt), jnp.integer):
+            x = jnp.round(x * 10)
+        tree[f"leaf{j}"] = x.astype(dt)
+    return tree
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def check_roundtrip_and_ranges(tree, row_align, shards):
+    spec = FlatSpec.from_tree(tree, row_align=row_align)
+    buf = spec.pack(tree)
+
+    # layout invariants
+    assert buf.shape == (spec.rows, LANES)
+    assert spec.rows % row_align == 0
+    assert spec.rows * LANES >= spec.n_elems
+
+    # pack -> unpack identity (shapes, dtypes, values)
+    _assert_trees_equal(tree, spec.unpack(buf))
+
+    # norm preservation: padding contributes exactly zero
+    tree_sq = sum(float(np.sum(np.square(np.asarray(l, np.float64))))
+                  for l in jax.tree.leaves(tree))
+    buf_sq = float(np.sum(np.square(np.asarray(buf, np.float64))))
+    np.testing.assert_allclose(buf_sq, tree_sq, rtol=1e-5, atol=1e-6)
+
+    # stacked variant shares the same layout per row
+    stacked = jax.tree.map(lambda l: jnp.stack([l, 2 * l, -l]), tree)
+    sbuf = spec.pack_stacked(stacked)
+    _assert_trees_equal(stacked, spec.unpack_stacked(sbuf))
+    np.testing.assert_array_equal(np.asarray(sbuf[0]), np.asarray(buf))
+
+    # row-range sub-specs: lossless split, exact slice semantics
+    shards = min(shards, spec.rows)
+    ranges = spec.row_ranges(shards)
+    assert ranges[0][0] == 0 and ranges[-1][1] == spec.rows
+    assert all(r0 < r1 for r0, r1 in ranges)
+    assert all(a[1] == b[0] for a, b in zip(ranges, ranges[1:]))
+    subs = [spec.subspec(r0, r1) for r0, r1 in ranges]
+
+    # concat of slices reconstructs the buffer bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(spec.concat_rows([s.take(buf) for s in subs])),
+        np.asarray(buf))
+    np.testing.assert_array_equal(
+        np.asarray(spec.concat_rows([s.take(sbuf) for s in subs])),
+        np.asarray(sbuf))
+
+    # sub-spec pack == the matching slice of the full pack (scatter path)
+    for s in subs:
+        np.testing.assert_array_equal(np.asarray(s.pack(tree)),
+                                      np.asarray(s.take(buf)))
+
+    # put is take's inverse
+    scrambled = buf + 1.0
+    for s in subs:
+        scrambled = s.put(scrambled, s.take(buf))
+    np.testing.assert_array_equal(np.asarray(scrambled), np.asarray(buf))
+
+    # per-range norms partition the global norm (sharded telemetry)
+    part = sum(float(np.sum(np.square(np.asarray(s.take(buf), np.float64))))
+               for s in subs)
+    np.testing.assert_allclose(part, buf_sq, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# seeded corpus (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+CASES = [
+    # (shapes, dtypes, row_align, shards)
+    ([(17,), (3, 5)], ["float32", "float32"], 8, 2),
+    ([(32, 64), (64,), (64, 10), (10,)], ["float32"] * 4, 8, 4),
+    ([(1,)], ["float32"], 8, 1),
+    ([(7, 11, 3), (2,)], ["float32", "float16"], 4, 3),
+    ([(129,), (127,)], ["float16", "float32"], 1, 2),
+    ([(5, 5), (300,), (4,)], ["int32", "float32", "float32"], 16, 5),
+    ([(2048,), (9,)], ["float32", "int32"], 2, 8),
+]
+
+
+@pytest.mark.parametrize("shapes,dtypes,row_align,shards", CASES)
+def test_flat_spec_properties_seeded(shapes, dtypes, row_align, shards):
+    tree = _tree_from(shapes, dtypes, seed=len(shapes) * 31 + shards)
+    check_roundtrip_and_ranges(tree, row_align, shards)
+
+
+def test_row_ranges_validation():
+    spec = FlatSpec.from_tree({"a": jnp.ones((64,))})
+    with pytest.raises(ValueError):
+        spec.row_ranges(0)
+    with pytest.raises(ValueError):
+        spec.row_ranges(spec.rows + 1)
+    with pytest.raises(ValueError):
+        spec.subspec(3, 3)
+    with pytest.raises(ValueError):
+        spec.subspec(0, spec.rows + 1)
+
+
+def test_row_ranges_prefer_alignment():
+    """Interior boundaries snap to row_align multiples when the state is
+    big enough; tiny states fall back to even row splits."""
+    big = FlatSpec(None, [(128 * 64,)], ["float32"], row_align=8)
+    assert big.rows == 64
+    assert big.row_ranges(4) == ((0, 16), (16, 32), (32, 48), (48, 64))
+    tiny = FlatSpec(None, [(212,)], ["float32"], row_align=8)
+    assert tiny.rows == 8
+    # 8 rows cannot hold 4 aligned ranges; even split keeps all non-empty
+    assert tiny.row_ranges(4) == ((0, 2), (2, 4), (4, 6), (6, 8))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: arbitrary pytrees / shapes / dtypes / alignments / splits
+# (the seeded corpus above always runs; these widen it when hypothesis is
+# installed — a module-level importorskip would skip the corpus too)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=25, deadline=None)
+
+    @st.composite
+    def _layout_cases(draw):
+        n_leaves = draw(st.integers(1, 5))
+        shapes = [
+            tuple(draw(st.integers(1, 9))
+                  for _ in range(draw(st.integers(1, 3))))
+            for _ in range(n_leaves)
+        ]
+        dtypes = [draw(st.sampled_from(["float32", "float16", "int32"]))
+                  for _ in range(n_leaves)]
+        row_align = draw(st.sampled_from([1, 2, 4, 8, 16]))
+        shards = draw(st.integers(1, 8))
+        seed = draw(st.integers(0, 2 ** 16))
+        return shapes, dtypes, row_align, shards, seed
+
+    @settings(**SETTINGS)
+    @given(_layout_cases())
+    def test_flat_spec_properties_hypothesis(case):
+        shapes, dtypes, row_align, shards, seed = case
+        tree = _tree_from(shapes, dtypes, seed)
+        check_roundtrip_and_ranges(tree, row_align, shards)
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 64), st.integers(1, 12), st.integers(0, 2 ** 16))
+    def test_row_range_pack_matches_slice_hypothesis(n_units, shards,
+                                                     seed):
+        """FlatSubSpec.pack over an arbitrary split == slicing the full
+        pack, even when leaf boundaries straddle range boundaries."""
+        rng = np.random.default_rng(seed)
+        sizes, left = [], n_units * LANES
+        while left > 0:
+            s = int(rng.integers(1, left + 1))
+            sizes.append(s)
+            left -= s
+        tree = {f"l{j}": jnp.asarray(rng.normal(size=(s,)), jnp.float32)
+                for j, s in enumerate(sizes)}
+        spec = FlatSpec.from_tree(tree, row_align=1)
+        buf = spec.pack(tree)
+        for r0, r1 in spec.row_ranges(min(shards, spec.rows)):
+            sub = spec.subspec(r0, r1)
+            np.testing.assert_array_equal(np.asarray(sub.pack(tree)),
+                                          np.asarray(buf[r0:r1]))
