@@ -17,7 +17,11 @@ Three measurements:
 
 * **master capacity** — messages/sec the master's fused receive pass can
   apply, timed synchronously on the real hot path (no threads).  This is
-  the clean "master updates/sec" number per path.
+  the clean "master updates/sec" number per path.  Swept per algorithm
+  (``--algos``: the DC/gap-aware sent-snapshot members ride the same
+  batched kernel since PR 4) and, with ``--sched``, under a moving
+  step-decay learning-rate schedule (the lifted constant-lr
+  restriction: scheduled runs are flat-eligible too).
 * **sharded capacity** — the same fused pass row-sharded across S
   concurrent shard servers (S ∈ {1, 2, 4, 8} by default): each shard
   thread applies the batch to only its row range, so the per-shard work
@@ -42,14 +46,40 @@ from repro.cluster import (ClusterConfig, Mailbox, Master, ShardedMaster,
                            run_cluster)
 from repro.core.algorithms import DanaZero, make_algorithm
 from repro.core.metrics import History
+from repro.core.schedules import Schedule
 from repro.core.types import HyperParams
 from repro.data.synthetic import ClassificationTask
-from repro.kernels.flat_update import kernel_eligible
+from repro.kernels.flat_update import (FLAT_ELIGIBLE, eligibility_matrix,
+                                       kernel_eligible)
 from repro.models.toy import make_classifier_fns
 
 from .common import print_csv, save_json
 
 HP = HyperParams(lr=0.05, momentum=0.9)
+
+
+def _sched(num_workers: int) -> Schedule:
+    """A decidedly moving schedule for the scheduled-lr capacity rows:
+    warm-up ramp plus decay milestones that land inside the sweep."""
+    return Schedule(base_lr=HP.lr, num_workers=num_workers,
+                    warmup_steps=50, milestones=(100, 200),
+                    decay_factor=0.5)
+
+
+def check_eligibility_matrix() -> dict:
+    """Assert the documented eligibility matrix (fail the bench — and CI
+    smoke — on a silent kernel_eligible regression)."""
+    matrix = eligibility_matrix()
+    flat_now = sorted(n for n in matrix if matrix[n]["flat"])
+    if flat_now != sorted(FLAT_ELIGIBLE):
+        raise RuntimeError(
+            f"kernel eligibility regressed: flat-eligible set is "
+            f"{flat_now}, documented {sorted(FLAT_ELIGIBLE)}")
+    for name in FLAT_ELIGIBLE:
+        if not (matrix[name]["schedule"] and matrix[name]["shard"]):
+            raise RuntimeError(
+                f"{name} lost schedule/shard eligibility: {matrix[name]}")
+    return matrix
 
 
 def _setup(dim=32, classes=10, batch=32, width=64, pool=32):
@@ -75,10 +105,11 @@ def _paths_for(algo_name: str) -> list[str]:
 
 
 def master_capacity_row(algo_name: str, num_workers: int, k: int,
-                        path: str, reps: int = 200):
+                        path: str, reps: int = 200, sched: bool = False):
     """Messages/sec of the master's fused coalesced-receive pass."""
     params0, grad_fn, next_batch = _setup()
-    algo = make_algorithm(algo_name, HP)
+    algo = make_algorithm(algo_name, HP,
+                          _sched(num_workers) if sched else None)
     state = algo.init(params0, num_workers)
     master = Master(algo, state, mailbox=Mailbox(), history=History(),
                     stop=threading.Event(), total_grads=1,
@@ -111,7 +142,7 @@ def master_capacity_row(algo_name: str, num_workers: int, k: int,
         dt = min(dt, (time.perf_counter() - t0) / reps)
     return {
         "section": "capacity", "algo": algo_name, "workers": num_workers,
-        "k": k, "path": path,
+        "k": k, "path": path, "sched": sched,
         "us_per_msg": dt / k * 1e6,
         "master_updates_per_s": k / dt,
     }
@@ -199,7 +230,10 @@ def live_row(algo_name: str, num_workers: int, k: int, total_grads: int):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--algo", default="dana-zero")
+    ap.add_argument("--algos", nargs="*", default=["dana-zero"],
+                    help="algorithms for the capacity path sweep; the "
+                         "first one also drives the sharded + live "
+                         "sections")
     ap.add_argument("--workers", type=int, nargs="*", default=[8])
     ap.add_argument("--coalesce", type=int, nargs="*",
                     default=[1, 2, 4, 8])
@@ -209,19 +243,32 @@ def main(argv=None):
     ap.add_argument("--shard-width", type=int, default=4096,
                     help="MLP hidden width for the sharded sweep (bigger "
                          "state -> sharding divides real memory traffic)")
+    ap.add_argument("--no-sched", dest="sched", action="store_false",
+                    help="skip the scheduled-lr capacity variant")
     ap.add_argument("--grads", type=int, default=3000)
     ap.add_argument("--reps", type=int, default=200)
     ap.add_argument("--skip-live", action="store_true")
     ap.add_argument("--out", default="results/bench_cluster.json")
     args = ap.parse_args(argv)
 
-    paths = _paths_for(args.algo)
+    matrix = check_eligibility_matrix()     # raises on regression
+    algo0 = args.algos[0]
     cap_rows = []
-    for n in args.workers:
-        for k in args.coalesce:
-            for path in paths:
-                cap_rows.append(master_capacity_row(args.algo, n, k, path,
-                                                    reps=args.reps))
+    for algo_name in args.algos:
+        for n in args.workers:
+            for k in args.coalesce:
+                for path in _paths_for(algo_name):
+                    cap_rows.append(master_capacity_row(
+                        algo_name, n, k, path, reps=args.reps))
+    if args.sched:
+        # the lifted constant-lr restriction: the same path sweep under
+        # a moving warm-up + step-decay schedule (first algo only)
+        n0, k_hi = max(args.workers), max(args.coalesce)
+        for path in ("tree", "flat"):
+            if path in _paths_for(algo0):
+                cap_rows.append(master_capacity_row(
+                    algo0, n0, k_hi, path, reps=args.reps, sched=True))
+    paths = _paths_for(algo0)
     shard_rows = []
     if "flat" in paths and args.shards:
         n0, k_hi = max(args.workers), max(args.coalesce)
@@ -230,16 +277,16 @@ def main(argv=None):
         shard_reps = max(3, args.reps // 20)
         for s in args.shards:
             shard_rows.append(sharded_capacity_row(
-                args.algo, n0, k_hi, s, reps=shard_reps,
+                algo0, n0, k_hi, s, reps=shard_reps,
                 width=args.shard_width))
     live_rows = []
     if not args.skip_live:
         for n in args.workers:
             for k in args.coalesce:
-                live_rows.append(live_row(args.algo, n, k, args.grads))
+                live_rows.append(live_row(algo0, n, k, args.grads))
 
     print_csv(cap_rows, ["section", "algo", "workers", "k", "path",
-                         "us_per_msg", "master_updates_per_s"])
+                         "sched", "us_per_msg", "master_updates_per_s"])
     if shard_rows:
         print_csv(shard_rows, ["section", "algo", "workers", "k", "shards",
                                "width", "rows", "us_per_msg",
@@ -250,10 +297,11 @@ def main(argv=None):
                               "master_updates_per_s", "mean_coalesce",
                               "wall_s"])
 
-    def _cap(n, k, path):
+    def _cap(n, k, path, algo=algo0, sched=False):
         return next(r["master_updates_per_s"] for r in cap_rows
                     if r["workers"] == n and r["k"] == k
-                    and r["path"] == path)
+                    and r["path"] == path and r["algo"] == algo
+                    and r["sched"] == sched)
 
     def _live(n, k, col):
         return next(r[col] for r in live_rows
@@ -270,10 +318,23 @@ def main(argv=None):
         "coalesce_capacity_speedup_x": best(n0, k_hi) / best(n0, 1),
         "coalesced_capacity_beats_per_message": best(n0, k_hi) > best(n0, 1),
         "workers": n0, "k": k_hi,
+        # the documented eligibility contract held (check_eligibility
+        # _matrix raised otherwise); recorded so the trajectory shows it
+        "flat_eligible": sorted(n for n in matrix if matrix[n]["flat"]),
     }
     if "flat" in paths:
         claims["flat_over_tree_capacity_x"] = (
             _cap(n0, k_hi, "flat") / _cap(n0, k_hi, "tree"))
+    # per-algorithm batched-kernel margin (the DC/gap-aware family rides
+    # the same flat path since PR 4)
+    claims["flat_over_tree_capacity_x_by_algo"] = {
+        a: _cap(n0, k_hi, "flat", algo=a) / _cap(n0, k_hi, "tree", algo=a)
+        for a in args.algos if "flat" in _paths_for(a)
+    }
+    if args.sched and "flat" in paths:
+        claims["sched_flat_over_tree_capacity_x"] = (
+            _cap(n0, k_hi, "flat", sched=True)
+            / _cap(n0, k_hi, "tree", sched=True))
     if "kernel" in paths and "flat" in paths:
         # the PR-2 acceptance number: ONE batched kernel vs PR 1's k
         # sequential per-message kernel rounds, same coalesce window

@@ -102,20 +102,22 @@ def batched_update_row(rows: int, n_workers: int, k: int):
             hats.append(hat)
         return theta, v, v0, jnp.stack(hats)
 
+    vscales = jnp.ones((k,))
     seq = jax.jit(sequential)
     bat = jax.jit(lambda t, vv, s, gg: flat_master_update_batch_ref(
-        t, vv, s, None, gg, ids, lrs, gammas, cgs, nesterov=False))
+        t, vv, s, None, None, None, gg, ids, lrs, lrs, gammas, cgs,
+        vscales, nesterov=False))
     t_seq = _time(seq, theta, v, v0, g)
     t_bat = _time(bat, theta, v, v0, g)
 
     # interpret-mode correctness of the batched Pallas kernel
     outs_k = flat_master_update_batch_2d(
-        theta, v, v0, None, g, ids, lrs, gammas, cgs, nesterov=False,
-        interpret=True)
+        theta, v, v0, None, None, g, ids, lrs, lrs, gammas, cgs, vscales,
+        nesterov=False, interpret=True)
     outs_r = bat(theta, v, v0, g)
     err = max(float(jnp.max(jnp.abs(a - b)))
-              for a, b in zip(outs_k[:3] + (outs_k[4],),
-                              outs_r[:3] + (outs_r[4],)))
+              for a, b in zip(outs_k[:3] + (outs_k[5],),
+                              outs_r[:3] + (outs_r[6],)))
 
     p_bytes = np.dtype(np.float32).itemsize * rows * 128
     # sequential fused rounds: per message read+write theta, v_i, v0 and

@@ -11,21 +11,29 @@ batch instead of k of them.
 
 On top of coalescing sit two kernel paths:
 
-* **flat** (default when ``use_kernel``): the whole per-worker-momentum
-  family (dana-zero, multi-asgd, dana-slim, nag-asgd, dana-nadam) runs on
-  flat (R, 128) state packed ONCE at init — ``repro.kernels.flat_update``
-  applies all k drained messages in a single batched kernel (Pallas on
-  TPU, bit-identical jnp reference elsewhere).  No per-call, per-leaf
-  padding; pytrees only at the edges (incoming grads, outgoing views).
-* **legacy tree kernel** (``flat=False``, DANA-Zero only): PR 1's
-  per-message ``dana_update`` routing — k sequential kernel rounds inside
-  the fused jit, re-padding every leaf per call.  Kept as the benchmark
-  baseline for the batched path.
+* **flat** (the default whenever ``use_kernel``): the whole flat family
+  — per-worker momentum (dana-zero, multi-asgd, dana-slim, nag-asgd,
+  dana-nadam) plus the sent-snapshot members (dc-asgd, dana-dc,
+  ga-asgd) — runs on flat (R, 128) state packed ONCE at init;
+  ``repro.kernels.flat_update`` applies all k drained messages in a
+  single batched kernel (Pallas on TPU, bit-identical jnp reference
+  elsewhere; gap-aware runs the two-pass reference on every backend).
+  Moving lr schedules are fed in as per-message lr(t)/lr(t+1) scalars
+  with the lazy momentum-correction rescale, so the flat pass matches
+  the algorithm path's receive->send bit-for-bit for the elementwise
+  family, schedules included (tested).  No per-call, per-leaf padding;
+  pytrees only at the edges (incoming grads, outgoing views).
+* **legacy tree kernel** (explicit ``flat=False``, DANA-Zero only): PR
+  1's per-message ``dana_update`` routing — k sequential kernel rounds
+  inside the fused jit, re-padding every leaf per call.  Kept ONLY as
+  the benchmark cross-check baseline for the batched path; it still
+  uses lr(t) for the look-ahead where the algorithm's send would use
+  lr(t+1).
 
-Both kernel paths use lr(t) for the look-ahead where the algorithm's send
-would use lr(t+1); the flat path additionally skips the momentum
--correction rescale, so it requires a constant learning rate (enforced) —
-under which both are bit-identical to the algorithm path (tested).
+When the fused batch would cross an eval boundary, the serve loop
+splits it there, so evals always observe the state at exactly a
+multiple of ``eval_every`` applied messages — the same watermark on
+every shard of a sharded master (cross-shard snapshot consistency).
 
 When one master still bounds throughput, ``repro.cluster.sharded``
 splits the SAME flat buffers into S row-range shard servers whose serve
@@ -43,7 +51,6 @@ import numpy as np
 
 from ..core.algorithms import Algorithm, DanaZero
 from ..core.metrics import History
-from ..core.schedules import schedule_is_constant
 from ..core.types import (tree_gap, tree_index, tree_l2, tree_scale,
                           tree_set_index)
 from ..kernels.dana_update import dana_master_update
@@ -63,8 +70,17 @@ def run_serve_loop(server):
     messages) -> apply fault reordering to the accepted work -> chunk to
     the warmed power-of-two fused variants -> reply to pulls -> reject
     overflow.  ``server`` provides mailbox/stop/total/applied/coalesce/
-    injector plus ``_apply(chunk)`` and ``_pull_reply(msg)``; errors land
-    on ``server.error`` and raise the stop flag.
+    injector/eval_boundary plus ``_apply(chunk)`` and
+    ``_pull_reply(msg)``; errors land on ``server.error`` and raise the
+    stop flag.
+
+    Chunks additionally never straddle an eval boundary
+    (``server.eval_boundary``, 0 when no eval is configured): evals run
+    on the post-chunk state, so aligning chunk ends with multiples of
+    ``eval_every`` makes every eval observe the state at EXACTLY its
+    applied-count watermark — on a sharded master, every shard snapshots
+    at the same watermark even when their drain batches differ
+    (cross-shard eval snapshot consistency in live modes).
     """
     msgs: list[GradMsg] = []
     try:
@@ -82,8 +98,13 @@ def run_serve_loop(server):
             while work:
                 # pull filtering / end-of-run truncation can leave a
                 # non-power-of-two batch; chunk it back to the warmed
-                # fused variants so no compile lands mid-run
-                k = 1 << (min(len(work), server.coalesce).bit_length() - 1)
+                # fused variants so no compile lands mid-run (and never
+                # across an eval watermark, see docstring)
+                lim = min(len(work), server.coalesce)
+                bnd = server.eval_boundary
+                if bnd:
+                    lim = min(lim, bnd - server.applied % bnd)
+                k = 1 << (lim.bit_length() - 1)
                 chunk, work = work[:k], work[k:]
                 server.coalesce_counts[k] = \
                     server.coalesce_counts.get(k, 0) + 1
@@ -121,11 +142,10 @@ class Master:
         self._flat_state: dict | None = None
         if use_kernel:
             if flat is None:
-                # the flat path requires a constant lr; DANA-Zero with a
-                # moving schedule keeps PR 1's legacy per-message kernel
-                # (which applies momentum correction in tree space)
-                flat = (schedule_is_constant(algo.schedule)
-                        or type(algo) is not DanaZero)
+                # flat is the universal kernel substrate (schedules
+                # included); the legacy per-message dana_update routing
+                # survives only as an explicit flat=False baseline
+                flat = True
             if flat:
                 if not kernel_eligible(algo):
                     raise ValueError(f"use_kernel=True but {algo.name!r} "
@@ -156,9 +176,14 @@ class Master:
             # flat mode keeps the WIRE format flat too: workers receive
             # (R, 128) views and push (R, 128) gradients (runtime wraps
             # their grad_fn with unpack/pack), so the master thread never
-            # touches a pytree on the hot path
-            self._flat_send_jit = jax.jit(self._flat_algo._view_flat)
+            # touches a pytree on the hot path.  send_flat returns the
+            # (possibly) updated state: the sent-snapshot family
+            # refreshes worker i's slab row on every pull.
+            self._flat_send_jit = jax.jit(self._flat_algo.send_flat)
         self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
+        # fused chunks never straddle a multiple of this applied count
+        # (0 = unconstrained): evals observe exact watermark states
+        self.eval_boundary = self.eval_every if eval_fn is not None else 0
         # time source for History rows (virtual in deterministic/paced
         # modes, wall-clock seconds in free mode)
         self._time_fn = time_fn or (lambda m: m.t_send)
@@ -193,7 +218,9 @@ class Master:
         """Initial parameter pull for worker i (call in order 0..n-1 from
         ONE thread before workers start — mirrors the engine's warm-up)."""
         if self.state_is_flat:
-            return self._flat_send_jit(self._flat_state), self._step
+            view, self._flat_state = self._flat_send_jit(self._flat_state,
+                                                         jnp.int32(i))
+            return view, self._step
         view, self._tree_state = self._send_jit(self._tree_state,
                                                 jnp.int32(i))
         return view, self._step
@@ -350,7 +377,8 @@ class Master:
 
     def _pull_reply(self, m: GradMsg):
         if self.state_is_flat:
-            view = self._flat_send_jit(self._flat_state)
+            view, self._flat_state = self._flat_send_jit(
+                self._flat_state, jnp.int32(m.worker_id))
         else:
             view, self._tree_state = self._send_jit(self._tree_state,
                                                     jnp.int32(m.worker_id))

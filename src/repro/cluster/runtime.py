@@ -16,10 +16,11 @@ from typing import Any, Callable
 
 import jax
 
+import numpy as np
+
 from ..core.algorithms import SSGD, Algorithm
 from ..core.gamma import GammaModel
 from ..core.metrics import History
-from ..core.schedules import schedule_is_constant
 from ..core.types import Pytree
 from ..kernels.flat_update import kernel_eligible
 from .clock import VirtualClock
@@ -85,15 +86,15 @@ def run_cluster(
     sharded = cfg.shards > 1
     use_kernel = cfg.use_kernel
     if use_kernel is None:
-        # auto-routing must be numerically silent: the flat fused path
-        # uses lr(t) for the look-ahead where the algorithm path uses
-        # lr(t+1) and skips the momentum-correction rescale, so only
-        # enable it when the schedule cannot move between steps (constant
-        # lr); explicit use_kernel=True opts into the documented deviation.
+        # auto-routing is numerically silent for the elementwise family:
+        # the flat fused path feeds per-message lr(t)/lr(t+1) scalars and
+        # the lazy momentum-correction rescale into the kernel, so it
+        # reproduces the algorithm path bit-for-bit, moving schedules
+        # included (gap-aware agrees to reduction-order tolerance).
         # The sharded master exists only on the flat path, so shards > 1
         # forces it (ShardedMaster rejects ineligible algorithms itself).
-        use_kernel = sharded or (not deterministic and kernel_eligible(algo)
-                                 and schedule_is_constant(algo.schedule))
+        use_kernel = sharded or (not deterministic
+                                 and kernel_eligible(algo))
     if sharded and not use_kernel:
         raise ValueError("shards > 1 requires the flat kernel master "
                          "(use_kernel must not be False)")
@@ -264,4 +265,13 @@ def run_cluster(
         )
         if sharded:
             stats_out["shard_applied"] = master.shard_applied
+        if master.state_is_flat:
+            fa = master._flat_algo
+            if fa.lane is not None:
+                # staleness signal from the flat scalar lane: age (in
+                # master updates) of each worker's sent snapshot
+                flat = (master.shards_[0].state if sharded
+                        else master._flat_state)
+                stats_out["sent_staleness"] = [
+                    float(x) for x in np.asarray(fa.staleness(flat))]
     return history

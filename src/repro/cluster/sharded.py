@@ -32,10 +32,24 @@ Cross-shard aggregation happens OFF the hot path:
   a message are in (shard 0 carries step/lag/time).
 * eval — each shard snapshots its theta slice when ITS applied count
   crosses an eval boundary; the eval runs on the assembled full vector
-  once all S slices for that boundary exist.  In deterministic mode this
-  is exactly the engine's eval point; in live modes the slices may come
-  from different message orders (cross-shard snapshot consistency is a
-  known follow-up, see ROADMAP).
+  once all S slices for that boundary exist.  The shared serve loop
+  never lets a fused chunk straddle an eval boundary, so every shard
+  snapshots the state at EXACTLY the same applied-count watermark even
+  when their drain batches differ (in deterministic mode this is
+  exactly the engine's eval point; under reorder injection the orders
+  may differ but the message SET at the watermark is identical).
+
+One family member needs cross-shard data ON the hot path: gap-aware
+(ga-asgd) scales each gradient by the norm of ``theta - sent_i`` over
+ALL rows.  Its shards run at coalesce=1 and rendezvous per message in a
+``_NormExchange``: each shard publishes its rows' partial ``sum d^2``,
+reads back the shard-ordered sum, applies, then exchanges the update
+-norm partial the same way for the ``avg_step`` EMA.  Every shard sees
+the identical combined norms, so their scalar trajectories stay equal —
+but the partial-sum reduction order differs from the single master's
+full-buffer sum, so sharded gap-aware matches the single flat master to
+float tolerance, not bit-exactly (the elementwise family stays
+bit-exact; see ``eligibility_matrix``).
 
 Fault injection is per shard: each server owns a ``FaultInjector`` with
 a shard-seeded reorder substream (``FaultPlan.reorder_shards`` confines
@@ -62,6 +76,46 @@ from .mailbox import FanoutMailbox, GradMsg, Mailbox, Reply
 from .master import run_serve_loop
 
 
+class _NormExchange:
+    """Per-message cross-shard scalar reduction for the gap-aware hot
+    path: shard ``sid`` publishes its f32 partial for sequence number
+    ``seq`` (its applied count — identical across shards, the fan-out is
+    atomic FIFO) and blocks until all S partials are in; every shard
+    reads back the SAME shard-ordered f32 sum, so their downstream
+    scalar trajectories (penalty, avg_step) are bit-identical to each
+    other.  Stop-aware: a cluster shutdown aborts waiters instead of
+    hanging them."""
+
+    def __init__(self, shards: int, stop: threading.Event):
+        self.shards = shards
+        self.stop = stop
+        self._cond = threading.Condition()
+        self._slots: dict[int, dict[int, float]] = {}
+        self._totals: dict[int, list] = {}      # seq -> [total, readers]
+
+    def combine(self, sid: int, seq: int, partial: float) -> float:
+        with self._cond:
+            slot = self._slots.setdefault(seq, {})
+            slot[sid] = partial
+            if len(slot) == self.shards:
+                total = np.float32(0.0)         # f32, shard order: every
+                for s in range(self.shards):    # shard computes the same
+                    total = np.float32(total + np.float32(slot[s]))
+                self._totals[seq] = [float(total), self.shards]
+                self._cond.notify_all()
+            while seq not in self._totals:
+                if self.stop.is_set():
+                    raise RuntimeError(
+                        "norm exchange aborted: cluster stopping")
+                self._cond.wait(timeout=0.05)
+            entry = self._totals[seq]
+            entry[1] -= 1
+            if entry[1] == 0:                   # last reader cleans up
+                del self._totals[seq]
+                del self._slots[seq]
+            return entry[0]
+
+
 class _ShardServer:
     """One row-range shard: a lean single-threaded master over rows
     [r0, r1).  The serve loop mirrors ``Master.serve`` (drain -> reorder
@@ -83,10 +137,19 @@ class _ShardServer:
         self.total = owner.total
         self.coalesce = owner.coalesce
         self.telemetry = owner.record_telemetry
+        # fused chunks never straddle an eval watermark (see
+        # master.run_serve_loop): all S shards snapshot at the same
+        # applied counts even when their drain batches differ
+        self.eval_boundary = (owner.eval_every
+                              if owner._eval_jit is not None else 0)
         self.applied = 0
         self._step = 0
         self._fused: dict = {}
-        self._view_jit = jax.jit(self.fa._view_flat)
+        self._send_jit = jax.jit(self.fa.send_flat)
+        if owner._gap_ex is not None:
+            self._gap_partial_jit = jax.jit(self.fa.gap_partial)
+            self._gap_apply_jit = jax.jit(self.fa.apply_gap_message)
+            self._gap_finish_jit = jax.jit(self.fa.finish_gap_message)
         self.coalesce_counts: dict[int, int] = {}
         self.busy_s = 0.0
         self.error: BaseException | None = None
@@ -119,6 +182,16 @@ class _ShardServer:
     def warm(self):
         zero = jnp.zeros_like(self.state["theta"])
         view = self.state["theta"]
+        if self.owner._gap_ex is not None:
+            i0 = jnp.int32(0)
+            self._gap_partial_jit(self.state, i0)
+            out = self._gap_apply_jit(self.state, i0, zero,
+                                      jnp.float32(0.0),
+                                      view if self.telemetry else None)
+            st = self._gap_finish_jit(out[0], jnp.float32(0.0), out[3],
+                                      out[4])
+            jax.block_until_ready(st["theta"])
+            return
         k = 1
         while k <= self.coalesce:
             fn = self._get_fused(k, self.telemetry)
@@ -130,7 +203,41 @@ class _ShardServer:
             jax.block_until_ready(jax.tree.leaves(out[0])[0])
             k *= 2
 
+    def _apply_gap(self, work: list):
+        """Gap-aware shard apply: one message, two norm exchanges (see
+        module docstring).  The sharded master clamps coalesce to 1 for
+        gap-aware members, so ``work`` is always a single message."""
+        (m,) = work
+        i = jnp.int32(m.worker_id)
+        telemetry = self.telemetry
+        seq = self.applied
+        partial = float(self._gap_partial_jit(self.state, i))
+        gap2 = self.owner._gap_ex.combine(self.sid, seq, partial)
+        st, hat, vn2, lr, vs, d2, g2 = self._gap_apply_jit(
+            self.state, i, m.grad, jnp.float32(gap2),
+            m.view if telemetry else None)
+        vn2_t = self.owner._vn_ex.combine(self.sid, seq, float(vn2))
+        self.state = self._gap_finish_jit(st, jnp.float32(vn2_t), lr, vs)
+        t0 = self._step
+        self._step = t0 + 1
+        self.applied += 1
+        if self.sid == 0 and self.applied == self.owner._steady_mark:
+            self.owner.steady_t = time.perf_counter()
+        if telemetry:
+            m.group.add_telemetry(
+                self.sid, worker=m.worker_id, step=t0 + 1,
+                lag=t0 - m.view_step, t=self.owner._time_fn(m),
+                d2=float(d2), g2=float(g2))
+        m.respond(Reply(view=hat, step=t0 + 1))
+        if (self.applied % self.owner.eval_every == 0
+                or self.applied == self.total):
+            self.owner._eval_contribute(self.sid, self.applied,
+                                        self.state["theta"],
+                                        self.owner._time_fn(m))
+
     def _apply(self, work: list):
+        if self.owner._gap_ex is not None:
+            return self._apply_gap(work)
         k = len(work)
         telemetry = self.telemetry
         fn = self._get_fused(k, telemetry)
@@ -168,7 +275,9 @@ class _ShardServer:
                                         self.state["theta"], t_ev)
 
     def _pull_reply(self, m: GradMsg):
-        m.respond(Reply(view=self._view_jit(self.state), step=self._step))
+        view, self.state = self._send_jit(self.state,
+                                          jnp.int32(m.worker_id))
+        m.respond(Reply(view=view, step=self._step))
 
     # -- shard serve loop -------------------------------------------------
     def serve(self):
@@ -187,7 +296,9 @@ class ShardedMaster:
     ``step`` / ``serve`` / ``warm`` / ``reject_pending``), but workers
     talk to it through ``frontdoor`` (a ``FanoutMailbox``) and the wire
     format is the range-ordered tuple of row slices.  Requires the flat
-    kernel path (kernel-eligible algorithm + constant learning rate).
+    kernel path (a kernel-eligible algorithm; lr schedules are fine —
+    the fused pass feeds per-message lr(t)/lr(t+1) + the lazy momentum
+    -correction rescale, see ``repro.kernels.flat_update``).
     """
 
     def __init__(self, algo: Algorithm, state: dict, *, shards: int,
@@ -206,7 +317,7 @@ class ShardedMaster:
         if injectors is not None and len(injectors) != shards:
             raise ValueError("need one injector per shard")
         self.algo = algo
-        self._flat_algo = FlatAlgorithm(algo, use_pallas)  # checks schedule
+        self._flat_algo = FlatAlgorithm(algo, use_pallas)
         flat = self._flat_algo.adopt(state)
         self.spec = self._flat_algo.spec
         self.ranges = self.spec.row_ranges(shards)
@@ -216,6 +327,13 @@ class ShardedMaster:
         self.stop = stop
         self.total = total_grads
         self.coalesce = max(1, coalesce)
+        # gap-aware members exchange two global norms per message across
+        # shards, so their shards apply one message at a time
+        self._gap_ex = self._vn_ex = None
+        if self._flat_algo.fam.gap_aware:
+            self.coalesce = 1
+            self._gap_ex = _NormExchange(shards, stop)
+            self._vn_ex = _NormExchange(shards, stop)
         self.record_telemetry = record_telemetry
         self.eval_every = max(1, eval_every)
         self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
@@ -260,9 +378,14 @@ class ShardedMaster:
             [srv.state["theta"] for srv in self.shards_]))
 
     def initial_view(self, i: int):
-        """Initial pull: the range-ordered tuple of shard view slices."""
-        return tuple(srv._view_jit(srv.state)
-                     for srv in self.shards_), self.step
+        """Initial pull: the range-ordered tuple of shard view slices
+        (each shard refreshes worker i's sent-snapshot rows, mirroring
+        the single master's send)."""
+        views = []
+        for srv in self.shards_:
+            view, srv.state = srv._send_jit(srv.state, jnp.int32(i))
+            views.append(view)
+        return tuple(views), self.step
 
     def warm(self):
         for srv in self.shards_:

@@ -6,8 +6,7 @@ from .engine import SimulationConfig, run_simulation
 from .flat import FlatSpec
 from .gamma import GammaModel
 from .metrics import History
-from .schedules import (Schedule, constant, momentum_correction,
-                        schedule_is_constant)
+from .schedules import Schedule, constant, momentum_correction
 from .types import HyperParams, tree_gap
 
 __all__ = [
@@ -15,5 +14,5 @@ __all__ = [
     "DanaSlim", "DanaZero", "MultiASGD", "NagASGD", "SSGD", "YellowFin",
     "make_algorithm", "SimulationConfig", "run_simulation", "FlatSpec",
     "GammaModel", "History", "Schedule", "constant", "momentum_correction",
-    "schedule_is_constant", "HyperParams", "tree_gap",
+    "HyperParams", "tree_gap",
 ]

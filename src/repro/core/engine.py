@@ -34,8 +34,11 @@ class SimulationConfig:
     record_telemetry: bool = True
     # Run the master hot path on flat (R, 128) state through the batched
     # fused kernel (repro.kernels.flat_update; Pallas on TPU, bit-identical
-    # jnp reference elsewhere).  Requires a kernel-eligible algorithm and a
-    # constant learning rate — raises otherwise.
+    # jnp reference elsewhere).  Covers the whole flat family — per-worker
+    # momentum, the sent-snapshot members (dc-asgd, dana-dc, ga-asgd), and
+    # moving lr schedules (per-message lr(t)/lr(t+1) + lazy momentum
+    # -correction feed) — and raises for non-eligible algorithms (see
+    # repro.kernels.flat_update.eligibility_matrix).
     use_kernel: bool = False
 
 

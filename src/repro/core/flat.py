@@ -26,6 +26,20 @@ row space into S contiguous ranges and ``FlatSubSpec`` packs/extracts
 exactly one range, which is what the row-sharded multi-master
 (``repro.cluster.sharded``) builds on — concatenating the S shard slices
 in range order reconstructs the single-master buffer bit-for-bit.
+
+Two kinds of per-worker state live beside theta:
+
+* **slabs** — (N, rows, 128) stacks sharing theta's per-row layout
+  (``pack_stacked``): the momentum slab ``v`` and, for the
+  delay-compensated / gap-aware family, the ``sent`` snapshot slab
+  (worker i's row r describes the same parameters as theta's row r, so
+  ``theta - sent[i]`` is a plain elementwise subtract and slabs shard by
+  the same row ranges as theta);
+* **scalar lanes** — ``ScalarLane``: one 128-lane f32 row per worker
+  holding a handful of *named* scalars (staleness signals such as the
+  master step a ``sent`` snapshot was taken at).  Lanes have no row
+  dimension to shard; the sharded master copies them whole per shard,
+  exactly like the t / lr_prev / vscale scalars.
 """
 from __future__ import annotations
 
@@ -134,6 +148,54 @@ class FlatSpec:
         ((rows, 128) or (N, rows, 128) pieces; inverse of per-shard
         ``FlatSubSpec.take``)."""
         return jnp.concatenate(list(pieces), axis=-2)
+
+
+class ScalarLane:
+    """Named per-worker scalars packed as one (N, 128) f32 row per worker.
+
+    Slot j of worker i's lane row holds the scalar named ``names[j]``;
+    lanes beyond ``len(names)`` are zero (the flat zero-padding
+    invariant, so lane norms equal the packed columns' norms).  The lane
+    is deliberately NOT part of the row space: every shard of a
+    row-sharded master carries a full copy (all shards see every message,
+    so their lane trajectories are identical — like vscale / t).
+    """
+
+    def __init__(self, names):
+        names = tuple(names)
+        if not 0 < len(names) <= LANES:
+            raise ValueError(f"need 1..{LANES} scalar names, "
+                             f"got {len(names)}")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate scalar names in {names}")
+        self.names = names
+        self.index = {n: j for j, n in enumerate(names)}
+
+    def init(self, num_workers: int, **values) -> jax.Array:
+        """Zeroed (N, 128) lane; ``values`` seeds named columns with a
+        scalar or an (N,) vector."""
+        lane = jnp.zeros((num_workers, LANES), jnp.float32)
+        for name, v in values.items():
+            lane = lane.at[:, self.index[name]].set(
+                jnp.asarray(v, jnp.float32))
+        return lane
+
+    def pack(self, cols: dict) -> jax.Array:
+        """{name: (N,) array} -> (N, 128) f32 lane (zero-padded)."""
+        n = next(iter(cols.values())).shape[0]
+        return self.init(n, **cols)
+
+    def unpack(self, lane: jax.Array) -> dict:
+        """(N, 128) lane -> {name: (N,) f32 column}."""
+        return {n: lane[:, j] for j, n in enumerate(self.names)}
+
+    def get(self, lane: jax.Array, name: str) -> jax.Array:
+        return lane[:, self.index[name]]
+
+    def set_at(self, lane: jax.Array, name: str, i, value) -> jax.Array:
+        """Lane with worker i's ``name`` slot <- value (dynamic i ok)."""
+        return lane.at[i, self.index[name]].set(
+            jnp.asarray(value, jnp.float32))
 
 
 class FlatSubSpec:

@@ -49,20 +49,6 @@ def constant(lr: float) -> Schedule:
     return Schedule(base_lr=lr)
 
 
-def schedule_is_constant(schedule) -> bool:
-    """True iff ``schedule`` provably returns the same lr for every t.
-
-    Used to gate the fused flat/kernel master paths (their look-ahead uses
-    lr(t) where the algorithm's send would use lr(t+1), and they skip the
-    momentum-correction rescale — both no-ops only under a constant lr).
-    Custom callables are conservatively treated as moving.
-    """
-    if not isinstance(schedule, Schedule):
-        return False
-    warms = schedule.warmup_steps > 0 and schedule.num_workers > 1
-    return not warms and not schedule.milestones
-
-
 def momentum_correction(v, lr_new, lr_prev):
     """Goyal et al. (2017) momentum correction: when the learning rate
     changes between updates, rescale the momentum buffer by eta_new/eta_prev

@@ -1,7 +1,9 @@
-from .ops import (FamilySpec, FlatAlgorithm, family_spec_for,
+from .ops import (FLAT_ELIGIBLE, SENT_STEP, FamilySpec, FlatAlgorithm,
+                  eligibility_matrix, family_spec_for,
                   flat_master_update_batch, kernel_eligible, merge_flat,
-                  pack_state, slice_flat, unpack_state)
+                  pack_state, shard_bitexact, slice_flat, unpack_state)
 
-__all__ = ["FamilySpec", "FlatAlgorithm", "family_spec_for",
+__all__ = ["FLAT_ELIGIBLE", "SENT_STEP", "FamilySpec", "FlatAlgorithm",
+           "eligibility_matrix", "family_spec_for",
            "flat_master_update_batch", "kernel_eligible", "merge_flat",
-           "pack_state", "slice_flat", "unpack_state"]
+           "pack_state", "shard_bitexact", "slice_flat", "unpack_state"]

@@ -7,19 +7,34 @@ This kernel applies the whole coalesced batch in one grid:
     grid = (row_tiles, k)          # messages innermost
 
 For a fixed row tile the k messages run back-to-back while theta / v / v0
-/ u2 stay resident in VMEM — the HBM traffic for the master state drops
-from O(k * state) to O(state) + O(k * grad) per batch, which is the whole
-game for a bandwidth-bound master (paper App. C.1).  Output blocks whose
-index map ignores the message axis (theta, v, v0, u2) are revisited across
-the inner loop, the standard Pallas accumulation pattern; the incoming
-gradients g (k,R,128) and outgoing views hat (k,R,128) stream.
+/ u2 / sent stay resident in VMEM — the HBM traffic for the master state
+drops from O(k * state) to O(state) + O(k * grad) per batch, which is the
+whole game for a bandwidth-bound master (paper App. C.1).  Output blocks
+whose index map ignores the message axis (theta, v, v0, u2, sent) are
+revisited across the inner loop, the standard Pallas accumulation
+pattern; the incoming gradients g (k,R,128) and outgoing views hat
+(k,R,128) stream.
 
-Per-worker momentum lives as ONE (N, R, 128) slab; the row for worker
-ids[j] is selected with a dynamic slice inside the kernel, so duplicate
-worker ids within a batch chain correctly (message j+1 sees j's update).
+Per-worker slabs (momentum v and, for the delay-compensated family, the
+``sent`` snapshot) live as (N, R, 128) stacks; the row for worker ids[j]
+is selected with a dynamic slice inside the kernel, so duplicate worker
+ids within a batch chain correctly (message j+1 sees j's update AND j's
+refreshed snapshot).
 
-Scalars ride in as a (4, k) f32 tile (worker id, lr, gamma, grad-coef);
-ids are exact in f32 below 2^24 workers.
+Scalars ride in as an (8, k) f32 tile — worker id, lr(t+j), lr(t+j+1),
+gamma, grad-coef, momentum-correction vscale (rows 6-7 padding); ids are
+exact in f32 below 2^24 workers.  Feeding the schedule as per-message
+scalars is what lifts the constant-lr restriction: the kernel applies
+with lr(t+j), looks ahead with lr(t+j+1), and folds the lazy Goyal
+rescale in as the precomputed running ``vscale`` product.
+
+The kernel covers exactly the ELEMENTWISE family (incl. delay
+compensation, which is elementwise in delta).  The gap-aware penalty
+needs a norm over every row of delta before any row can be updated — a
+two-pass reduce-then-apply that fights this grid's tile-resident
+revisiting — so ``ops.flat_master_update_batch`` routes gap-aware
+algorithms to the jnp reference (jitted; XLA fuses its reductions) on
+every backend.
 """
 from __future__ import annotations
 
@@ -31,20 +46,22 @@ from jax.experimental import pallas as pl
 
 BLOCK_ROWS = 256
 LANES = 128
-# VMEM budget for the (N, block_rows, 128) momentum slab: in + out copies
-# at 4 bytes, keep N * block_rows under ~8k rows (~8 MB total).
+SCAL_ROWS = 8              # (8, k) scalar tile: f32 sublane alignment
+# VMEM budget for the (N, block_rows, 128) slabs: in + out copies at 4
+# bytes per slab, keep n_slabs * N * block_rows under ~8k rows (~8 MB).
 _MAX_SLAB_ROWS = 8192
 
 
-def _pick_block_rows(r: int, n: int) -> int:
-    cap = min(BLOCK_ROWS, (_MAX_SLAB_ROWS // max(n, 1)) // 8 * 8)
+def _pick_block_rows(r: int, n: int, n_slabs: int = 1) -> int:
+    cap = min(BLOCK_ROWS,
+              (_MAX_SLAB_ROWS // max(n * n_slabs, 1)) // 8 * 8)
     if cap < 8:
-        # even one 8-row tile of the (N, block_r, 128) slab would blow the
-        # VMEM budget — don't silently lower an unloadable kernel
+        # even one 8-row tile of the (N, block_r, 128) slabs would blow
+        # the VMEM budget — don't silently lower an unloadable kernel
         raise ValueError(
-            f"{n} workers exceed the batched kernel's VMEM slab budget "
-            f"({_MAX_SLAB_ROWS} rows); shard the master or use the tree "
-            f"path")
+            f"{n} workers x {n_slabs} slab(s) exceed the batched "
+            f"kernel's VMEM slab budget ({_MAX_SLAB_ROWS} rows); shard "
+            f"the master or use the tree path")
     if r <= cap:
         return r
     for d in range(cap, 0, -1):
@@ -54,25 +71,31 @@ def _pick_block_rows(r: int, n: int) -> int:
 
 
 def _make_kernel(nesterov: bool, track_v0: bool, adaptive: bool,
-                 b2: float, eps: float, telemetry: bool):
+                 track_sent: bool, b2: float, eps: float,
+                 dc_lambda: float | None, sent_view: bool,
+                 telemetry: bool):
     def kernel(*refs):
         it = iter(refs)
         scal_ref = next(it)
         theta_ref, v_ref = next(it), next(it)
         v0_ref = next(it) if track_v0 else None
         u2_ref = next(it) if adaptive else None
+        sent_ref = next(it) if track_sent else None
         g_ref = next(it)
         theta_o, v_o = next(it), next(it)
         v0_o = next(it) if track_v0 else None
         u2_o = next(it) if adaptive else None
+        sent_o = next(it) if track_sent else None
         hat_o = next(it)
         pre_o = next(it) if telemetry else None
 
         j = pl.program_id(1)
         i = scal_ref[0, j].astype(jnp.int32)
         lr = scal_ref[1, j]
-        gamma = scal_ref[2, j]
-        cg = scal_ref[3, j]
+        lrn = scal_ref[2, j]
+        gamma = scal_ref[3, j]
+        cg = scal_ref[4, j]
+        vs = scal_ref[5, j]
 
         @pl.when(j == 0)
         def _seed_state():
@@ -82,49 +105,70 @@ def _make_kernel(nesterov: bool, track_v0: bool, adaptive: bool,
                 v0_o[...] = v0_ref[...]
             if adaptive:
                 u2_o[...] = u2_ref[...]
+            if track_sent:
+                sent_o[...] = sent_ref[...]
 
         theta = theta_o[...]
         if telemetry:
             pre_o[...] = theta[None]            # theta BEFORE message j
         gj = g_ref[...][0]                       # (block_r, 128)
         vi = v_o[pl.ds(i, 1), :, :][0]           # dynamic worker row
-        v_new = gamma * vi + cg * gj
+        if track_sent:
+            si = sent_o[pl.ds(i, 1), :, :][0]
+            delta = theta - si
+            if dc_lambda is not None:
+                gj = gj + dc_lambda * ((gj * gj) * delta)
+        v_new = gamma * vi + cg * ((1.0 / vs) * gj)
         if adaptive:
             u2 = b2 * u2_o[...] + (1 - b2) * gj * gj
             u2_o[...] = u2
             denom = jnp.sqrt(u2) + eps
-        num = (gamma * v_new + cg * gj) if nesterov else v_new
-        if adaptive:
-            theta = theta - lr * (num / denom)
+        if nesterov:
+            num = (gamma * vs) * v_new + cg * gj
+            if adaptive:
+                theta = (-lr) * (num / denom) + theta
+            else:
+                theta = (-lr) * num + theta
         else:
-            theta = theta - lr * num
+            if adaptive:
+                theta = ((-lr) * vs) * (v_new / denom) + theta
+            else:
+                theta = ((-lr) * vs) * v_new + theta
         theta_o[...] = theta
         if track_v0:
             v0 = (v0_o[...] - vi) + v_new
             v0_o[...] = v0
             if adaptive:
-                hat = theta - lr * gamma * v0 / denom
+                hat = theta - ((lrn * gamma) * v0) / denom
             else:
-                hat = theta - lr * gamma * v0
+                hat = (((-lrn) * gamma) * vs) * v0 + theta
         else:
             hat = theta
         hat_o[...] = hat[None]
+        if track_sent:
+            sent_o[pl.ds(i, 1), :, :] = (hat if sent_view else theta)[None]
         v_o[pl.ds(i, 1), :, :] = v_new[None]
 
     return kernel
 
 
 @functools.partial(
-    jax.jit, static_argnames=("nesterov", "b2", "eps", "telemetry",
-                              "interpret"))
-def flat_master_update_batch_2d(theta, v, v0, u2, g, ids, lrs, gammas, cgs,
-                                *, nesterov: bool, b2: float = 0.999,
-                                eps: float = 1e-8, telemetry: bool = False,
+    jax.jit, static_argnames=("nesterov", "b2", "eps", "dc_lambda",
+                              "sent_view", "telemetry", "interpret"))
+def flat_master_update_batch_2d(theta, v, v0, u2, sent, g, ids, lrs,
+                                lrs_next, gammas, cgs, vscales, *,
+                                nesterov: bool, b2: float = 0.999,
+                                eps: float = 1e-8,
+                                dc_lambda: float | None = None,
+                                sent_view: bool = False,
+                                telemetry: bool = False,
                                 interpret: bool = True):
-    """Batched flat master update (see ref.py for the update rule).
+    """Batched flat master update (see ref.py for the update rule; this
+    lowering covers the elementwise family — no gap-aware penalty).
 
-    theta (R,128); v (N,R,128); v0/u2 (R,128) or None; g (k,R,128);
-    ids/lrs/gammas/cgs (k,).  Returns the same 6-tuple as the reference.
+    theta (R,128); v (N,R,128); v0/u2 (R,128) or None; sent (N,R,128) or
+    None; g (k,R,128); ids/lrs/lrs_next/gammas/cgs/vscales (k,).
+    Returns (theta', v', v0', u2', sent', hats, thetas_pre or None).
     """
     r, lanes = theta.shape
     n = v.shape[0]
@@ -132,19 +176,24 @@ def flat_master_update_batch_2d(theta, v, v0, u2, g, ids, lrs, gammas, cgs,
     assert lanes == LANES, f"lane dim must be {LANES}, got {lanes}"
     track_v0 = v0 is not None
     adaptive = u2 is not None
-    block_r = _pick_block_rows(r, n)
+    track_sent = sent is not None
+    block_r = _pick_block_rows(r, n, 2 if track_sent else 1)
     assert r % block_r == 0, (r, block_r)
     grid = (r // block_r, k)
 
-    scal = jnp.stack([ids.astype(jnp.float32),
-                      jnp.asarray(lrs, jnp.float32),
-                      jnp.asarray(gammas, jnp.float32),
-                      jnp.asarray(cgs, jnp.float32)])          # (4, k)
+    scal = jnp.zeros((SCAL_ROWS, k), jnp.float32)
+    scal = scal.at[:6].set(jnp.stack([
+        ids.astype(jnp.float32),
+        jnp.asarray(lrs, jnp.float32),
+        jnp.asarray(lrs_next, jnp.float32),
+        jnp.asarray(gammas, jnp.float32),
+        jnp.asarray(cgs, jnp.float32),
+        jnp.asarray(vscales, jnp.float32)]))           # (8, k)
 
     flat_spec = pl.BlockSpec((block_r, LANES), lambda ri, j: (ri, 0))
     slab_spec = pl.BlockSpec((n, block_r, LANES), lambda ri, j: (0, ri, 0))
     msg_spec = pl.BlockSpec((1, block_r, LANES), lambda ri, j: (j, ri, 0))
-    scal_spec = pl.BlockSpec((4, k), lambda ri, j: (0, 0))
+    scal_spec = pl.BlockSpec((SCAL_ROWS, k), lambda ri, j: (0, 0))
 
     f32 = jnp.float32
     in_specs = [scal_spec, flat_spec, slab_spec]
@@ -162,6 +211,11 @@ def flat_master_update_batch_2d(theta, v, v0, u2, g, ids, lrs, gammas, cgs,
         inputs.append(u2)
         out_specs.append(flat_spec)
         out_shape.append(jax.ShapeDtypeStruct((r, LANES), f32))
+    if track_sent:
+        in_specs.append(slab_spec)
+        inputs.append(sent)
+        out_specs.append(slab_spec)
+        out_shape.append(jax.ShapeDtypeStruct((n, r, LANES), f32))
     in_specs.append(msg_spec)
     inputs.append(g)
     out_specs.append(msg_spec)
@@ -171,7 +225,8 @@ def flat_master_update_batch_2d(theta, v, v0, u2, g, ids, lrs, gammas, cgs,
         out_shape.append(jax.ShapeDtypeStruct((k, r, LANES), f32))
 
     outs = pl.pallas_call(
-        _make_kernel(nesterov, track_v0, adaptive, b2, eps, telemetry),
+        _make_kernel(nesterov, track_v0, adaptive, track_sent, b2, eps,
+                     dc_lambda, sent_view, telemetry),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -183,6 +238,7 @@ def flat_master_update_batch_2d(theta, v, v0, u2, g, ids, lrs, gammas, cgs,
     theta_n, v_n = next(it), next(it)
     v0_n = next(it) if track_v0 else None
     u2_n = next(it) if adaptive else None
+    sent_n = next(it) if track_sent else None
     hats = next(it)
     pres = next(it) if telemetry else None
-    return theta_n, v_n, v0_n, u2_n, hats, pres
+    return theta_n, v_n, v0_n, u2_n, sent_n, hats, pres

@@ -3,8 +3,8 @@
 ``FlatAlgorithm`` wraps a kernel-eligible ``Algorithm`` and executes its
 receive->send hot path on flat (R, 128) buffers (``repro.core.flat``):
 state is packed ONCE at init, every coalesced batch runs as ONE batched
-kernel (Pallas on TPU, the jnp reference elsewhere — bit-identical under
-a constant learning rate), and pytrees only appear at the edges (incoming
+kernel (Pallas on TPU, the jnp reference elsewhere — bit-identical for
+the elementwise family), and pytrees only appear at the edges (incoming
 gradients, outgoing views).
 
 Kernel-eligible algorithms (exact types; subclasses that change the
@@ -16,11 +16,27 @@ update must take the generic tree path):
   nag-asgd     shared momentum == the same kernel with N=1         [Alg. 8]
   dana-nadam   per-worker first moment + m0 sum + shared second
                moment, Nadam-preconditioned look-ahead             [Sec. 7]
+  dc-asgd      + per-worker ``sent`` snapshot slab, delay
+               compensation lam*g^2*(theta - sent_i)               [Alg. 10]
+  dana-dc      DANA-Zero + delay compensation, snapshot = the
+               look-ahead view the worker actually received        [Alg. 7]
+  ga-asgd      + gap penalty 1 + G(theta - sent_i)/avg_step —
+               the one non-elementwise member (global delta norm);
+               runs the two-pass jnp reference on every backend    [App. C]
 
-Eligibility requires a constant learning rate: the fused kernel uses
-lr(t) where the algorithm's send would use lr(t+1), and it skips the
-momentum-correction rescale — both are identities only when the schedule
-cannot move (``schedule_is_constant``).
+Learning-rate schedules are fully supported: the batched pass feeds
+per-message lr(t+j) / lr(t+j+1) scalars plus the running lazy
+momentum-correction ``vscale`` product into the kernel, so the fused
+path reproduces the tree path's receive->send (Goyal correction
+included) bit-for-bit for the elementwise family — there is no
+constant-lr restriction anymore.  Gap-aware agrees to reduction-order
+tolerance (its penalty is a norm over the flat buffer instead of
+leaf-by-leaf).
+
+``eligibility_matrix()`` is the documented contract: which algorithms
+are flat-eligible, shard-eligible, shard-bit-exact, and
+schedule-eligible.  CI asserts it (tests + the bench smoke) so a silent
+eligibility regression fails loudly.
 """
 from __future__ import annotations
 
@@ -29,14 +45,20 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from ...core.flat import FlatSpec
-from ...core.schedules import schedule_is_constant
+from ...core.flat import FlatSpec, ScalarLane
+from ...core.schedules import Schedule
 from .kernel import flat_master_update_batch_2d
 from .ref import flat_master_update_batch_ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# staleness signal slot: the master step worker i's ``sent`` snapshot was
+# taken at (so t - lane[i] is the snapshot's age in master updates)
+SENT_STEP = "sent_step"
+_SENT_LANE = ScalarLane((SENT_STEP,))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,12 +72,24 @@ class FamilySpec:
     grad_coef: float = 1.0       # cg: 1, or (1 - beta1) for Nadam
     b2: float = 0.999
     eps: float = 1e-8
+    sent_key: str | None = None  # per-worker sent-snapshot slab, or None
+    sent_view: bool = False      # snapshot <- view (dana-dc) vs theta
+    dc_lambda: float | None = None   # delay-compensation coefficient
+    gap_aware: bool = False      # GA penalty: global norm over delta
+    gap_ema: float = 0.99        # avg_step EMA coefficient
+    uses_vscale: bool = True     # lazy Goyal rescale (False: dana-nadam)
+
+    @property
+    def elementwise(self) -> bool:
+        """True iff every term is per-row local — the property row
+        sharding and the Pallas lowering rest on."""
+        return not self.gap_aware
 
 
 def family_spec_for(algo) -> FamilySpec | None:
     """FamilySpec for ``algo``, or None if it must take the tree path."""
-    from ...core.algorithms import (DanaNadam, DanaSlim, DanaZero,
-                                    MultiASGD, NagASGD)
+    from ...core.algorithms import (DanaDC, DanaNadam, DanaSlim, DanaZero,
+                                    DCASGD, GapAware, MultiASGD, NagASGD)
     t = type(algo)
     if t is DanaZero:
         return FamilySpec("v", "v0", None, nesterov=False,
@@ -73,7 +107,19 @@ def family_spec_for(algo) -> FamilySpec | None:
         return FamilySpec("m", "m0", "u", nesterov=True,
                           shared_momentum=False,
                           grad_coef=1.0 - algo.hp.momentum,
-                          b2=algo.B2, eps=algo.EPS)
+                          b2=algo.B2, eps=algo.EPS, uses_vscale=False)
+    if t is DCASGD:
+        return FamilySpec("v", None, None, nesterov=False,
+                          shared_momentum=False, sent_key="sent",
+                          dc_lambda=algo.hp.dc_lambda)
+    if t is DanaDC:
+        return FamilySpec("v", "v0", None, nesterov=False,
+                          shared_momentum=False, sent_key="sent",
+                          sent_view=True, dc_lambda=algo.hp.dc_lambda)
+    if t is GapAware:
+        return FamilySpec("v", None, None, nesterov=False,
+                          shared_momentum=False, sent_key="sent",
+                          gap_aware=True, gap_ema=algo.EMA)
     return None
 
 
@@ -82,11 +128,51 @@ def kernel_eligible(algo) -> bool:
     return family_spec_for(algo) is not None
 
 
+def shard_bitexact(algo) -> bool:
+    """True iff the row-sharded master reproduces the single flat master
+    bit-for-bit for ``algo`` (elementwise update rules only: the
+    gap-aware penalty sums per-shard norm partials, which reorders the
+    reduction)."""
+    fam = family_spec_for(algo)
+    return fam is not None and fam.elementwise
+
+
+# the documented flat-eligibility set; CI (tests + the bench smoke)
+# asserts eligibility_matrix() against it so regressions fail loudly
+FLAT_ELIGIBLE = ("dana-dc", "dana-nadam", "dana-slim", "dana-zero",
+                 "dc-asgd", "ga-asgd", "multi-asgd", "nag-asgd")
+
+
+def eligibility_matrix() -> dict[str, dict[str, bool]]:
+    """{algorithm name: {flat, schedule, shard, shard_bitexact}} for the
+    whole registry.
+
+    * ``flat`` — hot path runs on the flat fused kernel;
+    * ``schedule`` — flat execution supports moving lr schedules
+      (per-message lr(t)/lr(t+1) + the lazy vscale rescale in-kernel);
+    * ``shard`` — the row-sharded multi-master supports it (gap-aware
+      rides a per-message cross-shard norm exchange);
+    * ``shard_bitexact`` — sharded == single master bit-for-bit.
+    """
+    from ...core.algorithms import REGISTRY, make_algorithm
+    out = {}
+    for name in sorted(REGISTRY):
+        fam = family_spec_for(make_algorithm(name))
+        out[name] = {
+            "flat": fam is not None,
+            "schedule": fam is not None,
+            "shard": fam is not None,
+            "shard_bitexact": fam is not None and fam.elementwise,
+        }
+    return out
+
+
 # ---------------------------------------------------------------------------
 # state <-> flat buffers
 # ---------------------------------------------------------------------------
 def pack_state(algo, state: dict, spec: FlatSpec | None = None):
-    """Algorithm state dict -> flat dict {theta, v, [v0], [u2], t, ...}."""
+    """Algorithm state dict -> flat dict {theta, v, [v0], [u2], [sent],
+    [wscal], [avg_step], t, ...}."""
     fam = family_spec_for(algo)
     if spec is None:
         spec = FlatSpec.from_tree(state["theta0"])
@@ -100,24 +186,31 @@ def pack_state(algo, state: dict, spec: FlatSpec | None = None):
         flat["v0"] = spec.pack(state[fam.sum_key])
     if fam.u2_key is not None:
         flat["u2"] = spec.pack(state[fam.u2_key])
+    if fam.sent_key is not None:
+        flat["sent"] = spec.pack_stacked(state[fam.sent_key])
+        # staleness lane: every snapshot is as old as the adoption point
+        flat["wscal"] = _SENT_LANE.init(
+            flat["sent"].shape[0], **{SENT_STEP: state["t"]})
+    if fam.gap_aware:
+        flat["avg_step"] = state["avg_step"]
     if "vscale" in state:
         flat["vscale"] = state["vscale"]
     return flat, spec
 
 
-_ROW_KEYS = ("theta", "v", "v0", "u2")   # buffers laid out by flat row
+_ROW_KEYS = ("theta", "v", "v0", "u2", "sent")   # buffers laid out by row
 
 
 def slice_flat(flat: dict, r0: int, r1: int) -> dict:
     """Row-range shard of a flat state dict.
 
     Every buffer keyed in ``_ROW_KEYS`` is sliced to rows [r0, r1) of its
-    (next-to-last) row axis — the (N, R, 128) momentum slab keeps its
-    worker axis — while scalars (t, lr_prev, vscale) are copied.  Because
-    every family update rule is elementwise per row, running the SAME
-    ``FlatAlgorithm.apply_batch`` on the slice advances exactly the rows a
-    shard owns, bit-identically to the full-state call (tested).
-    """
+    (next-to-last) row axis — the (N, R, 128) momentum/sent slabs keep
+    their worker axis — while scalars (t, lr_prev, vscale, avg_step) and
+    the per-worker scalar lane (wscal) are copied.  Because every
+    elementwise family update rule is per row, running the SAME
+    ``FlatAlgorithm.apply_batch`` on the slice advances exactly the rows
+    a shard owns, bit-identically to the full-state call (tested)."""
     return {k: (v[..., r0:r1, :] if k in _ROW_KEYS else v)
             for k, v in flat.items()}
 
@@ -125,10 +218,11 @@ def slice_flat(flat: dict, r0: int, r1: int) -> dict:
 def merge_flat(pieces: list[dict]) -> dict:
     """Reassemble range-ordered shard states into one full flat state.
 
-    Row buffers concatenate along the row axis; scalars are taken from
-    the first shard (every shard applies every message, so their t /
-    lr_prev / vscale trajectories are identical).
-    """
+    Row buffers concatenate along the row axis; scalars and the scalar
+    lane are taken from the first shard (every shard applies every
+    message, so their t / lr_prev / vscale / wscal trajectories are
+    identical; avg_step too — sharded gap-aware feeds every shard the
+    same combined norm)."""
     out = dict(pieces[0])
     for k in _ROW_KEYS:
         if k in out:
@@ -149,6 +243,10 @@ def unpack_state(algo, flat: dict, spec: FlatSpec) -> dict:
         state[fam.sum_key] = spec.unpack(flat["v0"])
     if fam.u2_key is not None:
         state[fam.u2_key] = spec.unpack(flat["u2"])
+    if fam.sent_key is not None:
+        state[fam.sent_key] = spec.unpack_stacked(flat["sent"])
+    if fam.gap_aware:
+        state["avg_step"] = flat["avg_step"]
     if "vscale" in flat:
         state["vscale"] = flat["vscale"]
     return state
@@ -157,19 +255,32 @@ def unpack_state(algo, flat: dict, spec: FlatSpec) -> dict:
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
-def flat_master_update_batch(theta, v, v0, u2, g, ids, lrs, gammas, cgs, *,
-                             nesterov, b2=0.999, eps=1e-8, telemetry=False,
+def flat_master_update_batch(theta, v, v0, u2, sent, avg_step, g, ids,
+                             lrs, lrs_next, gammas, cgs, vscales, *,
+                             nesterov, b2=0.999, eps=1e-8, dc_lambda=None,
+                             sent_view=False, gap_aware=False,
+                             gap_ema=0.99, n_elems=0, telemetry=False,
                              use_pallas=None):
-    """Pallas on TPU, jnp reference elsewhere (bit-identical off-TPU)."""
+    """Pallas on TPU, jnp reference elsewhere (bit-identical off-TPU).
+
+    Gap-aware always runs the reference: its per-message global norm is
+    a two-pass reduce-then-apply that the tile-resident Pallas grid
+    cannot express; the jitted reference lowers to fused XLA reductions
+    on every backend."""
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas:
-        return flat_master_update_batch_2d(
-            theta, v, v0, u2, g, ids, lrs, gammas, cgs, nesterov=nesterov,
-            b2=b2, eps=eps, telemetry=telemetry, interpret=not _on_tpu())
+    if use_pallas and not gap_aware:
+        theta, v, v0, u2, sent, hats, pres = flat_master_update_batch_2d(
+            theta, v, v0, u2, sent, g, ids, lrs, lrs_next, gammas, cgs,
+            vscales, nesterov=nesterov, b2=b2, eps=eps,
+            dc_lambda=dc_lambda, sent_view=sent_view, telemetry=telemetry,
+            interpret=not _on_tpu())
+        return theta, v, v0, u2, sent, avg_step, hats, pres
     return flat_master_update_batch_ref(
-        theta, v, v0, u2, g, ids, lrs, gammas, cgs, nesterov=nesterov,
-        b2=b2, eps=eps, telemetry=telemetry)
+        theta, v, v0, u2, sent, avg_step, g, ids, lrs, lrs_next, gammas,
+        cgs, vscales, nesterov=nesterov, b2=b2, eps=eps,
+        dc_lambda=dc_lambda, sent_view=sent_view, gap_aware=gap_aware,
+        gap_ema=gap_ema, n_elems=n_elems, telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +293,11 @@ class FlatAlgorithm:
     ``repro.core.algorithms.Algorithm`` but the state is the flat dict, so
     the engine and the cluster master can swap it in without changing
     their loops.  Use ``tree_state`` to get the pytree state back.
-    """
+
+    ``send``/``send_flat`` return the (possibly) UPDATED flat state: the
+    sent-snapshot family refreshes worker i's slab row and its staleness
+    lane slot on every send — callers must keep the returned state (the
+    pure-view fast path is ``_view_flat``)."""
 
     def __init__(self, algo, use_pallas: bool | None = None):
         fam = family_spec_for(algo)
@@ -190,17 +305,13 @@ class FlatAlgorithm:
             raise ValueError(
                 f"{algo.name!r} is not kernel-eligible; flat execution "
                 f"covers exactly the per-worker-momentum family")
-        if not schedule_is_constant(algo.schedule):
-            raise ValueError(
-                "flat fused execution requires a constant learning rate "
-                "(the kernel skips momentum correction and uses lr(t) for "
-                "the look-ahead); use the tree path for moving schedules")
         self.algo = algo
         self.fam = fam
         self.name = algo.name
         self.hp = algo.hp
         self.schedule = algo.schedule
         self.use_pallas = use_pallas
+        self.lane = _SENT_LANE if fam.sent_key is not None else None
         self.spec: FlatSpec | None = None
 
     # -- Algorithm API ---------------------------------------------------
@@ -219,12 +330,20 @@ class FlatAlgorithm:
     def tree_state(self, flat: dict) -> dict:
         return unpack_state(self.algo, flat, self.spec)
 
+    def staleness(self, flat: dict):
+        """Per-worker age (in master updates) of the ``sent`` snapshots,
+        from the scalar lane — or None for snapshot-free members."""
+        if self.lane is None:
+            return None
+        return (jnp.asarray(flat["t"], jnp.float32)
+                - self.lane.get(flat["wscal"], SENT_STEP))
+
     def _view_flat(self, flat: dict):
         """The post-update view the family's send computes, on flat rows."""
         fam = self.fam
         if fam.sum_key is None:
             return flat["theta"]
-        lr = self.schedule(flat["t"])
+        lr = self._sched(flat["t"])
         gamma = jnp.float32(self.hp.momentum)
         if fam.u2_key is not None:
             denom = jnp.sqrt(flat["u2"]) + fam.eps
@@ -232,16 +351,62 @@ class FlatAlgorithm:
         vscale = flat.get("vscale", jnp.float32(1.0))
         return flat["theta"] - lr * gamma * vscale * flat["v0"]
 
+    def send_flat(self, flat: dict, i=0):
+        """(view rows, updated flat): the wire-format send.  For the
+        sent-snapshot family this writes worker i's slab row (the
+        look-ahead view for dana-dc, theta otherwise — mirroring each
+        algorithm's send) and stamps the staleness lane with t."""
+        view = self._view_flat(flat)
+        if self.fam.sent_key is None:
+            return view, flat
+        i = jnp.asarray(i, jnp.int32)
+        sval = view if self.fam.sent_view else flat["theta"]
+        new = dict(flat)
+        new["sent"] = jax.lax.dynamic_update_index_in_dim(
+            flat["sent"], sval, i, axis=0)
+        new["wscal"] = self.lane.set_at(flat["wscal"], SENT_STEP, i,
+                                        flat["t"])
+        return view, new
+
     def send(self, flat: dict, i=0):
-        return self.spec.unpack(self._view_flat(flat)), flat
+        view, flat = self.send_flat(flat, i)
+        return self.spec.unpack(view), flat
+
+    # -- per-message schedule scalars -------------------------------------
+    def _sched(self, t):
+        return jnp.asarray(self.schedule(t), jnp.float32)
+
+    def _sched_vec(self, t0, k: int, off: int):
+        """lr(t0 + off + j) for j in [0, k) — vectorized for the standard
+        ``Schedule`` (elementwise, so bit-equal to scalar calls), one
+        call per step for custom callables."""
+        if isinstance(self.schedule, Schedule):
+            steps = t0 + jnp.arange(off, k + off, dtype=jnp.int32)
+            return jnp.broadcast_to(self._sched(steps), (k,))
+        return jnp.stack([self._sched(t0 + (j + off)) for j in range(k)])
 
     def _msg_scalars(self, flat: dict, k: int):
-        steps = flat["t"] + jnp.arange(k, dtype=jnp.int32)
-        lrs = jnp.broadcast_to(
-            jnp.asarray(self.schedule(steps), jnp.float32), (k,))
+        """Per-message (lrs, lrs_next, gammas, cgs, vscales): the update
+        rate lr(t+j), the look-ahead rate lr(t+j+1), and the running
+        momentum-correction product — the exact sequence the tree path's
+        k sequential receive->send rounds would produce."""
+        lrs = self._sched_vec(flat["t"], k, 0)
+        lrs_next = self._sched_vec(flat["t"], k, 1)
         gammas = jnp.full((k,), self.hp.momentum, jnp.float32)
         cgs = jnp.full((k,), self.fam.grad_coef, jnp.float32)
-        return lrs, gammas, cgs
+        if self.fam.uses_vscale and "vscale" in flat:
+            # mirror Algorithm._lr_and_vscale message by message
+            vs, prev, seq = flat["vscale"], flat["lr_prev"], []
+            for j in range(k):
+                corr = jnp.where(prev > 0,
+                                 lrs[j] / jnp.maximum(prev, 1e-20), 1.0)
+                vs = vs * jnp.maximum(corr, 1e-30)
+                seq.append(vs)
+                prev = lrs[j]
+            vscales = jnp.stack(seq)
+        else:
+            vscales = jnp.ones((k,), jnp.float32)
+        return lrs, lrs_next, gammas, cgs, vscales
 
     def apply_batch(self, flat: dict, ids, g_flat, *,
                     telemetry: bool = False):
@@ -251,21 +416,106 @@ class FlatAlgorithm:
         Returns (flat', hats (k,R,128), thetas_pre or None).
         """
         k = g_flat.shape[0]
+        if (self.fam.gap_aware and self.spec is not None
+                and flat["theta"].shape[-2] != self.spec.rows):
+            raise ValueError(
+                "gap-aware updates need the FULL row space (the penalty "
+                "is a global norm); row-range shards must use the "
+                "gap_partial/apply_gap_message exchange path")
+        wids = ids                               # real ids (lane stamps)
         if self.fam.shared_momentum:
             ids = jnp.zeros_like(ids)            # one shared slab row
-        lrs, gammas, cgs = self._msg_scalars(flat, k)
-        theta, v, v0, u2, hats, pres = flat_master_update_batch(
-            flat["theta"], flat["v"], flat.get("v0"), flat.get("u2"),
-            g_flat, ids, lrs, gammas, cgs, nesterov=self.fam.nesterov,
-            b2=self.fam.b2, eps=self.fam.eps, telemetry=telemetry,
-            use_pallas=self.use_pallas)
+        lrs, lrs_next, gammas, cgs, vscales = self._msg_scalars(flat, k)
+        theta, v, v0, u2, sent, avg_step, hats, pres = \
+            flat_master_update_batch(
+                flat["theta"], flat["v"], flat.get("v0"), flat.get("u2"),
+                flat.get("sent"), flat.get("avg_step"), g_flat, ids, lrs,
+                lrs_next, gammas, cgs, vscales,
+                nesterov=self.fam.nesterov, b2=self.fam.b2,
+                eps=self.fam.eps, dc_lambda=self.fam.dc_lambda,
+                sent_view=self.fam.sent_view,
+                gap_aware=self.fam.gap_aware, gap_ema=self.fam.gap_ema,
+                n_elems=self.spec.n_elems if self.spec is not None else 0,
+                telemetry=telemetry, use_pallas=self.use_pallas)
         new = dict(flat)
         new.update(theta=theta, v=v, t=flat["t"] + k, lr_prev=lrs[-1])
         if v0 is not None:
             new["v0"] = v0
         if u2 is not None:
             new["u2"] = u2
+        if sent is not None:
+            new["sent"] = sent
+            wscal = flat["wscal"]
+            for j in range(k):                   # k static, <= coalesce
+                wscal = self.lane.set_at(wscal, SENT_STEP, wids[j],
+                                         flat["t"] + (j + 1))
+            new["wscal"] = wscal
+        if avg_step is not None:
+            new["avg_step"] = avg_step
+        if self.fam.uses_vscale and "vscale" in flat:
+            new["vscale"] = vscales[-1]
         return new, hats, pres
+
+    # -- sharded gap-aware hot path (cross-shard norm exchange) ----------
+    # The gap penalty needs ||theta - sent_i|| over ALL rows; a row-range
+    # shard only holds some.  The sharded master runs gap-aware members
+    # one message at a time in three steps: gap_partial (this shard's
+    # sum d^2) -> combine across shards -> apply_gap_message with the
+    # global sum -> combine ||v'||^2 partials -> finish_gap_message
+    # (avg_step EMA).  Formulas mirror the batched reference exactly,
+    # with the in-jit reductions replaced by the exchanged totals.
+    def gap_partial(self, flat: dict, i):
+        """This row range's contribution to ||theta - sent_i||^2."""
+        si = jax.lax.dynamic_index_in_dim(flat["sent"], i, axis=0,
+                                          keepdims=False)
+        d = flat["theta"] - si
+        return jnp.sum(d * d)
+
+    def apply_gap_message(self, flat: dict, i, g_row, gap2, view=None):
+        """One gap-aware message on this shard's rows, with the
+        cross-shard combined ``gap2 = sum_s sum d^2``.  Returns
+        (flat_mid, hat, vn2_partial, lr, vscale, d2, g2) — ``flat_mid``
+        still has the OLD avg_step (finish_gap_message completes it once
+        the v-norm partials are combined); d2/g2 are this shard's
+        telemetry partials (zeros when ``view`` is None)."""
+        lrs, _, gammas, cgs, vscales = self._msg_scalars(flat, 1)
+        lr, gamma, cg, vs = lrs[0], gammas[0], cgs[0], vscales[0]
+        sqrt_p = jnp.sqrt(jnp.asarray(self.spec.n_elems, jnp.float32))
+        i = jnp.asarray(i, jnp.int32)
+        pre = flat["theta"]
+        vi = jax.lax.dynamic_index_in_dim(flat["v"], i, axis=0,
+                                          keepdims=False)
+        gap = jnp.sqrt(gap2) / sqrt_p
+        penalty = 1.0 + gap / jnp.maximum(flat["avg_step"], 1e-12)
+        gj = (1.0 / penalty) * g_row
+        v_new = gamma * vi + cg * ((1.0 / vs) * gj)
+        theta = ((-lr) * vs) * v_new + pre
+        new = dict(flat)
+        new.update(
+            theta=theta,
+            v=jax.lax.dynamic_update_index_in_dim(flat["v"], v_new, i,
+                                                  axis=0),
+            sent=jax.lax.dynamic_update_index_in_dim(flat["sent"], theta,
+                                                     i, axis=0),
+            wscal=self.lane.set_at(flat["wscal"], SENT_STEP, i,
+                                   flat["t"] + 1),
+            t=flat["t"] + 1, lr_prev=lrs[0], vscale=vs)
+        vn2 = jnp.sum(v_new * v_new)
+        if view is not None:
+            dd = pre - view
+            d2, g2 = jnp.sum(dd * dd), jnp.sum(g_row * g_row)
+        else:
+            d2 = g2 = jnp.zeros((), jnp.float32)
+        return new, theta, vn2, lr, vs, d2, g2
+
+    def finish_gap_message(self, flat: dict, vn2, lr, vs):
+        """avg_step EMA from the cross-shard combined ||v'||^2."""
+        sqrt_p = jnp.sqrt(jnp.asarray(self.spec.n_elems, jnp.float32))
+        step_rms = lr * vs * jnp.sqrt(vn2) / sqrt_p
+        new = dict(flat)
+        new["avg_step"] = (self.fam.gap_ema * flat["avg_step"]
+                           + (1 - self.fam.gap_ema) * step_rms)
+        return new
 
     def receive_send(self, flat: dict, i, grad, now=0.0):
         """One message through the batched path (k=1)."""

@@ -2,24 +2,43 @@
 
 One call applies k coalesced worker messages IN ORDER to the flat master
 state.  The update rule is the family-shared per-worker-momentum shape
-(paper Alg. 4/6/8/9 + the Nadam extension), parameterized by static flags:
+(paper Alg. 4/6/8/9 + the Nadam extension), widened to the
+delay-compensated / gap-aware members (Alg. 7/10, App. C "GA") via a
+per-worker ``sent`` snapshot slab, and to moving learning-rate schedules
+via per-message scalars:
 
-    v_i'   = gamma_j * v_i + cg_j * g_j          (momentum / first moment)
-    u2'    = b2 * u2 + (1 - b2) * g_j^2          [adaptive only]
+    delta  = theta - sent_i                      [sent slab only]
+    ghat   = g_j + lam * (g_j^2 (.) delta)       [delay compensation]
+    ghat   = ghat / (1 + G(delta)/avg_step)      [gap-aware penalty]
+    v_i'   = gamma_j * v_i + cg_j * (ghat / s_j) (momentum, stored scale)
+    u2'    = b2 * u2 + (1 - b2) * ghat^2         [adaptive only]
     den    = sqrt(u2') + eps                     [adaptive only; else 1]
-    num    = gamma_j * v_i' + cg_j * g_j         [nesterov]  else  v_i'
-    theta' = theta - lr_j * num / den
-    v0'    = v0 - v_i + v_i'                     [track_v0: O(k) running sum]
-    hat_j  = theta' - lr_j * gamma_j * v0' / den [track_v0]  else  theta'
+    num    = (gamma_j * s_j) * v_i' + cg_j*ghat  [nesterov]  else  v_i'
+    theta' = theta - lr_j * s_j^? * num / den    (s_j only for heavy-ball)
+    v0'    = v0 - v_i + v_i'                     [track_v0: O(k) sum]
+    hat_j  = theta' - lrn_j*gamma_j*s_j * v0'/den  [track_v0] else theta'
+    sent_i'= hat_j (dana-dc) or theta' (dc/ga)   [sent slab only]
+    avg'   = ema*avg + (1-ema) * lr_j*s_j*||v_i'||/sqrt(P)   [gap-aware]
 
-with (per message j) worker id i = ids[j], learning rate lr_j, momentum
-gamma_j and gradient coefficient cg_j (1 for the momentum algorithms,
-1 - beta1 for Nadam).  Messages are sequential by construction: a worker
-appearing twice in one batch sees its own first update.
+with (per message j) worker id i = ids[j], update rate lr_j = lr(t+j),
+look-ahead rate lrn_j = lr(t+j+1), momentum gamma_j, gradient
+coefficient cg_j (1, or 1 - beta1 for Nadam), and momentum-correction
+scale s_j = vscales[j] (the running Goyal-correction product; exactly
+1.0 under a constant schedule).  Messages are sequential by
+construction: a worker appearing twice in one batch sees its own first
+update, including its own refreshed ``sent`` snapshot.
+
+The gap penalty is the one non-elementwise term: each message needs the
+norm of delta over ALL rows before it can touch any row, then a second
+norm of v_i' after — the two-pass reduce-then-apply below.  That is why
+the Pallas lowering (kernel.py) covers only the elementwise family and
+gap-aware runs this reference under jit on every backend.
 
 Expression shapes/associativity deliberately mirror the pytree algorithm
-implementations so the flat path is bit-identical under a constant
-learning rate (tested).
+implementations so the flat path is bit-identical for the elementwise
+family, schedules included (tested); the gap penalty reduces over the
+flat buffer instead of leaf-by-leaf, so gap-aware agrees to reduction
+-order tolerance only.
 """
 from __future__ import annotations
 
@@ -27,43 +46,92 @@ import jax
 import jax.numpy as jnp
 
 
-def flat_master_update_batch_ref(theta, v, v0, u2, g, ids, lrs, gammas,
-                                 cgs, *, nesterov: bool, b2: float = 0.999,
-                                 eps: float = 1e-8, telemetry: bool = False):
-    """theta (R,128); v (N,R,128); v0/u2 (R,128) or None; g (k,R,128);
-    ids (k,) int; lrs/gammas/cgs (k,) f32.
+def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
+                                 lrs, lrs_next, gammas, cgs, vscales, *,
+                                 nesterov: bool, b2: float = 0.999,
+                                 eps: float = 1e-8,
+                                 dc_lambda: float | None = None,
+                                 sent_view: bool = False,
+                                 gap_aware: bool = False,
+                                 gap_ema: float = 0.99,
+                                 n_elems: int = 0,
+                                 telemetry: bool = False):
+    """theta (R,128); v (N,R,128); v0/u2 (R,128) or None; sent (N,R,128)
+    or None; avg_step scalar or None; g (k,R,128); ids (k,) int;
+    lrs/lrs_next/gammas/cgs/vscales (k,) f32.
 
-    Returns (theta', v', v0', u2', hats (k,R,128), thetas_pre or None).
+    Returns (theta', v', v0', u2', sent', avg_step', hats (k,R,128),
+    thetas_pre or None).
     """
     k = g.shape[0]
     track_v0 = v0 is not None
     adaptive = u2 is not None
+    if gap_aware and not n_elems:
+        raise ValueError("gap_aware needs n_elems (the real element "
+                         "count; padding rows must not dilute the gap)")
+    sqrt_p = (jnp.sqrt(jnp.asarray(n_elems, jnp.float32))
+              if gap_aware else None)
     hats, pres = [], []
     for j in range(k):
         i = ids[j]
-        lr, gamma, cg = lrs[j], gammas[j], cgs[j]
+        lr, lrn = lrs[j], lrs_next[j]
+        gamma, cg, vs = gammas[j], cgs[j], vscales[j]
         if telemetry:
             pres.append(theta)
         vi = jax.lax.dynamic_index_in_dim(v, i, axis=0, keepdims=False)
         gj = g[j]
-        v_new = gamma * vi + cg * gj
+        if sent is not None:
+            si = jax.lax.dynamic_index_in_dim(sent, i, axis=0,
+                                              keepdims=False)
+            delta = theta - si
+            if dc_lambda is not None:
+                # mirror DCASGD/DanaDC: grad + lam*((g*g)*delta)
+                gj = gj + dc_lambda * ((gj * gj) * delta)
+            if gap_aware:
+                # pass 1: the gap norm over EVERY row of delta
+                gap = jnp.sqrt(jnp.sum(delta * delta)) / sqrt_p
+                penalty = 1.0 + gap / jnp.maximum(avg_step, 1e-12)
+                gj = (1.0 / penalty) * gj
+        # stored scale: v holds v_true / vscale (Goyal correction as a
+        # lazy scalar); (1/vs)*g mirrors tree_scale(1.0/vscale, ghat)
+        v_new = gamma * vi + cg * ((1.0 / vs) * gj)
         if adaptive:
             u2 = b2 * u2 + (1 - b2) * gj * gj
             denom = jnp.sqrt(u2) + eps
-        num = (gamma * v_new + cg * gj) if nesterov else v_new
-        if adaptive:
-            theta = theta - lr * (num / denom)
+        if nesterov:
+            # mirror tree_axpy(gamma*vscale, v_new, grad)
+            num = (gamma * vs) * v_new + cg * gj
+            if adaptive:
+                theta = (-lr) * (num / denom) + theta
+            else:
+                theta = (-lr) * num + theta
         else:
-            theta = theta - lr * num
+            # mirror tree_axpy(-lr*vscale, v_new, theta)
+            if adaptive:
+                theta = ((-lr) * vs) * (v_new / denom) + theta
+            else:
+                theta = ((-lr) * vs) * v_new + theta
         if track_v0:
             v0 = (v0 - vi) + v_new
             if adaptive:
-                hat = theta - lr * gamma * v0 / denom
+                hat = theta - ((lrn * gamma) * v0) / denom
             else:
-                hat = theta - lr * gamma * v0
+                # mirror DanaZero.send: axpy(-lr*gamma*vscale, v0, theta)
+                hat = (((-lrn) * gamma) * vs) * v0 + theta
         else:
             hat = theta
+        if sent is not None:
+            # the family's send refreshes worker i's snapshot with what
+            # it just returned: the look-ahead view (dana-dc) or theta
+            sval = hat if sent_view else theta
+            sent = jax.lax.dynamic_update_index_in_dim(sent, sval, i,
+                                                       axis=0)
+        if gap_aware:
+            # pass 2: RMS size of this master update (the gap unit);
+            # mirror GapAware: lr * vscale * tree_l2(v_new) / sqrt(P)
+            step_rms = lr * vs * jnp.sqrt(jnp.sum(v_new * v_new)) / sqrt_p
+            avg_step = gap_ema * avg_step + (1 - gap_ema) * step_rms
         v = jax.lax.dynamic_update_index_in_dim(v, v_new, i, axis=0)
         hats.append(hat)
-    return (theta, v, v0, u2, jnp.stack(hats),
+    return (theta, v, v0, u2, sent, avg_step, jnp.stack(hats),
             jnp.stack(pres) if telemetry else None)

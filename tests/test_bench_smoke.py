@@ -20,16 +20,31 @@ def test_quick_profile_covers_every_suite():
             f"--quick {name} would write a results/ artifact"
 
 
+def _argv_values(argv, flag):
+    i = argv.index(flag) + 1
+    out = []
+    while i < len(argv) and not argv[i].startswith("--"):
+        out.append(argv[i])
+        i += 1
+    return out
+
+
 def test_quick_cluster_exercises_shard_sweep():
     """The cluster smoke must sweep at least two shard counts so the
     row-sharded master's capacity claim stays in the CI trajectory."""
-    argv = bench_run.QUICK["cluster"]
-    i = argv.index("--shards") + 1
-    shards = []
-    while i < len(argv) and not argv[i].startswith("--"):
-        shards.append(int(argv[i]))
-        i += 1
+    shards = [int(s) for s in _argv_values(bench_run.QUICK["cluster"],
+                                           "--shards")]
     assert len(shards) >= 2 and 1 in shards
+
+
+def test_quick_cluster_covers_sent_family():
+    """The cluster smoke must sweep at least one sent-snapshot member
+    (dc-asgd / dana-dc / ga-asgd): bench_cluster asserts the documented
+    eligibility matrix and measures the algorithm's flat path, so a
+    kernel-eligibility regression for the newly eligible family fails
+    CI instead of silently falling back to the tree path."""
+    algos = _argv_values(bench_run.QUICK["cluster"], "--algos")
+    assert set(algos) & {"dc-asgd", "dana-dc", "ga-asgd"}
 
 
 def test_bench_scaling_out_empty_writes_nothing(tmp_path, monkeypatch):

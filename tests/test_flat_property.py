@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.flat import LANES, FlatSpec
+from repro.core.flat import LANES, FlatSpec, ScalarLane
 
 # ---------------------------------------------------------------------------
 # shared property checks
@@ -65,11 +65,19 @@ def check_roundtrip_and_ranges(tree, row_align, shards):
     buf_sq = float(np.sum(np.square(np.asarray(buf, np.float64))))
     np.testing.assert_allclose(buf_sq, tree_sq, rtol=1e-5, atol=1e-6)
 
-    # stacked variant shares the same layout per row
+    # stacked variant (the momentum AND sent-snapshot slabs) shares the
+    # same layout per row
     stacked = jax.tree.map(lambda l: jnp.stack([l, 2 * l, -l]), tree)
     sbuf = spec.pack_stacked(stacked)
     _assert_trees_equal(stacked, spec.unpack_stacked(sbuf))
     np.testing.assert_array_equal(np.asarray(sbuf[0]), np.asarray(buf))
+    # a slab's padding is exactly zero, like theta's (load-bearing for
+    # delta = theta - sent_i staying zero in the padding region)
+    n_pad = spec.padded - spec.n_elems
+    if n_pad:
+        np.testing.assert_array_equal(
+            np.asarray(sbuf.reshape(3, -1)[:, spec.n_elems:]),
+            np.zeros((3, n_pad), np.float32))
 
     # row-range sub-specs: lossless split, exact slice semantics
     shards = min(shards, spec.rows)
@@ -92,11 +100,15 @@ def check_roundtrip_and_ranges(tree, row_align, shards):
         np.testing.assert_array_equal(np.asarray(s.pack(tree)),
                                       np.asarray(s.take(buf)))
 
-    # put is take's inverse
+    # put is take's inverse — for flat buffers and stacked slabs alike
     scrambled = buf + 1.0
+    s_scrambled = sbuf + 1.0
     for s in subs:
         scrambled = s.put(scrambled, s.take(buf))
+        s_scrambled = s.put(s_scrambled, s.take(sbuf))
     np.testing.assert_array_equal(np.asarray(scrambled), np.asarray(buf))
+    np.testing.assert_array_equal(np.asarray(s_scrambled),
+                                  np.asarray(sbuf))
 
     # per-range norms partition the global norm (sharded telemetry)
     part = sum(float(np.sum(np.square(np.asarray(s.take(buf), np.float64))))
@@ -150,6 +162,68 @@ def test_row_ranges_prefer_alignment():
 
 
 # ---------------------------------------------------------------------------
+# per-worker scalar lane (staleness signals)
+# ---------------------------------------------------------------------------
+def check_scalar_lane(names, n, seed):
+    lane_spec = ScalarLane(names)
+    rng = np.random.default_rng(seed)
+    cols = {name: jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+            for name in names}
+    lane = lane_spec.pack(cols)
+    # layout: one 128-lane row per worker, zero beyond the named slots
+    assert lane.shape == (n, LANES) and lane.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(lane[:, len(names):]),
+        np.zeros((n, LANES - len(names)), np.float32))
+    # pack -> unpack round-trip, column extraction, point update
+    out = lane_spec.unpack(lane)
+    assert set(out) == set(names)
+    for name in names:
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(cols[name]))
+        np.testing.assert_array_equal(np.asarray(
+            lane_spec.get(lane, name)), np.asarray(cols[name]))
+    i = int(rng.integers(0, n))
+    lane2 = lane_spec.set_at(lane, names[0], i, 42.0)
+    assert float(lane_spec.get(lane2, names[0])[i]) == 42.0
+    # set_at touches exactly one scalar
+    diff = np.asarray(lane2) != np.asarray(lane)
+    assert diff.sum() <= 1
+    # norm preservation: padding contributes exactly zero
+    np.testing.assert_allclose(
+        float(np.sum(np.square(np.asarray(lane, np.float64)))),
+        sum(float(np.sum(np.square(np.asarray(c, np.float64))))
+            for c in cols.values()), rtol=1e-6)
+
+
+@pytest.mark.parametrize("names,n", [
+    (("sent_step",), 1),
+    (("sent_step", "rate"), 7),
+    (tuple(f"s{j}" for j in range(17)), 4),
+])
+def test_scalar_lane_properties_seeded(names, n):
+    check_scalar_lane(names, n, seed=n * 13 + len(names))
+
+
+def test_scalar_lane_validation():
+    with pytest.raises(ValueError):
+        ScalarLane(())
+    with pytest.raises(ValueError):
+        ScalarLane(("a",) * 2)
+    with pytest.raises(ValueError):
+        ScalarLane(tuple(f"s{j}" for j in range(LANES + 1)))
+
+
+def test_scalar_lane_init_seeding():
+    lane_spec = ScalarLane(("a", "b"))
+    lane = lane_spec.init(3, b=2.5)
+    np.testing.assert_array_equal(np.asarray(lane_spec.get(lane, "a")),
+                                  np.zeros(3, np.float32))
+    np.testing.assert_array_equal(np.asarray(lane_spec.get(lane, "b")),
+                                  np.full(3, 2.5, np.float32))
+
+
+# ---------------------------------------------------------------------------
 # hypothesis: arbitrary pytrees / shapes / dtypes / alignments / splits
 # (the seeded corpus above always runs; these widen it when hypothesis is
 # installed — a module-level importorskip would skip the corpus too)
@@ -184,6 +258,11 @@ if HAVE_HYPOTHESIS:
         shapes, dtypes, row_align, shards, seed = case
         tree = _tree_from(shapes, dtypes, seed)
         check_roundtrip_and_ranges(tree, row_align, shards)
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 12), st.integers(1, 24), st.integers(0, 2 ** 16))
+    def test_scalar_lane_properties_hypothesis(n_names, n, seed):
+        check_scalar_lane(tuple(f"s{j}" for j in range(n_names)), n, seed)
 
     @settings(**SETTINGS)
     @given(st.integers(1, 64), st.integers(1, 12), st.integers(0, 2 ** 16))

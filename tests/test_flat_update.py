@@ -5,11 +5,16 @@ Contracts:
   * FlatSpec round-trips arbitrary pytrees (incl. stacked per-worker
     state) through the (R, 128) layout;
   * the batched Pallas kernel (interpret mode here) equals the jnp
-    reference, and ONE k-message call equals k sequential 1-message
-    calls for mixed/duplicated worker ids;
+    reference — incl. the sent-snapshot slab, delay compensation, and
+    per-message schedule scalars — and ONE k-message call equals k
+    sequential 1-message calls for mixed/duplicated worker ids;
   * the master's flat fused pass is bit-identical to the tree fused pass
-    for EVERY kernel-eligible algorithm in the registry (constant lr);
-  * the engine's flat execution reproduces the tree engine bit-for-bit.
+    for EVERY kernel-eligible algorithm in the registry, moving lr
+    schedules included (gap-aware to reduction-order tolerance: its
+    penalty is a norm over the flat buffer instead of leaf-by-leaf);
+  * the engine's flat execution reproduces the tree engine bit-for-bit;
+  * ``eligibility_matrix`` — the documented flat/shard/schedule
+    eligibility contract — cannot silently regress.
 """
 import threading
 
@@ -24,8 +29,10 @@ from repro.core import (HyperParams, REGISTRY, Schedule, SimulationConfig,
 from repro.core.flat import FlatSpec
 from repro.core.metrics import History
 from repro.data.synthetic import ClassificationTask
-from repro.kernels.flat_update import (FlatAlgorithm, family_spec_for,
-                                       kernel_eligible)
+from repro.kernels.flat_update import (FLAT_ELIGIBLE, SENT_STEP,
+                                       FlatAlgorithm, eligibility_matrix,
+                                       family_spec_for, kernel_eligible,
+                                       shard_bitexact)
 from repro.kernels.flat_update.kernel import flat_master_update_batch_2d
 from repro.kernels.flat_update.ref import flat_master_update_batch_ref
 from repro.models.toy import make_classifier_fns
@@ -37,6 +44,11 @@ PARAMS0 = INIT(jax.random.PRNGKey(0))
 
 ELIGIBLE = sorted(n for n in REGISTRY
                   if kernel_eligible(make_algorithm(n, HP)))
+# a decidedly non-constant schedule: warm-up ramp + two decay steps
+# land inside the short test runs, so lr(t), lr(t+1) and the momentum
+# -correction rescale all move while the equivalences must hold
+SCHED = Schedule(base_lr=0.05, num_workers=4, warmup_steps=6,
+                 milestones=(5, 9), decay_factor=0.5)
 
 
 def _assert_trees_equal(a, b):
@@ -79,40 +91,75 @@ def test_flat_spec_pads_with_zeros():
     assert flat[:5].sum() == 5.0 and flat[5:].sum() == 0.0
 
 
-def test_eligible_set_is_the_momentum_family():
-    assert ELIGIBLE == ["dana-nadam", "dana-slim", "dana-zero",
-                       "multi-asgd", "nag-asgd"]
-    # subclasses that change the update rule must NOT be eligible
-    for name in ("dana-dc", "dana-hetero", "asgd", "ga-asgd", "easgd"):
+def test_eligible_set_is_the_flat_family():
+    assert ELIGIBLE == sorted(FLAT_ELIGIBLE) == [
+        "dana-dc", "dana-nadam", "dana-slim", "dana-zero", "dc-asgd",
+        "ga-asgd", "multi-asgd", "nag-asgd"]
+    # algorithms whose update the flat layout cannot express must NOT be
+    # eligible (dana-hetero's send mixes ALL momentum slabs per message)
+    for name in ("dana-hetero", "asgd", "lwp", "easgd", "dana-easgd",
+                 "nadam-asgd", "yellowfin"):
         assert not kernel_eligible(make_algorithm(name, HP)), name
+
+
+def test_eligibility_matrix_contract():
+    """The documented eligibility matrix (README Performance section).
+    CI fails here — and in the bench smoke — if an algorithm silently
+    drops out of (or into) the flat/shard/schedule paths."""
+    m = eligibility_matrix()
+    assert set(m) == set(REGISTRY)
+    assert sorted(n for n in m if m[n]["flat"]) == sorted(FLAT_ELIGIBLE)
+    for name in FLAT_ELIGIBLE:
+        assert m[name]["schedule"], name     # moving lr supported
+        assert m[name]["shard"], name        # row-sharded master runs it
+        # bit-exact sharding for the elementwise family; gap-aware sums
+        # per-shard norm partials (reduction-order tolerance only)
+        assert m[name]["shard_bitexact"] == (name != "ga-asgd"), name
+        assert shard_bitexact(make_algorithm(name, HP)) \
+            == m[name]["shard_bitexact"]
+    for name in set(REGISTRY) - set(FLAT_ELIGIBLE):
+        assert not any(m[name].values()), name
 
 
 # ---------------------------------------------------------------------------
 # batched kernel vs reference / vs sequential
 # ---------------------------------------------------------------------------
-def _flat_inputs(R=16, N=4, k=8, seed=0):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+def _flat_inputs(R=16, N=4, k=8, seed=0, moving_lr=False):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
     theta = jax.random.normal(ks[0], (R, 128))
     v = jax.random.normal(ks[1], (N, R, 128)) * 0.1
     v0 = jnp.sum(v, axis=0)
     u2 = jnp.abs(jax.random.normal(ks[2], (R, 128))) * 0.01
+    sent = theta + 0.01 * jax.random.normal(ks[4], (N, R, 128))
     g = jax.random.normal(ks[3], (k, R, 128))
     ids = jnp.asarray([j * 5 % N for j in range(k)], jnp.int32)
-    scal = (jnp.full((k,), 0.05), jnp.full((k,), 0.9), jnp.ones((k,)))
-    return theta, v, v0, u2, g, ids, scal
+    if moving_lr:
+        lrs = jnp.linspace(0.05, 0.03, k)
+        lrs_next = jnp.linspace(0.049, 0.029, k)
+        vscales = jnp.linspace(1.0, 0.8, k)
+    else:
+        lrs = lrs_next = jnp.full((k,), 0.05)
+        vscales = jnp.ones((k,))
+    scal = (lrs, lrs_next, jnp.full((k,), 0.9), jnp.ones((k,)), vscales)
+    return theta, v, v0, u2, sent, g, ids, scal
 
 
 @pytest.mark.parametrize("nesterov", [False, True])
 @pytest.mark.parametrize("track_v0", [False, True])
 @pytest.mark.parametrize("adaptive", [False, True])
-def test_batched_kernel_matches_ref(nesterov, track_v0, adaptive):
-    theta, v, v0, u2, g, ids, (lrs, gammas, cgs) = _flat_inputs()
+@pytest.mark.parametrize("moving_lr", [False, True])
+def test_batched_kernel_matches_ref(nesterov, track_v0, adaptive,
+                                    moving_lr):
+    theta, v, v0, u2, _, g, ids, scal = _flat_inputs(moving_lr=moving_lr)
+    lrs, lrs_next, gammas, cgs, vscales = scal
     args = (theta, v, v0 if track_v0 else None, u2 if adaptive else None,
-            g, ids, lrs, gammas, cgs)
+            None, g, ids, lrs, lrs_next, gammas, cgs, vscales)
     outs = flat_master_update_batch_2d(*args, nesterov=nesterov,
                                        telemetry=True, interpret=True)
     ref = jax.jit(lambda *a: flat_master_update_batch_ref(
-        *a, nesterov=nesterov, telemetry=True))(*args)
+        a[0], a[1], a[2], a[3], a[4], None, *a[5:], nesterov=nesterov,
+        telemetry=True))(*args)
+    ref = ref[:5] + ref[6:]          # drop avg_step (gap-aware only)
     # sqrt/divide (adaptive) fuses differently under the two lowerings;
     # the momentum family is elementwise mul/add and stays bit-exact
     tol = 2e-6 if adaptive else 0.0
@@ -124,41 +171,78 @@ def test_batched_kernel_matches_ref(nesterov, track_v0, adaptive):
                                    rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("sent_view", [False, True])
+@pytest.mark.parametrize("track_v0", [False, True])
+def test_batched_kernel_matches_ref_sent_slab(track_v0, sent_view):
+    """The sent-snapshot slab + delay compensation (the dc-asgd /
+    dana-dc shapes) is elementwise: Pallas == reference bit-for-bit,
+    moving schedule scalars included."""
+    theta, v, v0, _, sent, g, ids, scal = _flat_inputs(moving_lr=True)
+    lrs, lrs_next, gammas, cgs, vscales = scal
+    args = (theta, v, v0 if track_v0 else None, None, sent, g, ids, lrs,
+            lrs_next, gammas, cgs, vscales)
+    outs = flat_master_update_batch_2d(*args, nesterov=False,
+                                       dc_lambda=2.0, sent_view=sent_view,
+                                       telemetry=True, interpret=True)
+    ref = jax.jit(lambda *a: flat_master_update_batch_ref(
+        a[0], a[1], a[2], a[3], a[4], None, *a[5:], nesterov=False,
+        dc_lambda=2.0, sent_view=sent_view, telemetry=True))(*args)
+    ref = ref[:5] + ref[6:]
+    for o, r in zip(outs, ref):
+        if o is None:
+            assert r is None
+            continue
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
+
+
 @pytest.mark.parametrize("k", [1, 4, 8])
-def test_batched_kernel_equals_sequential(k):
+@pytest.mark.parametrize("with_sent", [False, True])
+def test_batched_kernel_equals_sequential(k, with_sent):
     """ONE k-message pallas_call == k sequential 1-message calls, with
-    duplicated worker ids inside the batch (momentum chaining)."""
-    theta, v, v0, _, g, ids, (lrs, gammas, cgs) = _flat_inputs(k=k, N=3)
+    duplicated worker ids inside the batch (momentum chaining; with the
+    sent slab, message j+1 must see j's refreshed snapshot)."""
+    theta, v, v0, _, sent, g, ids, scal = _flat_inputs(k=k, N=3)
+    lrs, lrs_next, gammas, cgs, vscales = scal
+    sent = sent[:3] if with_sent else None
+    lam = 2.0 if with_sent else None
     ids = jnp.asarray([0, 2, 0, 0, 1, 2, 0, 1][:k], jnp.int32)
     batch = flat_master_update_batch_2d(
-        theta, v, v0, None, g, ids, lrs, gammas, cgs,
-        nesterov=False, telemetry=False, interpret=True)
-    th_s, v_s, v0_s = theta, v, v0
+        theta, v, v0, None, sent, g, ids, lrs, lrs_next, gammas, cgs,
+        vscales, nesterov=False, dc_lambda=lam, sent_view=with_sent,
+        telemetry=False, interpret=True)
+    th_s, v_s, v0_s, sent_s = theta, v, v0, sent
     hats = []
     for j in range(k):
-        th_s, v_s, v0_s, _, hat, _ = flat_master_update_batch_2d(
-            th_s, v_s, v0_s, None, g[j:j + 1], ids[j:j + 1],
-            lrs[j:j + 1], gammas[j:j + 1], cgs[j:j + 1],
-            nesterov=False, telemetry=False, interpret=True)
+        th_s, v_s, v0_s, _, sent_s, hat, _ = flat_master_update_batch_2d(
+            th_s, v_s, v0_s, None, sent_s, g[j:j + 1], ids[j:j + 1],
+            lrs[j:j + 1], lrs_next[j:j + 1], gammas[j:j + 1],
+            cgs[j:j + 1], vscales[j:j + 1], nesterov=False,
+            dc_lambda=lam, sent_view=with_sent, telemetry=False,
+            interpret=True)
         hats.append(hat[0])
     np.testing.assert_array_equal(np.asarray(batch[0]), np.asarray(th_s))
     np.testing.assert_array_equal(np.asarray(batch[1]), np.asarray(v_s))
     np.testing.assert_array_equal(np.asarray(batch[2]), np.asarray(v0_s))
+    if with_sent:
+        np.testing.assert_array_equal(np.asarray(batch[4]),
+                                      np.asarray(sent_s))
     for j in range(k):
-        np.testing.assert_array_equal(np.asarray(batch[4][j]),
+        np.testing.assert_array_equal(np.asarray(batch[5][j]),
                                       np.asarray(hats[j]))
 
 
 def test_batched_kernel_multi_row_tiles():
     """Rows spanning several grid tiles: state revisiting across the
     message axis must carry updates tile-locally."""
-    theta, v, v0, _, g, ids, (lrs, gammas, cgs) = _flat_inputs(
-        R=512, N=2, k=3)
-    out_k = flat_master_update_batch_2d(
-        theta, v, v0, None, g, ids, lrs, gammas, cgs,
-        nesterov=True, telemetry=False, interpret=True)
+    theta, v, v0, _, _, g, ids, scal = _flat_inputs(R=512, N=2, k=3)
+    lrs, lrs_next, gammas, cgs, vscales = scal
+    args = (theta, v, v0, None, None, g, ids, lrs, lrs_next, gammas,
+            cgs, vscales)
+    out_k = flat_master_update_batch_2d(*args, nesterov=True,
+                                        telemetry=False, interpret=True)
     out_r = jax.jit(lambda *a: flat_master_update_batch_ref(
-        *a, nesterov=True))(theta, v, v0, None, g, ids, lrs, gammas, cgs)
+        a[0], a[1], a[2], a[3], a[4], None, *a[5:],
+        nesterov=True))(*args)
     for o, r in zip(out_k[:3], out_r[:3]):
         np.testing.assert_array_equal(np.asarray(o), np.asarray(r))
 
@@ -166,8 +250,8 @@ def test_batched_kernel_multi_row_tiles():
 # ---------------------------------------------------------------------------
 # master: flat fused pass == tree fused pass, every eligible algorithm
 # ---------------------------------------------------------------------------
-def _masters(name, n, **kw):
-    algo = make_algorithm(name, HP)
+def _masters(name, n, schedule=None, **kw):
+    algo = make_algorithm(name, HP, schedule)
     state = algo.init(PARAMS0, n)
     master = Master(algo, state, mailbox=Mailbox(), history=History(),
                     stop=threading.Event(), total_grads=100, coalesce=8,
@@ -180,35 +264,51 @@ def _grads(k, seed=0):
                  for j in range(k))
 
 
-@pytest.mark.parametrize("name", ELIGIBLE)
-def test_flat_fused_matches_tree_fused(name):
-    """The one-kernel flat batch must reproduce the generic tree fused
-    pass bit-for-bit (constant lr) for every eligible algorithm."""
-    k, n = 4, 4
-    _, state, m_tree = _masters(name, n)
-    algo_f, _, m_flat = _masters(name, n, use_kernel=True)
-    assert m_flat.state_is_flat
-    ids = jnp.asarray([1, 3, 1, 0], jnp.int32)
-    nows = jnp.zeros((k,), jnp.float32)
-    grads = _grads(k, seed=11)
-    spec = m_flat._flat_algo.spec
-    s_t, v_t, _, _ = m_tree._get_fused(k, False)(state, ids, nows, grads,
-                                                 None)
-    s_f, v_f, _, _ = m_flat._get_fused_flat(k, False)(
-        m_flat._flat_state, ids, nows,
-        tuple(spec.pack(g) for g in grads), None)
-    v_f = tuple(spec.unpack(v) for v in v_f)   # flat wire -> pytree views
-    tree_f = m_flat._flat_algo.tree_state(s_f)
+def _fused_tol(name):
     # dana-nadam: sqrt/divide fuses differently across lowerings.
     # nag-asgd: the shared-momentum N=1 slab makes XLA fuse the batched
     # chain with different FMA contraction than the per-message tree loop
-    # — 1-ULP noise, semantics identical (k=1 is bit-exact, tested above).
-    tol = 2e-6 if name in ("dana-nadam", "nag-asgd") else 0.0
-    fam = family_spec_for(algo_f)
-    keys = ["theta0", fam.momentum_key] + \
-        ([fam.sum_key] if fam.sum_key else []) + \
-        ([fam.u2_key] if fam.u2_key else [])
-    for key in keys:
+    # — 1-ULP noise, semantics identical (k=1 is bit-exact, tested below).
+    # ga-asgd: the gap penalty reduces over the flat buffer instead of
+    # leaf-by-leaf — the one documented non-bit-exact member.
+    return 2e-6 if name in ("dana-nadam", "nag-asgd", "ga-asgd") else 0.0
+
+
+def _fam_keys(algo):
+    fam = family_spec_for(algo)
+    return (["theta0", fam.momentum_key]
+            + ([fam.sum_key] if fam.sum_key else [])
+            + ([fam.u2_key] if fam.u2_key else [])
+            + ([fam.sent_key] if fam.sent_key else [])
+            + (["avg_step"] if fam.gap_aware else []))
+
+
+def _check_flat_vs_tree(name, ids_l, schedule=None, k_batch=None):
+    """Drive the SAME message sequence through the tree master's fused
+    pass and the flat master's batched kernel; compare state + views."""
+    n = 4
+    _, state, m_tree = _masters(name, n, schedule)
+    algo_f, _, m_flat = _masters(name, n, schedule, use_kernel=True)
+    assert m_flat.state_is_flat
+    spec = m_flat._flat_algo.spec
+    grads = _grads(len(ids_l), seed=11)
+    k_batch = k_batch or len(ids_l)
+    s_t, s_f = state, m_flat._flat_state
+    v_t, v_f = [], []
+    for off in range(0, len(ids_l), k_batch):
+        ids = jnp.asarray(ids_l[off:off + k_batch], jnp.int32)
+        k = len(ids)
+        nows = jnp.zeros((k,), jnp.float32)
+        chunk = grads[off:off + k]
+        s_t, vt, _, _ = m_tree._get_fused(k, False)(s_t, ids, nows,
+                                                    chunk, None)
+        s_f, vf, _, _ = m_flat._get_fused_flat(k, False)(
+            s_f, ids, nows, tuple(spec.pack(g) for g in chunk), None)
+        v_t.extend(vt)
+        v_f.extend(spec.unpack(v) for v in vf)
+    tree_f = m_flat._flat_algo.tree_state(s_f)
+    tol = _fused_tol(name)
+    for key in _fam_keys(algo_f):
         if tol == 0.0:
             _assert_trees_equal(s_t[key], tree_f[key])
         else:
@@ -216,6 +316,34 @@ def test_flat_fused_matches_tree_fused(name):
     for a, b in zip(v_t, v_f):
         (_assert_trees_equal if tol == 0.0 else
          lambda x, y: _assert_trees_close(x, y, tol))(a, b)
+
+
+@pytest.mark.parametrize("name", ELIGIBLE)
+def test_flat_fused_matches_tree_fused(name):
+    """The one-kernel flat batch must reproduce the generic tree fused
+    pass (bit-for-bit for the elementwise family) for every eligible
+    algorithm, duplicate worker ids included."""
+    _check_flat_vs_tree(name, [1, 3, 1, 0])
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("name", ["dc-asgd", "dana-dc", "ga-asgd"])
+def test_sent_family_flat_matches_tree_batched(name, k):
+    """The newly eligible sent-snapshot family: flat == tree across
+    batch sizes k in {1, 4, 8} with duplicated worker ids (message j+1
+    must see j's refreshed snapshot inside ONE kernel call)."""
+    _check_flat_vs_tree(name, [1, 3, 1, 0, 2, 1, 3, 3], k_batch=k)
+
+
+@pytest.mark.parametrize("name", ["dana-zero", "dc-asgd", "multi-asgd",
+                                  "dana-nadam"])
+def test_scheduled_flat_matches_tree_fused(name):
+    """Moving lr schedule (warm-up ramp + decay milestones inside the
+    run): the flat path's per-message lr(t)/lr(t+1) + lazy vscale feed
+    must reproduce the tree path — bit-for-bit for the elementwise
+    family.  This is the lifted constant-lr restriction."""
+    _check_flat_vs_tree(name, [1, 3, 1, 0, 2, 1, 3, 3], schedule=SCHED,
+                        k_batch=4)
 
 
 def test_flat_fused_telemetry_matches_tree():
@@ -254,11 +382,50 @@ def test_flat_master_pull_and_state_roundtrip():
     _assert_trees_equal(m_tree.master_params(), m_flat.master_params())
 
 
-def test_flat_requires_constant_schedule():
-    sched = Schedule(base_lr=0.1, num_workers=4, warmup_steps=10)
-    algo = make_algorithm("dana-slim", HP, sched)
-    with pytest.raises(ValueError, match="constant"):
-        FlatAlgorithm(algo)
+def test_flat_accepts_moving_schedule():
+    """The constant-lr restriction is lifted: FlatAlgorithm executes any
+    schedule (vectorized for the standard ``Schedule``, per-step calls
+    for custom callables) and keeps vscale on the tree path's exact
+    correction sequence."""
+    algo = make_algorithm("dana-slim", HP, SCHED)
+    fa = FlatAlgorithm(algo)
+    flat = fa.init(PARAMS0, 3)
+    for j, i in enumerate([0, 2, 1, 1]):
+        flat, _ = fa.receive_send(flat, jnp.int32(i),
+                                  _grads(1, seed=j)[0])
+    ref = make_algorithm("dana-slim", HP, SCHED)
+    st = ref.init(PARAMS0, 3)
+    for j, i in enumerate([0, 2, 1, 1]):
+        st, _ = ref.receive_send(st, jnp.int32(i), _grads(1, seed=j)[0])
+    np.testing.assert_array_equal(np.asarray(flat["vscale"]),
+                                  np.asarray(st["vscale"]))
+    _assert_trees_equal(st["theta0"], fa.master_params(flat))
+    # custom (non-Schedule) callables go through the per-step fallback
+    fa2 = FlatAlgorithm(make_algorithm(
+        "dana-zero", HP, lambda t: 0.05 / (1.0 + 0.1
+                                           * jnp.asarray(t, jnp.float32))))
+    flat2 = fa2.init(PARAMS0, 2)
+    flat2, _ = fa2.receive_send(flat2, jnp.int32(0), _grads(1)[0])
+    assert int(flat2["t"]) == 1
+
+
+def test_sent_staleness_lane():
+    """The per-worker scalar lane carries the staleness signal: after a
+    batch, worker i's sent_step is the master step of its LAST message
+    (duplicates keep the latest), and pull-only sends refresh it."""
+    algo = make_algorithm("dc-asgd", HP)
+    fa = FlatAlgorithm(algo)
+    flat = fa.init(PARAMS0, 4)
+    assert np.all(np.asarray(fa.staleness(flat)) == 0.0)
+    ids = jnp.asarray([1, 3, 1, 0], jnp.int32)
+    g_flat = jnp.stack([fa.spec.pack(g) for g in _grads(4, seed=5)])
+    flat, _, _ = fa.apply_batch(flat, ids, g_flat)
+    lane = fa.lane.get(flat["wscal"], SENT_STEP)
+    np.testing.assert_array_equal(np.asarray(lane), [4.0, 3.0, 0.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(fa.staleness(flat)),
+                                  [0.0, 1.0, 4.0, 2.0])
+    _, flat = fa.send_flat(flat, jnp.int32(2))      # rejoin-style pull
+    assert float(fa.staleness(flat)[2]) == 0.0
 
 
 def test_flat_rejects_non_family():
@@ -269,22 +436,29 @@ def test_flat_rejects_non_family():
 # ---------------------------------------------------------------------------
 # engine: flat execution reproduces the tree engine bit-for-bit
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("name", ["dana-zero", "nag-asgd", "dana-nadam"])
-def test_engine_flat_execution_matches_tree(name):
+@pytest.mark.parametrize("name,schedule", [
+    ("dana-zero", None), ("nag-asgd", None), ("dana-nadam", None),
+    ("dc-asgd", None), ("dana-dc", None), ("ga-asgd", None),
+    # the lifted constant-lr restriction, end to end through the engine
+    ("dana-zero", SCHED), ("dana-dc", SCHED),
+])
+def test_engine_flat_execution_matches_tree(name, schedule):
     def run(use_kernel):
-        algo = make_algorithm(name, HP)
+        algo = make_algorithm(name, HP, schedule)
         cfg = SimulationConfig(num_workers=3, total_grads=60, eval_every=20,
                                use_kernel=use_kernel)
         return run_simulation(algo, GRAD_FN, PARAMS0, TASK.batch, cfg)
 
     h_t, h_f = run(False), run(True)
-    tol = 2e-6 if name == "dana-nadam" else 0.0  # k=1 is bit-exact
+    # k=1 is bit-exact for everything elementwise; ga-asgd's penalty
+    # reduction order drifts over the 60-step run (allclose only)
+    tol = {"dana-nadam": 2e-6, "ga-asgd": 5e-4}.get(name, 0.0)
     if tol == 0.0:
         _assert_trees_equal(h_t.final_params, h_f.final_params)
         assert h_t.gap == h_f.gap
     else:
         _assert_trees_close(h_t.final_params, h_f.final_params, tol)
-        np.testing.assert_allclose(h_t.gap, h_f.gap, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(h_t.gap, h_f.gap, rtol=1e-3, atol=1e-5)
     assert h_t.time == h_f.time
     assert h_t.worker == h_f.worker
     assert h_t.lag == h_f.lag

@@ -1,11 +1,21 @@
 """Row-sharded multi-master: equivalence and fault isolation.
 
-The load-bearing contract is *bit-identity*: because every flat-family
-update rule is elementwise per row, splitting the flat buffers into S
+The load-bearing contract is *bit-identity*: because every ELEMENTWISE
+flat-family update rule is per row, splitting the flat buffers into S
 contiguous row ranges and applying the SAME message sequence per shard
 must reproduce the single flat master exactly — state, views, and (in
-deterministic mode) the whole engine replay.  Faults confined to one
-shard must leave the other shards' replay bit-for-bit unchanged.
+deterministic mode) the whole engine replay.  That now includes the
+sent-snapshot members dc-asgd and dana-dc (the snapshot slab shards by
+the same row ranges).  Gap-aware (ga-asgd) needs a global norm per
+message; its shards rendezvous in a ``_NormExchange`` and match the
+single master to float tolerance (the per-shard partial sum reorders
+the reduction).  Faults confined to one shard must leave the other
+shards' replay bit-for-bit unchanged.
+
+Eval snapshots use a common applied-count watermark: fused chunks never
+straddle a multiple of ``eval_every``, so every shard contributes the
+state at exactly the same message count even when their drain batches
+differ (the cross-shard snapshot-consistency regression test below).
 """
 import threading
 
@@ -21,7 +31,7 @@ from repro.core import (HyperParams, REGISTRY, SimulationConfig,
                         make_algorithm, run_simulation)
 from repro.core.metrics import History
 from repro.data.synthetic import ClassificationTask
-from repro.kernels.flat_update import kernel_eligible
+from repro.kernels.flat_update import kernel_eligible, shard_bitexact
 from repro.models.toy import make_classifier_fns
 
 HP = HyperParams(lr=0.05, momentum=0.9)
@@ -32,6 +42,9 @@ EVAL_FN = MAKE_EVAL(TASK.eval_batch(32))
 
 ELIGIBLE = sorted(n for n in REGISTRY
                   if kernel_eligible(make_algorithm(n, HP)))
+# the shard-bit-exact (elementwise) subset: everything but ga-asgd
+ELEMENTWISE = sorted(n for n in ELIGIBLE
+                     if shard_bitexact(make_algorithm(n, HP)))
 
 
 def _assert_trees_equal(a, b):
@@ -111,11 +124,12 @@ def _drive_sharded(name, n, shards, perm_shard=None, perm=None):
 # equivalence: sharded == single flat master, bit for bit
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("shards", [1, 2, 4])
-@pytest.mark.parametrize("name", ELIGIBLE)
+@pytest.mark.parametrize("name", ELEMENTWISE)
 def test_sharded_equals_single_master(name, shards):
     """S row-range shards applying the same sequence must reproduce the
     single flat master exactly — full state AND every worker view —
-    for every kernel-eligible algorithm, duplicate ids included."""
+    for every elementwise kernel-eligible algorithm (the sent-snapshot
+    members dc-asgd / dana-dc included), duplicate ids included."""
     single, views_s = _drive_single(name, n=4)
     sharded, views_h = _drive_sharded(name, n=4, shards=shards)
     _assert_trees_equal(single.master_params(), sharded.master_params())
@@ -123,6 +137,70 @@ def test_sharded_equals_single_master(name, shards):
     assert len(views_s) == len(views_h) == 12
     for a, b in zip(views_s, views_h):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_gap_exchange_matches_single_master(shards):
+    """ga-asgd's three-step shard pipeline (partial -> combined gap2 ->
+    apply -> combined ||v'||^2 -> avg_step) must reproduce the single
+    flat master to float tolerance — per-shard partial sums reorder the
+    norm reduction, which is exactly why ga-asgd is shard-eligible but
+    not shard-bit-exact."""
+    single, views_s = _drive_single("ga-asgd", n=4)
+    algo = make_algorithm("ga-asgd", HP)
+    sm = ShardedMaster(algo, algo.init(PARAMS0, 4), shards=shards,
+                       history=History(), stop=threading.Event(),
+                       total_grads=100, record_telemetry=False)
+    assert sm.coalesce == 1            # clamped: per-message exchange
+    spec = sm.spec
+    views_h = []
+    for ids, seed in BATCHES:
+        for j, wid in enumerate(ids):
+            g_flat = spec.pack(_grads(len(ids), seed)[j])
+            i32 = jnp.int32(wid)
+            # the serve loop's exchange, driven synchronously: combine
+            # the S partials in shard order, then apply per shard
+            parts = [float(srv._gap_partial_jit(srv.state, i32))
+                     for srv in sm.shards_]
+            gap2 = float(np.float32(sum(np.float32(p) for p in parts)))
+            outs = []
+            for srv in sm.shards_:
+                st, hat, vn2, lr, vs, _, _ = srv._gap_apply_jit(
+                    srv.state, i32, g_flat[srv.r0:srv.r1],
+                    jnp.float32(gap2), None)
+                outs.append((srv, st, hat, vn2, lr, vs))
+            vn2_t = float(np.float32(sum(np.float32(float(o[3]))
+                                         for o in outs)))
+            for srv, st, hat, vn2, lr, vs in outs:
+                srv.state = srv._gap_finish_jit(st, jnp.float32(vn2_t),
+                                                lr, vs)
+            views_h.append(jnp.concatenate(
+                [o[2] for o in outs], axis=0))
+    for a, b in zip(jax.tree.leaves(single.state),
+                    jax.tree.leaves(sm.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    for a, b in zip(views_s, views_h):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_sharded_gap_deterministic_cluster_matches_single():
+    """End to end: the threaded ga-asgd sharded cluster (deterministic
+    mode, real _NormExchange rendezvous) tracks the single flat master
+    run to float tolerance."""
+    def run(shards):
+        algo = make_algorithm("ga-asgd", HP)
+        cfg = ClusterConfig(num_workers=4, total_grads=60,
+                            mode="deterministic", shards=shards,
+                            use_kernel=True, record_telemetry=False)
+        return run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg)
+
+    h1, h3 = run(1), run(3)
+    for a, b in zip(jax.tree.leaves(h1.final_params),
+                    jax.tree.leaves(h3.final_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-5, atol=5e-6)
 
 
 def test_sharded_deterministic_cluster_matches_engine():
@@ -151,10 +229,12 @@ def test_sharded_deterministic_cluster_matches_engine():
     np.testing.assert_allclose(h_c.grad_norm, h_e.grad_norm, rtol=1e-5)
 
 
-@pytest.mark.parametrize("name", ["multi-asgd", "dana-nadam"])
+@pytest.mark.parametrize("name", ["multi-asgd", "dana-nadam", "dc-asgd",
+                                  "dana-dc"])
 def test_sharded_deterministic_matches_single_flat(name):
     """Sharded vs single-master flat cluster, same deterministic run:
-    identical parameters for the non-DANA family members too."""
+    identical parameters for the non-DANA family members and the newly
+    eligible sent-snapshot members too."""
     def run(shards):
         algo = make_algorithm(name, HP)
         cfg = ClusterConfig(num_workers=3, total_grads=60,
@@ -177,6 +257,59 @@ def test_sharded_free_mode_completes():
     assert stats["shard_applied"] == [240] * 4
     assert sum(stats["grads_per_worker"].values()) == 240
     assert hist.final_params is not None
+
+
+def test_eval_watermark_consistency_under_coalescing():
+    """Regression (ROADMAP follow-up: cross-shard eval snapshot
+    consistency).  With deep queues and coalesce=8 > eval_every=3, drain
+    batches straddle eval boundaries; the serve loop must split chunks
+    at the watermark so every eval observes the state at EXACTLY a
+    multiple of eval_every applied messages — identical across a k=1
+    master, a deep-coalescing master, and every shard of a sharded
+    master."""
+    total, every = 24, 3
+    ids = [j % 4 for j in range(total)]
+    grads = _grads(total, seed=9)
+
+    def run(shards, coalesce):
+        algo = make_algorithm("dana-zero", HP)
+        stop = threading.Event()
+        kw = dict(history=History(), stop=stop, total_grads=total,
+                  coalesce=coalesce, eval_fn=EVAL_FN, eval_every=every,
+                  record_telemetry=False)
+        if shards == 1:
+            mb = Mailbox()
+            m = Master(algo, algo.init(PARAMS0, 4), mailbox=mb,
+                       use_kernel=True, **kw)
+            spec = m._flat_algo.spec
+            for wid, g in zip(ids, grads):
+                mb.put(GradMsg(wid, spec.pack(g), None, 0, 0.0), stop)
+        else:
+            m = ShardedMaster(algo, algo.init(PARAMS0, 4),
+                              shards=shards, **kw)
+            for wid, g in zip(ids, grads):
+                gf = m.spec.pack(g)
+                m.frontdoor.put(
+                    GradMsg(wid, tuple(sub.take(gf) for sub in m.subs),
+                            None, 0, 0.0), stop)
+        m.serve()
+        return m
+
+    ref = run(1, coalesce=1)               # per-message: exact by def.
+    deep = run(1, coalesce=8)
+    shard = run(2, coalesce=8)
+    marks = list(range(every, total + 1, every))
+    assert ref.history.eval_step == marks
+    # coalescing really happened (the test would be vacuous otherwise)
+    assert max(deep.coalesce_counts) > 1
+    assert max(shard.coalesce_counts) > 1
+    curve = dict(zip(ref.history.eval_step, ref.history.eval_loss))
+    for m in (deep, shard):
+        # shard threads may RECORD evals out of order; the watermark
+        # contract is about the step -> snapshot mapping
+        assert sorted(m.history.eval_step) == marks
+        assert dict(zip(m.history.eval_step,
+                        m.history.eval_loss)) == curve
 
 
 def test_sharded_live_telemetry_and_eval():
