@@ -18,10 +18,14 @@ Three measurements:
 * **master capacity** — messages/sec the master's fused receive pass can
   apply, timed synchronously on the real hot path (no threads).  This is
   the clean "master updates/sec" number per path.  Swept per algorithm
-  (``--algos``: the DC/gap-aware sent-snapshot members ride the same
-  batched kernel since PR 4) and, with ``--sched``, under a moving
-  step-decay learning-rate schedule (the lifted constant-lr
-  restriction: scheduled runs are flat-eligible too).
+  (``--algos``: the DC/gap-aware sent-snapshot members ride the batched
+  kernel since PR 4; asgd, lwp and rate-weighted dana-hetero since
+  PR 5) and, with ``--sched``, under a moving step-decay learning-rate
+  schedule (the lifted constant-lr restriction: scheduled runs are
+  flat-eligible too).
+* **send capacity** — views/sec of the look-ahead view construction
+  (the pull path): the weighted-slab reduction kernel vs the per-leaf
+  pytree send, per swept algorithm.
 * **sharded capacity** — the same fused pass row-sharded across S
   concurrent shard servers (S ∈ {1, 2, 4, 8} by default): each shard
   thread applies the batch to only its row range, so the per-shard work
@@ -49,8 +53,9 @@ from repro.core.metrics import History
 from repro.core.schedules import Schedule
 from repro.core.types import HyperParams
 from repro.data.synthetic import ClassificationTask
-from repro.kernels.flat_update import (FLAT_ELIGIBLE, eligibility_matrix,
-                                       kernel_eligible)
+from repro.kernels.flat_update import (FLAT_ELIGIBLE, SEND_KERNEL,
+                                       eligibility_matrix,
+                                       kernel_eligible, send_spec_for)
 from repro.models.toy import make_classifier_fns
 
 from .common import print_csv, save_json
@@ -68,13 +73,18 @@ def _sched(num_workers: int) -> Schedule:
 
 def check_eligibility_matrix() -> dict:
     """Assert the documented eligibility matrix (fail the bench — and CI
-    smoke — on a silent kernel_eligible regression)."""
+    smoke — on a silent kernel_eligible / send_kernel regression)."""
     matrix = eligibility_matrix()
     flat_now = sorted(n for n in matrix if matrix[n]["flat"])
     if flat_now != sorted(FLAT_ELIGIBLE):
         raise RuntimeError(
             f"kernel eligibility regressed: flat-eligible set is "
             f"{flat_now}, documented {sorted(FLAT_ELIGIBLE)}")
+    send_now = sorted(n for n in matrix if matrix[n]["send_kernel"])
+    if send_now != sorted(SEND_KERNEL):
+        raise RuntimeError(
+            f"send-kernel eligibility regressed: {send_now}, "
+            f"documented {sorted(SEND_KERNEL)}")
     for name in FLAT_ELIGIBLE:
         if not (matrix[name]["schedule"] and matrix[name]["shard"]):
             raise RuntimeError(
@@ -130,12 +140,14 @@ def master_capacity_row(algo_name: str, num_workers: int, k: int,
     nows = jnp.zeros((k,), jnp.float32)
     grads = tuple(grad for _ in range(k))
 
-    out = fn(bench_state, ids, nows, grads, None)        # compile
-    jax.block_until_ready(out[0])
+    # the flat fused pass DONATES its state (in-place kernel update), so
+    # the state threads through continuously instead of resetting per
+    # trial — never reuse a donated buffer
+    s = fn(bench_state, ids, nows, grads, None)[0]       # compile
+    jax.block_until_ready(jax.tree.leaves(s)[0])
     dt = float("inf")                                    # best of 3 trials
     for _ in range(3):
         t0 = time.perf_counter()
-        s = bench_state
         for _ in range(reps):
             s, *_ = fn(s, ids, nows, grads, None)
         jax.block_until_ready(s)
@@ -168,29 +180,28 @@ def sharded_capacity_row(algo_name: str, num_workers: int, k: int,
     gbuf = master.spec.pack(jax.jit(grad_fn)(params0, next_batch(0, 0)))
     ids = jnp.asarray([j % num_workers for j in range(k)], jnp.int32)
     nows = jnp.zeros((k,), jnp.float32)
-    plans = []                          # (fn, state0, grads) per shard
+    plans = []                          # [fn, live_state, grads] per shard
     for srv in master.shards_:
         fn = srv._get_fused(k, telemetry=False)
         grads = tuple(gbuf[srv.r0:srv.r1] for _ in range(k))
+        # donated state: carry the compile call's output forward
         out = fn(srv.state, ids, nows, grads, None)          # compile
         jax.block_until_ready(out[0]["theta"])
-        plans.append((fn, srv.state, grads))
+        plans.append([fn, out[0], grads])
 
-    def shard_loop(plan, barrier, out, idx):
+    def shard_loop(plan, barrier):
         fn, s, grads = plan
         barrier.wait()
         for _ in range(reps):
             s, *_ = fn(s, ids, nows, grads, None)
         jax.block_until_ready(s["theta"])
-        out[idx] = s
+        plan[1] = s                     # donated: thread across trials
 
     dt = float("inf")                                        # best of 3
     for _ in range(3):
         barrier = threading.Barrier(shards + 1)
-        states: list = [None] * shards
-        threads = [threading.Thread(target=shard_loop,
-                                    args=(p, barrier, states, i))
-                   for i, p in enumerate(plans)]
+        threads = [threading.Thread(target=shard_loop, args=(p, barrier))
+                   for p in plans]
         for t in threads:
             t.start()
         barrier.wait()
@@ -198,12 +209,59 @@ def sharded_capacity_row(algo_name: str, num_workers: int, k: int,
         for t in threads:
             t.join()
         dt = min(dt, (time.perf_counter() - t0) / reps)
+    for srv, plan in zip(master.shards_, plans):
+        srv.state = plan[1]         # re-point at the live (donated) state
     return {
         "section": "sharded", "algo": algo_name, "workers": num_workers,
         "k": k, "shards": shards, "width": width,
         "rows": master.spec.rows,
         "us_per_msg": dt / k * 1e6,
         "master_updates_per_s": k / dt,
+    }
+
+
+def send_capacity_row(algo_name: str, num_workers: int, path: str,
+                      reps: int = 400):
+    """Views/sec of the master's SEND (look-ahead view construction) —
+    the pull-path hot loop (initial views, rejoin pulls, and every
+    per-message reply view on the tree path).
+
+    * **tree** — the algorithm's declarative pytree send (tensordot +
+      axpy per leaf);
+    * **flat** — the weighted-slab reduction kernel
+      (``repro.kernels.flat_update.send``) on (R, 128) rows, the same
+      kernel every flat look-ahead member's send reuses.
+    """
+    params0, grad_fn, next_batch = _setup()
+    algo = make_algorithm(algo_name, HP)
+    state = algo.init(params0, num_workers)
+    master = Master(algo, state, mailbox=Mailbox(), history=History(),
+                    stop=threading.Event(), total_grads=1,
+                    use_kernel=path == "flat", record_telemetry=False)
+    # one real receive so momentum/rate state is non-trivial
+    grad = jax.jit(grad_fn)(params0, next_batch(0, 0))
+    if path == "flat":
+        gbuf = master._flat_algo.spec.pack(grad)
+        st, _, _ = master._flat_algo.apply_batch(
+            master._flat_state, jnp.zeros((1,), jnp.int32), gbuf[None])
+        fn = master._flat_send_jit
+    else:
+        st = algo.receive(state, jnp.int32(0), grad)
+        fn = master._send_jit
+    i = jnp.int32(1)
+    view, st = fn(st, i)                                 # compile
+    jax.block_until_ready(jax.tree.leaves(view)[0])
+    dt = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            view, st = fn(st, i)
+        jax.block_until_ready(jax.tree.leaves(view)[0])
+        dt = min(dt, (time.perf_counter() - t0) / reps)
+    return {
+        "section": "send", "algo": algo_name, "workers": num_workers,
+        "path": path, "us_per_view": dt * 1e6,
+        "views_per_s": 1.0 / dt,
     }
 
 
@@ -268,6 +326,16 @@ def main(argv=None):
             if path in _paths_for(algo0):
                 cap_rows.append(master_capacity_row(
                     algo0, n0, k_hi, path, reps=args.reps, sched=True))
+    # send-path sweep: the look-ahead view construction, tree vs the
+    # weighted-slab reduction kernel, for every swept algorithm
+    send_rows = []
+    for algo_name in args.algos:
+        for path in ("tree", "flat"):
+            if path == "flat" and "flat" not in _paths_for(algo_name):
+                continue
+            send_rows.append(send_capacity_row(
+                algo_name, max(args.workers), path,
+                reps=max(args.reps, 50)))
     paths = _paths_for(algo0)
     shard_rows = []
     if "flat" in paths and args.shards:
@@ -287,6 +355,9 @@ def main(argv=None):
 
     print_csv(cap_rows, ["section", "algo", "workers", "k", "path",
                          "sched", "us_per_msg", "master_updates_per_s"])
+    if send_rows:
+        print_csv(send_rows, ["section", "algo", "workers", "path",
+                              "us_per_view", "views_per_s"])
     if shard_rows:
         print_csv(shard_rows, ["section", "algo", "workers", "k", "shards",
                                "width", "rows", "us_per_msg",
@@ -326,11 +397,23 @@ def main(argv=None):
         claims["flat_over_tree_capacity_x"] = (
             _cap(n0, k_hi, "flat") / _cap(n0, k_hi, "tree"))
     # per-algorithm batched-kernel margin (the DC/gap-aware family rides
-    # the same flat path since PR 4)
+    # the same flat path since PR 4; asgd/lwp/dana-hetero since PR 5)
     claims["flat_over_tree_capacity_x_by_algo"] = {
         a: _cap(n0, k_hi, "flat", algo=a) / _cap(n0, k_hi, "tree", algo=a)
         for a in args.algos if "flat" in _paths_for(a)
     }
+    if send_rows:
+        def _send(algo, path):
+            return next(r["views_per_s"] for r in send_rows
+                        if r["algo"] == algo and r["path"] == path)
+        # send-path margin: the weighted-slab reduction kernel vs the
+        # per-leaf pytree send, for the swept look-ahead members
+        claims["send_flat_over_tree_x_by_algo"] = {
+            a: _send(a, "flat") / _send(a, "tree")
+            for a in args.algos
+            if "flat" in _paths_for(a)
+            and send_spec_for(make_algorithm(a, HP)).source is not None
+        }
     if args.sched and "flat" in paths:
         claims["sched_flat_over_tree_capacity_x"] = (
             _cap(n0, k_hi, "flat", sched=True)
@@ -359,9 +442,10 @@ def main(argv=None):
             _live(n0, k_hi, "steady_updates_per_s")
             > _live(n0, 1, "steady_updates_per_s"))
     print("claims:", claims)
-    save_json(args.out, {"capacity": cap_rows, "sharded": shard_rows,
-                         "live": live_rows, "claims": claims})
-    return cap_rows + shard_rows + live_rows, claims
+    save_json(args.out, {"capacity": cap_rows, "send": send_rows,
+                         "sharded": shard_rows, "live": live_rows,
+                         "claims": claims})
+    return cap_rows + send_rows + shard_rows + live_rows, claims
 
 
 if __name__ == "__main__":

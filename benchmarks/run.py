@@ -53,12 +53,12 @@ SUITES = {
     "cluster": (bench_cluster,                            # App. C.1 bottleneck
                 ["--grads", "2500", "--workers", "8",
                  "--coalesce", "1", "4", "8",
-                 "--algos", "dana-zero", "dana-dc"],
+                 "--algos", "dana-zero", "dana-dc", "dana-hetero"],
                 ["--grads", "8000", "--workers", "8", "16", "32",
                  "--coalesce", "1", "2", "4", "8",
                  "--shards", "1", "2", "4", "8",
                  "--algos", "dana-zero", "dana-dc", "dc-asgd",
-                 "ga-asgd"]),
+                 "ga-asgd", "dana-hetero", "lwp", "asgd"]),
     "scaling-lm": (bench_scaling,                         # Fig. 7 / Tab. 5
                    ["--preset", "lm", "--grads", "600", "--workers", "1",
                     "4", "8", "--algos", "nag-asgd", "dana-slim"],
@@ -85,12 +85,14 @@ QUICK = {
     # the sharded capacity sweep must stay exercised in CI: at least two
     # shard counts so the S-scaling claim is present in the trajectory
     # (narrow --shard-width keeps the smoke compile cheap); --algos must
-    # cover at least one sent-snapshot member so a kernel-eligibility
-    # regression for the DC/gap-aware family fails the smoke
+    # cover at least one sent-snapshot member (dc-asgd) AND the
+    # rate-weighted member (dana-hetero, PR 5) so a kernel- or
+    # send-kernel-eligibility regression fails the smoke
     "cluster": ["--grads", "160", "--workers", "4",
                 "--coalesce", "1", "4", "--shards", "1", "2",
                 "--shard-width", "256", "--reps", "10",
-                "--algos", "dana-zero", "dc-asgd", "--out", ""],
+                "--algos", "dana-zero", "dc-asgd", "dana-hetero",
+                "--out", ""],
     "scaling-lm": ["--preset", "lm", "--grads", "60", "--workers", "2",
                    "--algos", "dana-slim", "--out", ""],
 }

@@ -13,16 +13,24 @@ On top of coalescing sit two kernel paths:
 
 * **flat** (the default whenever ``use_kernel``): the whole flat family
   — per-worker momentum (dana-zero, multi-asgd, dana-slim, nag-asgd,
-  dana-nadam) plus the sent-snapshot members (dc-asgd, dana-dc,
-  ga-asgd) — runs on flat (R, 128) state packed ONCE at init;
-  ``repro.kernels.flat_update`` applies all k drained messages in a
-  single batched kernel (Pallas on TPU, bit-identical jnp reference
-  elsewhere; gap-aware runs the two-pass reference on every backend).
-  Moving lr schedules are fed in as per-message lr(t)/lr(t+1) scalars
-  with the lazy momentum-correction rescale, so the flat pass matches
-  the algorithm path's receive->send bit-for-bit for the elementwise
-  family, schedules included (tested).  No per-call, per-leaf padding;
-  pytrees only at the edges (incoming grads, outgoing views).
+  dana-nadam, nadam-asgd), the sent-snapshot members (dc-asgd, dana-dc,
+  ga-asgd), the momentum-free/shared-look-ahead members (asgd, lwp) and
+  the rate-weighted extension (dana-hetero) — runs on flat (R, 128)
+  state packed ONCE at init; ``repro.kernels.flat_update`` applies all
+  k drained messages in a single batched kernel (Pallas on TPU,
+  bit-identical jnp reference elsewhere; gap-aware lowers to a
+  two-phase Pallas grid on TPU with the jnp reference as the
+  cross-backend oracle).  Message timestamps ride in as per-message
+  ``nows`` so dana-hetero's rate lane advances exactly like the tree
+  path's ``now`` argument.  Moving lr schedules are fed in as
+  per-message lr(t)/lr(t+1) scalars with the lazy momentum-correction
+  rescale, so the flat pass matches the algorithm path's receive->send
+  bit-for-bit for the elementwise family, schedules included (tested).
+  Look-ahead sends (pull replies, initial views) run the weighted-slab
+  reduction kernel (``flat_update/send.py``).  The fused pass donates
+  the flat state (``input_output_aliases`` in the kernel), halving the
+  master-state traffic.  No per-call, per-leaf padding; pytrees only at
+  the edges (incoming grads, outgoing views).
 * **legacy tree kernel** (explicit ``flat=False``, DANA-Zero only): PR
   1's per-message ``dana_update`` routing — k sequential kernel rounds
   inside the fused jit, re-padding every leaf per call.  Kept ONLY as
@@ -243,6 +251,10 @@ class Master:
             views = (tuple(view for _ in range(k))
                      if self.record_telemetry else None)
             fn, st = self._fused_for(k, self.record_telemetry)
+            if self.state_is_flat:
+                # the fused flat pass donates its state argument; warm
+                # on a copy so the live state's buffers survive
+                st = jax.tree.map(jnp.copy, st)
             out = fn(st, ids, nows, grads, views)
             jax.block_until_ready(jax.tree.leaves(out[0])[0])
             k *= 2
@@ -270,7 +282,7 @@ class Master:
 
         def fused(flat, ids, nows, grads, views):
             g_flat = jnp.stack(grads)
-            flat, hats, pres = fa.apply_batch(flat, ids, g_flat,
+            flat, hats, pres = fa.apply_batch(flat, ids, g_flat, nows,
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
             if telemetry:
@@ -280,7 +292,10 @@ class Master:
                 return flat, out_views, gaps, gnorms
             return flat, out_views, None, None
 
-        fn = jax.jit(fused)
+        # the flat state is donated: the batched kernel aliases its state
+        # inputs to its outputs (input_output_aliases), so the update
+        # runs in place — callers rebind to the returned state
+        fn = jax.jit(fused, donate_argnums=(0,))
         self._fused[key] = fn
         return fn
 

@@ -90,9 +90,14 @@ def run_cluster(
         # the flat fused path feeds per-message lr(t)/lr(t+1) scalars and
         # the lazy momentum-correction rescale into the kernel, so it
         # reproduces the algorithm path bit-for-bit, moving schedules
-        # included (gap-aware agrees to reduction-order tolerance).
-        # The sharded master exists only on the flat path, so shards > 1
-        # forces it (ShardedMaster rejects ineligible algorithms itself).
+        # included (gap-aware and dana-hetero's rate-weighted views
+        # agree to reduction-order tolerance).  dana-hetero's rate
+        # telemetry is wired from real message timestamps: the master
+        # passes each drained message's t_send into the fused pass as
+        # its ``now``, exactly what the tree path's receive(now=...)
+        # sees.  The sharded master exists only on the flat path, so
+        # shards > 1 forces it (ShardedMaster rejects ineligible
+        # algorithms itself).
         use_kernel = sharded or (not deterministic
                                  and kernel_eligible(algo))
     if sharded and not use_kernel:
@@ -267,11 +272,19 @@ def run_cluster(
             stats_out["shard_applied"] = master.shard_applied
         if master.state_is_flat:
             fa = master._flat_algo
+            flat = (master.shards_[0].state if sharded
+                    else master._flat_state)
             if fa.lane is not None:
                 # staleness signal from the flat scalar lane: age (in
                 # master updates) of each worker's sent snapshot
-                flat = (master.shards_[0].state if sharded
-                        else master._flat_state)
                 stats_out["sent_staleness"] = [
                     float(x) for x in np.asarray(fa.staleness(flat))]
+            if fa.fam.rate_weighted:
+                # rate telemetry from the flat rate lane: the EMA of
+                # each worker's inter-push interval (dana-hetero's
+                # weighting signal, fed from real message timestamps)
+                from ..core.flat import RATE_INTERVAL, RATE_LANE
+                stats_out["rate_intervals"] = [
+                    float(x) for x in np.asarray(
+                        RATE_LANE.get(flat["rate"], RATE_INTERVAL))]
     return history

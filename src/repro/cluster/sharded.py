@@ -41,15 +41,20 @@ Cross-shard aggregation happens OFF the hot path:
 
 One family member needs cross-shard data ON the hot path: gap-aware
 (ga-asgd) scales each gradient by the norm of ``theta - sent_i`` over
-ALL rows.  Its shards run at coalesce=1 and rendezvous per message in a
-``_NormExchange``: each shard publishes its rows' partial ``sum d^2``,
-reads back the shard-ordered sum, applies, then exchanges the update
--norm partial the same way for the ``avg_step`` EMA.  Every shard sees
-the identical combined norms, so their scalar trajectories stay equal —
-but the partial-sum reduction order differs from the single master's
-full-buffer sum, so sharded gap-aware matches the single flat master to
-float tolerance, not bit-exactly (the elementwise family stays
-bit-exact; see ``eligibility_matrix``).
+ALL rows.  Its shards drain real coalesced batches and stream each
+message's two scalars (the gap partial ``sum d^2`` before applying, the
+update-norm partial for the ``avg_step`` EMA after) through a lock-free
+``_NormExchange`` ring — one blocking rendezvous per drained batch in
+the balanced steady state, not two per message (the PR-4 coalesce=1
+clamp is gone).  Every shard sees the identical combined norms, so
+their scalar trajectories stay equal — but the partial-sum reduction
+order differs from the single master's full-buffer sum, so sharded
+gap-aware matches the single flat master to float tolerance, not
+bit-exactly (the elementwise family stays bit-exact; see
+``eligibility_matrix``).  The rate-weighted member (dana-hetero) needs
+no exchange at all: its weighted send reduces per row, and the rate
+lane replicates per shard through the existing copied-scalar path
+(every shard sees every message with the same timestamp).
 
 Fault injection is per shard: each server owns a ``FaultInjector`` with
 a shard-seeded reorder substream (``FaultPlan.reorder_shards`` confines
@@ -77,43 +82,61 @@ from .master import run_serve_loop
 
 
 class _NormExchange:
-    """Per-message cross-shard scalar reduction for the gap-aware hot
-    path: shard ``sid`` publishes its f32 partial for sequence number
-    ``seq`` (its applied count — identical across shards, the fan-out is
-    atomic FIFO) and blocks until all S partials are in; every shard
-    reads back the SAME shard-ordered f32 sum, so their downstream
-    scalar trajectories (penalty, avg_step) are bit-identical to each
-    other.  Stop-aware: a cluster shutdown aborts waiters instead of
-    hanging them."""
+    """Cross-shard scalar-sum exchange for the gap-aware hot path.
+
+    Each message needs two shard-ordered f32 sums: phase 0 the gap
+    partials ``sum d^2`` (before any shard may apply), phase 1 the
+    update-norm partials ``||v'||^2`` (before the avg_step EMA).  PR 4
+    ran one condition-variable rendezvous per scalar — two lock +
+    notify_all round trips per message — and clamped the gap-aware
+    shards to coalesce=1.  The exchange is now a preallocated ring:
+    shard ``sid`` publishes its partial for (seq, phase) with a
+    GIL-atomic numpy store (value first, generation stamp second, so a
+    reader that sees the stamp sees the value) and reads peers back
+    with a bounded spin.  Message sequence is identical across shards
+    (the fan-out is atomic FIFO) and a shard cannot run ahead of its
+    peers by more than one message (it needs THEIR partials to finish
+    seq before publishing seq+1), so intra-batch totals stream through
+    the ring without any lock — shards working through the same drained
+    batch meet each other's values already published.  Only when a peer
+    genuinely falls behind (batch boundaries misaligned, scheduler
+    hiccup) does the reader fall back to a sleeping wait: one blocking
+    rendezvous per drained batch in the balanced steady state, instead
+    of 2k.  Every shard computes the SAME shard-ordered f32 sum, so
+    downstream scalar trajectories (penalty, avg_step) stay
+    bit-identical to each other.  Stop-aware: a cluster shutdown aborts
+    waiters instead of hanging them."""
+
+    WINDOW = 256          # ring depth (skew is <= 1 message, see above)
+    SPINS = 2000          # GIL-yield spins before the sleeping fallback
 
     def __init__(self, shards: int, stop: threading.Event):
         self.shards = shards
         self.stop = stop
-        self._cond = threading.Condition()
-        self._slots: dict[int, dict[int, float]] = {}
-        self._totals: dict[int, list] = {}      # seq -> [total, readers]
+        self.vals = np.zeros((self.WINDOW, 2, shards), np.float32)
+        self.gen = np.zeros((self.WINDOW, 2, shards), np.int64)
 
-    def combine(self, sid: int, seq: int, partial: float) -> float:
-        with self._cond:
-            slot = self._slots.setdefault(seq, {})
-            slot[sid] = partial
-            if len(slot) == self.shards:
-                total = np.float32(0.0)         # f32, shard order: every
-                for s in range(self.shards):    # shard computes the same
-                    total = np.float32(total + np.float32(slot[s]))
-                self._totals[seq] = [float(total), self.shards]
-                self._cond.notify_all()
-            while seq not in self._totals:
+    def combine(self, sid: int, seq: int, phase: int,
+                partial: float) -> float:
+        slot = seq % self.WINDOW
+        g = seq // self.WINDOW + 1
+        self.vals[slot, phase, sid] = np.float32(partial)
+        self.gen[slot, phase, sid] = g          # publish AFTER the value
+        row = self.gen[slot, phase]
+        spins = 0
+        while not (row >= g).all():
+            spins += 1
+            if spins <= self.SPINS:
+                time.sleep(0)                   # yield the GIL
+            else:
                 if self.stop.is_set():
                     raise RuntimeError(
                         "norm exchange aborted: cluster stopping")
-                self._cond.wait(timeout=0.05)
-            entry = self._totals[seq]
-            entry[1] -= 1
-            if entry[1] == 0:                   # last reader cleans up
-                del self._totals[seq]
-                del self._slots[seq]
-            return entry[0]
+                time.sleep(5e-5)
+        total = np.float32(0.0)                 # f32, shard order: every
+        for s in range(self.shards):            # shard computes the same
+            total = np.float32(total + self.vals[slot, phase, s])
+        return float(total)
 
 
 class _ShardServer:
@@ -164,7 +187,7 @@ class _ShardServer:
 
         def fused(flat, ids, nows, grads, views):
             g = jnp.stack(grads)
-            flat, hats, pres = fa.apply_batch(flat, ids, g,
+            flat, hats, pres = fa.apply_batch(flat, ids, g, nows,
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
             if telemetry:
@@ -175,7 +198,8 @@ class _ShardServer:
                         jnp.sum(g * g, axis=(1, 2)))
             return flat, out_views, None, None
 
-        fn = jax.jit(fused)
+        # shard state donated: in-place kernel update (see Master)
+        fn = jax.jit(fused, donate_argnums=(0,))
         self._fused[key] = fn
         return fn
 
@@ -195,7 +219,9 @@ class _ShardServer:
         k = 1
         while k <= self.coalesce:
             fn = self._get_fused(k, self.telemetry)
-            out = fn(self.state, jnp.zeros((k,), jnp.int32),
+            # the fused pass donates its state argument; warm on a copy
+            out = fn(jax.tree.map(jnp.copy, self.state),
+                     jnp.zeros((k,), jnp.int32),
                      jnp.zeros((k,), jnp.float32),
                      tuple(zero for _ in range(k)),
                      tuple(view for _ in range(k)) if self.telemetry
@@ -204,36 +230,42 @@ class _ShardServer:
             k *= 2
 
     def _apply_gap(self, work: list):
-        """Gap-aware shard apply: one message, two norm exchanges (see
-        module docstring).  The sharded master clamps coalesce to 1 for
-        gap-aware members, so ``work`` is always a single message."""
-        (m,) = work
-        i = jnp.int32(m.worker_id)
+        """Gap-aware shard apply: the whole drained chunk, two norm
+        combines per message through the streaming ``_NormExchange``
+        ring (see its docstring — one blocking rendezvous per drained
+        batch in the balanced case).  Messages stay strictly sequential
+        (each needs the combined global norms of its predecessors), so
+        the batch win is amortized drain/reply/dispatch, exactly like
+        the legacy per-message kernel path."""
         telemetry = self.telemetry
-        seq = self.applied
-        partial = float(self._gap_partial_jit(self.state, i))
-        gap2 = self.owner._gap_ex.combine(self.sid, seq, partial)
-        st, hat, vn2, lr, vs, d2, g2 = self._gap_apply_jit(
-            self.state, i, m.grad, jnp.float32(gap2),
-            m.view if telemetry else None)
-        vn2_t = self.owner._vn_ex.combine(self.sid, seq, float(vn2))
-        self.state = self._gap_finish_jit(st, jnp.float32(vn2_t), lr, vs)
-        t0 = self._step
-        self._step = t0 + 1
-        self.applied += 1
-        if self.sid == 0 and self.applied == self.owner._steady_mark:
-            self.owner.steady_t = time.perf_counter()
-        if telemetry:
-            m.group.add_telemetry(
-                self.sid, worker=m.worker_id, step=t0 + 1,
-                lag=t0 - m.view_step, t=self.owner._time_fn(m),
-                d2=float(d2), g2=float(g2))
-        m.respond(Reply(view=hat, step=t0 + 1))
-        if (self.applied % self.owner.eval_every == 0
-                or self.applied == self.total):
-            self.owner._eval_contribute(self.sid, self.applied,
-                                        self.state["theta"],
-                                        self.owner._time_fn(m))
+        ex = self.owner._gap_ex
+        for m in work:
+            i = jnp.int32(m.worker_id)
+            seq = self.applied
+            partial = float(self._gap_partial_jit(self.state, i))
+            gap2 = ex.combine(self.sid, seq, 0, partial)
+            st, hat, vn2, lr, vs, d2, g2 = self._gap_apply_jit(
+                self.state, i, m.grad, jnp.float32(gap2),
+                m.view if telemetry else None)
+            vn2_t = ex.combine(self.sid, seq, 1, float(vn2))
+            self.state = self._gap_finish_jit(st, jnp.float32(vn2_t),
+                                              lr, vs)
+            t0 = self._step
+            self._step = t0 + 1
+            self.applied += 1
+            if self.sid == 0 and self.applied == self.owner._steady_mark:
+                self.owner.steady_t = time.perf_counter()
+            if telemetry:
+                m.group.add_telemetry(
+                    self.sid, worker=m.worker_id, step=t0 + 1,
+                    lag=t0 - m.view_step, t=self.owner._time_fn(m),
+                    d2=float(d2), g2=float(g2))
+            m.respond(Reply(view=hat, step=t0 + 1))
+            if (self.applied % self.owner.eval_every == 0
+                    or self.applied == self.total):
+                self.owner._eval_contribute(self.sid, self.applied,
+                                            self.state["theta"],
+                                            self.owner._time_fn(m))
 
     def _apply(self, work: list):
         if self.owner._gap_ex is not None:
@@ -328,12 +360,22 @@ class ShardedMaster:
         self.total = total_grads
         self.coalesce = max(1, coalesce)
         # gap-aware members exchange two global norms per message across
-        # shards, so their shards apply one message at a time
-        self._gap_ex = self._vn_ex = None
+        # shards through the streaming ring exchange; the PR-4 coalesce=1
+        # clamp is gone — drained batches apply in one _apply_gap call.
+        # EXCEPT under per-shard REORDER injection: the exchange pairs
+        # partials by applied count, which requires every shard to apply
+        # the identical order — a reordered chunk on one shard would
+        # silently cross-pair norms from different messages on ALL
+        # shards.  With a reordering plan attached the shards fall back
+        # to per-message drains (a 1-message chunk cannot be permuted),
+        # exactly the PR-4 behavior the fault tests pin; stall/dropout
+        # -only plans keep the batched exchange (order stays identical).
+        self._gap_ex = None
         if self._flat_algo.fam.gap_aware:
-            self.coalesce = 1
+            if injectors is not None and any(
+                    inj.plan.reorder_prob > 0 for inj in injectors):
+                self.coalesce = 1
             self._gap_ex = _NormExchange(shards, stop)
-            self._vn_ex = _NormExchange(shards, stop)
         self.record_telemetry = record_telemetry
         self.eval_every = max(1, eval_every)
         self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
@@ -407,6 +449,9 @@ class ShardedMaster:
     def _eval_contribute(self, sid: int, step_ev: int, theta_rows, t_ev):
         if self._eval_jit is None:
             return
+        # snapshot a COPY: the contributed rows may sit in the slot while
+        # the shard's donated fused pass overwrites theta in place
+        theta_rows = jnp.copy(theta_rows)
         ready = None
         with self._hist_lock:
             slot = self._eval_slots.setdefault(

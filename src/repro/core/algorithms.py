@@ -51,6 +51,26 @@ from .types import (HyperParams, Pytree, tree_add, tree_axpy, tree_cast,
                     tree_set_index as _tsi)
 
 
+def compose_send_scale(c, *, gamma=None, tau=None, vscale=None):
+    """The send scale c(t) = lr(t) [* gamma] [* tau] [* vscale].
+
+    ONE definition of the factor order, shared by the pytree send
+    (``Algorithm._send_scale``), the flat pull-path send
+    (``FlatAlgorithm._send_scale``) and the batched kernel's per-message
+    hat coefficients (``FlatAlgorithm._msg_scalars``) — the bit-for-bit
+    flat == tree send contract rests on every consumer composing the
+    product identically, so the order lives here, not in comments.
+    Factors may be scalars or per-message vectors; None skips a factor.
+    """
+    if gamma is not None:
+        c = c * gamma
+    if tau is not None:
+        c = c * tau
+    if vscale is not None:
+        c = c * vscale
+    return c
+
+
 def _stacked_zeros(params: Pytree, n: int) -> Pytree:
     return jax.tree.map(
         lambda l: jnp.zeros((n,) + l.shape, l.dtype), params)
@@ -62,10 +82,34 @@ def _stacked_broadcast(params: Pytree, n: int) -> Pytree:
 
 
 class Algorithm:
-    """Base class. Subclasses override _send/_receive on plain pytrees."""
+    """Base class.  Subclasses override ``receive`` on plain pytrees and
+    *declare* their send instead of hand-rolling it: the class attributes
+    below describe the look-ahead view construction
+
+        view_i = theta0 - c(t) * sum_j w_j(state, i) * source_j  [/ denom]
+
+    with c(t) = lr(t) [* gamma] [* tau] [* vscale], and the base
+    ``send`` interprets the description on pytrees.  The flat substrate
+    (``repro.kernels.flat_update.SendSpec``) interprets the SAME fields
+    on (R, 128) rows through the weighted-slab reduction kernel, which
+    is what keeps the tree path and the flat path one definition.
+    Algorithms whose send is not a view construction over master state
+    (EASGD's replica exchange) still override ``send`` directly.
+    """
 
     name: str = "base"
     uses_momentum = True
+
+    # -- declarative send (view construction) ---------------------------
+    send_source: str | None = None   # state key reduced into the view
+    send_stacked: bool = False       # source is a per-worker (N, ...) stack
+    send_weights: str = "ones"       # "ones" | "rate" (w_j = r_j / r_i)
+    send_gamma: bool = False         # c *= hp.momentum
+    send_tau: bool = False           # c *= state["tau"]  (LWP)
+    send_vscale: bool = False        # c *= state["vscale"] (lazy Goyal)
+    send_adaptive: bool = False      # view denom sqrt(u) + EPS (Nadam)
+    snapshot_key: str | None = None  # per-worker sent slab refreshed on send
+    snapshot_view: bool = False      # snapshot <- view (dana-dc) vs theta
 
     def __init__(self, hp: HyperParams = HyperParams(),
                  schedule: Schedule | None = None, nesterov: bool = True):
@@ -84,8 +128,53 @@ class Algorithm:
     def init(self, params: Pytree, num_workers: int) -> dict:
         raise NotImplementedError
 
+    # -- the generic declarative send -----------------------------------
+    def _send_scale(self, state: dict):
+        """c(t): the scalar the reduced source is applied with (the
+        SHARED ``compose_send_scale`` factor order, which the flat path
+        reproduces bit-for-bit)."""
+        return compose_send_scale(
+            self.schedule(state["t"]),
+            gamma=self.hp.momentum if self.send_gamma else None,
+            tau=state["tau"] if self.send_tau else None,
+            vscale=state["vscale"] if self.send_vscale else None)
+
+    def _send_rate_weights(self, state: dict, i):
+        """w_j = r_j / r_i from the per-worker interval EMA (dana-hetero:
+        the expected number of worker-j updates per worker-i interval)."""
+        rates = 1.0 / jnp.maximum(state["interval"], 1e-6)   # [N]
+        return rates / jnp.maximum(rates[i], 1e-6)
+
     def send(self, state: dict, i) -> tuple[Pytree, dict]:
-        return state["theta0"], state
+        if self.send_source is None:
+            view = state["theta0"]
+        else:
+            src = state[self.send_source]
+            if self.send_stacked:
+                # weight choice keys off send_weights, matching
+                # SendSpec.hat_mode on the flat path ("ones" sums the
+                # stack; "rate" is dana-hetero's r_j / r_i)
+                if self.send_weights == "rate":
+                    w = self._send_rate_weights(state, i)
+                else:
+                    n = jax.tree.leaves(src)[0].shape[0]
+                    w = jnp.ones((n,), jnp.float32)
+                src = jax.tree.map(
+                    lambda s: jnp.tensordot(w, s, axes=1), src)
+            c = self._send_scale(state)
+            if self.send_adaptive:
+                view = jax.tree.map(
+                    lambda t, s, u: t - (c * s) / (jnp.sqrt(u) + self.EPS),
+                    state["theta0"], src, state["u"])
+            else:
+                view = tree_axpy(-c, src, state["theta0"])
+        if self.snapshot_key is None:
+            return view, state
+        state = dict(state)
+        sval = view if self.snapshot_view else state["theta0"]
+        state[self.snapshot_key] = tree_set_index(state[self.snapshot_key],
+                                                  i, sval)
+        return view, state
 
     def receive(self, state: dict, i, grad: Pytree, now=0.0) -> dict:
         raise NotImplementedError
@@ -228,6 +317,7 @@ class DCASGD(Algorithm):
     """
 
     name = "dc-asgd"
+    snapshot_key = "sent"
 
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
@@ -235,11 +325,6 @@ class DCASGD(Algorithm):
         s["vscale"] = self._vscale_init()
         s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
         return s
-
-    def send(self, state, i):
-        state = dict(state)
-        state["sent"] = tree_set_index(state["sent"], i, state["theta0"])
-        return state["theta0"], state
 
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
@@ -268,27 +353,28 @@ class LWP(Algorithm):
     """
 
     name = "lwp"
+    send_source = "v"
+    send_tau = True
+    send_vscale = True
 
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
         s["v"] = tree_zeros_like(s["theta0"])
+        s["vscale"] = self._vscale_init()
         tau = self.hp.lwp_tau if self.hp.lwp_tau is not None \
             else float(max(num_workers - 1, 1))
         s["tau"] = jnp.asarray(tau, jnp.float32)
         return s
 
-    def send(self, state, i):
-        lr = self.schedule(state["t"])
-        view = tree_axpy(-state["tau"] * lr, state["v"], state["theta0"])
-        return view, state
-
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
-        lr, corr = self._lr_and_correction(state)
+        lr, vscale = self._lr_and_vscale(state)
         state = dict(state)
-        v = tree_axpy(g, tree_scale(corr, state["v"]), grad)
-        state["theta0"] = tree_axpy(-lr, v, state["theta0"])
+        v = tree_axpy(g, state["v"],                    # stored scale
+                      tree_scale(1.0 / vscale, grad))
+        state["theta0"] = tree_axpy(-lr * vscale, v, state["theta0"])
         state["v"] = v
+        state["vscale"] = vscale
         state["t"] = state["t"] + 1
         state["lr_prev"] = lr
         return state
@@ -303,6 +389,9 @@ class DanaZero(Algorithm):
     """
 
     name = "dana-zero"
+    send_source = "v0"
+    send_gamma = True
+    send_vscale = True
 
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
@@ -310,12 +399,6 @@ class DanaZero(Algorithm):
         s["v0"] = tree_zeros_like(s["theta0"])
         s["vscale"] = self._vscale_init()
         return s
-
-    def send(self, state, i):
-        lr = self.schedule(state["t"])
-        view = tree_axpy(-lr * self.hp.momentum * state["vscale"],
-                         state["v0"], state["theta0"])
-        return view, state
 
     def receive(self, state, i, grad, now=0.0):
         g = self.hp.momentum
@@ -372,17 +455,13 @@ class DanaDC(DanaZero):
     """DANA-DC (Algorithm 7): DANA-Zero + delay compensation."""
 
     name = "dana-dc"
+    snapshot_key = "sent"
+    snapshot_view = True      # the snapshot is the view the worker GOT
 
     def init(self, params, num_workers):
         s = super().init(params, num_workers)
         s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
         return s
-
-    def send(self, state, i):
-        view, state = super().send(state, i)
-        state = dict(state)
-        state["sent"] = tree_set_index(state["sent"], i, view)
-        return view, state
 
     def receive(self, state, i, grad, now=0.0):
         lam = self.hp.dc_lambda
@@ -407,23 +486,19 @@ class DanaHetero(DanaZero):
 
     name = "dana-hetero"
     RATE_EMA = 0.8
+    # rate-weighted sum over ALL momentum slabs (stored scale):
+    # view_i = theta0 - lr*gamma*vscale * sum_j (r_j / r_i) v^j
+    send_source = "v"
+    send_stacked = True
+    send_weights = "rate"
+    send_gamma = True
+    send_vscale = True
 
     def init(self, params, num_workers):
         s = super().init(params, num_workers)
         s["last_t"] = jnp.zeros((num_workers,), jnp.float32)
         s["interval"] = jnp.ones((num_workers,), jnp.float32)
         return s
-
-    def send(self, state, i):
-        lr = self.schedule(state["t"])
-        rates = 1.0 / jnp.maximum(state["interval"], 1e-6)   # [N]
-        w = rates / jnp.maximum(rates[i], 1e-6)              # r_j / r_i
-        # weighted sum of per-worker momentum vectors (stored scale)
-        weighted = jax.tree.map(
-            lambda vstack: jnp.tensordot(w, vstack, axes=1), state["v"])
-        view = tree_axpy(-lr * self.hp.momentum * state["vscale"],
-                         weighted, state["theta0"])
-        return view, state
 
     def receive(self, state, i, grad, now=0.0):
         state = dict(state)
@@ -592,6 +667,9 @@ class DanaNadam(NadamASGD):
     """
 
     name = "dana-nadam"
+    send_source = "m0"
+    send_gamma = True         # b1 IS hp.momentum
+    send_adaptive = True      # / (sqrt(u) + EPS)
 
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
@@ -599,14 +677,6 @@ class DanaNadam(NadamASGD):
         s["m0"] = tree_zeros_like(s["theta0"])
         s["u"] = tree_zeros_like(s["theta0"])
         return s
-
-    def send(self, state, i):
-        b1 = self.hp.momentum
-        lr = self.schedule(state["t"])
-        view = jax.tree.map(
-            lambda t, m0, u: t - lr * b1 * m0 / (jnp.sqrt(u) + self.EPS),
-            state["theta0"], state["m0"], state["u"])
-        return view, state
 
     def receive(self, state, i, grad, now=0.0):
         b1, b2 = self.hp.momentum, self.B2
@@ -714,6 +784,7 @@ class GapAware(Algorithm):
 
     name = "ga-asgd"
     EMA = 0.99
+    snapshot_key = "sent"
 
     def init(self, params, num_workers):
         s = self._base_state(params, num_workers)
@@ -722,11 +793,6 @@ class GapAware(Algorithm):
         s["sent"] = _stacked_broadcast(s["theta0"], num_workers)
         s["avg_step"] = jnp.asarray(1e-8, jnp.float32)
         return s
-
-    def send(self, state, i):
-        state = dict(state)
-        state["sent"] = tree_set_index(state["sent"], i, state["theta0"])
-        return state["theta0"], state
 
     def receive(self, state, i, grad, now=0.0):
         from .types import tree_gap, tree_size

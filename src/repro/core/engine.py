@@ -34,11 +34,15 @@ class SimulationConfig:
     record_telemetry: bool = True
     # Run the master hot path on flat (R, 128) state through the batched
     # fused kernel (repro.kernels.flat_update; Pallas on TPU, bit-identical
-    # jnp reference elsewhere).  Covers the whole flat family — per-worker
-    # momentum, the sent-snapshot members (dc-asgd, dana-dc, ga-asgd), and
-    # moving lr schedules (per-message lr(t)/lr(t+1) + lazy momentum
-    # -correction feed) — and raises for non-eligible algorithms (see
-    # repro.kernels.flat_update.eligibility_matrix).
+    # jnp reference elsewhere).  Covers every asynchronous algorithm in
+    # the registry except the elastic-replica pair and yellowfin —
+    # per-worker momentum, the sent-snapshot members (dc-asgd, dana-dc,
+    # ga-asgd), the momentum-free/shared-look-ahead members (asgd, lwp),
+    # the rate-weighted extension (dana-hetero; the event time feeds its
+    # rate lane), the Nadam pair, and moving lr schedules (per-message
+    # lr(t)/lr(t+1) + lazy momentum-correction feed) — and raises for
+    # non-eligible algorithms (repro.kernels.flat_update.eligibility
+    # _matrix is the documented contract).
     use_kernel: bool = False
 
 

@@ -37,9 +37,19 @@ Two kinds of per-worker state live beside theta:
   the same row ranges as theta);
 * **scalar lanes** — ``ScalarLane``: one 128-lane f32 row per worker
   holding a handful of *named* scalars (staleness signals such as the
-  master step a ``sent`` snapshot was taken at).  Lanes have no row
-  dimension to shard; the sharded master copies them whole per shard,
-  exactly like the t / lr_prev / vscale scalars.
+  master step a ``sent`` snapshot was taken at, or the rate-telemetry
+  pair below).  Lanes have no row dimension to shard; the sharded
+  master copies them whole per shard, exactly like the t / lr_prev /
+  vscale scalars.
+
+The **rate lane** (``RATE_LANE``) is the per-worker rate telemetry the
+rate-weighted DANA extension (dana-hetero) keeps at the master: an EMA
+of each worker's inter-push interval plus the last push timestamp.
+Rates derived from it weight the per-worker momentum slabs in the
+flat send path's weighted-slab reduction (``kernels/flat_update/send``)
+— every shard of a row-sharded master sees every message with the same
+timestamp, so the lane trajectories are replica-identical and the lane
+rides the existing copied-scalar path.
 """
 from __future__ import annotations
 
@@ -196,6 +206,15 @@ class ScalarLane:
         """Lane with worker i's ``name`` slot <- value (dynamic i ok)."""
         return lane.at[i, self.index[name]].set(
             jnp.asarray(value, jnp.float32))
+
+
+# rate-telemetry slots (dana-hetero): EMA of worker i's inter-push
+# interval, and the timestamp of its last push.  Column extraction /
+# point updates mirror the pytree algorithm's (N,) ``interval`` /
+# ``last_t`` vectors bit-for-bit (both are plain f32).
+RATE_INTERVAL = "interval"
+RATE_LAST_T = "last_t"
+RATE_LANE = ScalarLane((RATE_INTERVAL, RATE_LAST_T))
 
 
 class FlatSubSpec:

@@ -1,8 +1,8 @@
-"""Pallas TPU kernel: k coalesced master messages in ONE pallas_call.
+"""Pallas TPU kernels: k coalesced master messages in ONE pallas_call.
 
 PR 1's fused receive amortized dispatch but still ran k sequential kernel
 invocations (one per drained message), each re-reading theta/v0 from HBM.
-This kernel applies the whole coalesced batch in one grid:
+The batched kernel applies the whole coalesced batch in one grid:
 
     grid = (row_tiles, k)          # messages innermost
 
@@ -12,8 +12,11 @@ drops from O(k * state) to O(state) + O(k * grad) per batch, which is the
 whole game for a bandwidth-bound master (paper App. C.1).  Output blocks
 whose index map ignores the message axis (theta, v, v0, u2, sent) are
 revisited across the inner loop, the standard Pallas accumulation
-pattern; the incoming gradients g (k,R,128) and outgoing views hat
-(k,R,128) stream.
+pattern (revisits are consecutive — a TPU pipelining requirement); the
+incoming gradients g (k,R,128) and outgoing views hat (k,R,128) stream.
+State inputs are aliased to their outputs (``input_output_aliases``), so
+when the caller donates its buffers the update runs in place and the
+state traffic halves again.
 
 Per-worker slabs (momentum v and, for the delay-compensated family, the
 ``sent`` snapshot) live as (N, R, 128) stacks; the row for worker ids[j]
@@ -21,20 +24,37 @@ is selected with a dynamic slice inside the kernel, so duplicate worker
 ids within a batch chain correctly (message j+1 sees j's update AND j's
 refreshed snapshot).
 
-Scalars ride in as an (8, k) f32 tile — worker id, lr(t+j), lr(t+j+1),
-gamma, grad-coef, momentum-correction vscale (rows 6-7 padding); ids are
-exact in f32 below 2^24 workers.  Feeding the schedule as per-message
-scalars is what lifts the constant-lr restriction: the kernel applies
-with lr(t+j), looks ahead with lr(t+j+1), and folds the lazy Goyal
-rescale in as the precomputed running ``vscale`` product.
+Scalars ride in as an (8, k) f32 tile — worker id, lr(t+j), gamma,
+grad-coef, momentum-correction vscale, and the per-message hat
+coefficient hc_j (the send scale at the post-update step, which is
+where lr(t+j+1) enters; rows 6-7 padding); ids are exact in f32 below
+2^24 workers.  Feeding the schedule as per-message scalars is what
+lifts the constant-lr restriction; hc_j is what generalizes the
+look-ahead beyond the v0 running sum:
 
-The kernel covers exactly the ELEMENTWISE family (incl. delay
-compensation, which is elementwise in delta).  The gap-aware penalty
-needs a norm over every row of delta before any row can be updated — a
-two-pass reduce-then-apply that fights this grid's tile-resident
-revisiting — so ``ops.flat_master_update_batch`` routes gap-aware
-algorithms to the jnp reference (jitted; XLA fuses its reductions) on
-every backend.
+    hat_mode "theta"      hat_j = theta'                  (plain senders)
+    hat_mode "v0"         hat_j = theta' - hc_j*v0' [/den]  (dana/nadam)
+    hat_mode "self"       hat_j = theta' - hc_j*v_i'        (lwp)
+    hat_mode "weighted"   hat_j = theta' - hc_j*sum_m w_jm v_m'
+                          (dana-hetero: the in-kernel weighted-slab
+                          reduction; w streams in as a (k, N) tile)
+
+The batched kernel covers exactly the ELEMENTWISE family (incl. delay
+compensation and the weighted hat, which are elementwise per row).  The
+gap-aware penalty needs a norm over every row of delta before any row
+can be updated, then a second norm after — ``gap_master_update_1`` below
+lowers ONE message as a two-phase grid (2, row_tiles): phase 0 sweeps
+the row tiles accumulating ||theta - sent_i||^2 into SMEM scratch,
+phase 1 re-sweeps applying the penalized update and accumulating
+||v'||^2 for the avg_step EMA.  TPU pipelining only keeps output blocks
+resident across CONSECUTIVE grid steps, so the k-message batch cannot
+share one grid (message j+1's phase 0 would re-read tiles phase 1 just
+wrote, a non-consecutive revisit); ``flat_master_update_batch_gap``
+instead chains k two-phase calls inside one jit — the same k-rounds-in-
+one-dispatch shape as PR 1's legacy kernel, which is inherent here: a
+global reduction per message forces two full state sweeps per message
+no matter how the grid is drawn.  The jnp reference (ref.py) stays the
+cross-backend oracle.
 """
 from __future__ import annotations
 
@@ -42,7 +62,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import default_hat_coefs
 
 BLOCK_ROWS = 256
 LANES = 128
@@ -73,10 +97,11 @@ def _pick_block_rows(r: int, n: int, n_slabs: int = 1) -> int:
 def _make_kernel(nesterov: bool, track_v0: bool, adaptive: bool,
                  track_sent: bool, b2: float, eps: float,
                  dc_lambda: float | None, sent_view: bool,
-                 telemetry: bool):
+                 hat_mode: str, telemetry: bool):
     def kernel(*refs):
         it = iter(refs)
         scal_ref = next(it)
+        w_ref = next(it) if hat_mode == "weighted" else None
         theta_ref, v_ref = next(it), next(it)
         v0_ref = next(it) if track_v0 else None
         u2_ref = next(it) if adaptive else None
@@ -92,10 +117,10 @@ def _make_kernel(nesterov: bool, track_v0: bool, adaptive: bool,
         j = pl.program_id(1)
         i = scal_ref[0, j].astype(jnp.int32)
         lr = scal_ref[1, j]
-        lrn = scal_ref[2, j]
-        gamma = scal_ref[3, j]
-        cg = scal_ref[4, j]
-        vs = scal_ref[5, j]
+        gamma = scal_ref[2, j]
+        cg = scal_ref[3, j]
+        vs = scal_ref[4, j]
+        hc = scal_ref[5, j]
 
         @pl.when(j == 0)
         def _seed_state():
@@ -135,39 +160,53 @@ def _make_kernel(nesterov: bool, track_v0: bool, adaptive: bool,
             else:
                 theta = ((-lr) * vs) * v_new + theta
         theta_o[...] = theta
+        # the slab row updates BEFORE the hat: the weighted hat reduces
+        # over the post-update slab (message j+1 then chains on it too)
+        v_o[pl.ds(i, 1), :, :] = v_new[None]
         if track_v0:
             v0 = (v0_o[...] - vi) + v_new
             v0_o[...] = v0
-            if adaptive:
-                hat = theta - ((lrn * gamma) * v0) / denom
-            else:
-                hat = (((-lrn) * gamma) * vs) * v0 + theta
-        else:
+        if hat_mode == "theta":
             hat = theta
+        elif hat_mode == "v0":
+            if adaptive:
+                hat = theta - (hc * v0) / denom
+            else:
+                hat = (-hc) * v0 + theta
+        elif hat_mode == "self":
+            hat = (-hc) * v_new + theta
+        else:                                    # "weighted"
+            wj = w_ref[pl.ds(j, 1), :][0]        # (N,)
+            wsum = jnp.sum(wj[:, None, None] * v_o[...], axis=0)
+            hat = (-hc) * wsum + theta
         hat_o[...] = hat[None]
         if track_sent:
             sent_o[pl.ds(i, 1), :, :] = (hat if sent_view else theta)[None]
-        v_o[pl.ds(i, 1), :, :] = v_new[None]
 
     return kernel
 
 
 @functools.partial(
     jax.jit, static_argnames=("nesterov", "b2", "eps", "dc_lambda",
-                              "sent_view", "telemetry", "interpret"))
+                              "sent_view", "hat_mode", "telemetry",
+                              "interpret"))
 def flat_master_update_batch_2d(theta, v, v0, u2, sent, g, ids, lrs,
                                 lrs_next, gammas, cgs, vscales, *,
                                 nesterov: bool, b2: float = 0.999,
                                 eps: float = 1e-8,
                                 dc_lambda: float | None = None,
                                 sent_view: bool = False,
+                                hat_mode: str | None = None,
+                                hcs=None, weights=None,
                                 telemetry: bool = False,
                                 interpret: bool = True):
     """Batched flat master update (see ref.py for the update rule; this
     lowering covers the elementwise family — no gap-aware penalty).
 
     theta (R,128); v (N,R,128); v0/u2 (R,128) or None; sent (N,R,128) or
-    None; g (k,R,128); ids/lrs/lrs_next/gammas/cgs/vscales (k,).
+    None; g (k,R,128); ids/lrs/lrs_next/gammas/cgs/vscales (k,); hcs
+    (k,) hat coefficients or None (legacy v0 look-ahead scale); weights
+    (k, N) rate weights for hat_mode "weighted".
     Returns (theta', v', v0', u2', sent', hats, thetas_pre or None).
     """
     r, lanes = theta.shape
@@ -177,18 +216,25 @@ def flat_master_update_batch_2d(theta, v, v0, u2, sent, g, ids, lrs,
     track_v0 = v0 is not None
     adaptive = u2 is not None
     track_sent = sent is not None
+    if hat_mode is None:
+        hat_mode = "v0" if track_v0 else "theta"
+    if hcs is None:
+        hcs = default_hat_coefs(lrs_next, gammas, vscales,
+                                adaptive=adaptive)
     block_r = _pick_block_rows(r, n, 2 if track_sent else 1)
     assert r % block_r == 0, (r, block_r)
     grid = (r // block_r, k)
 
+    # lrs_next itself never enters the kernel: its only consumer is the
+    # hat coefficient, folded into hcs above
     scal = jnp.zeros((SCAL_ROWS, k), jnp.float32)
     scal = scal.at[:6].set(jnp.stack([
         ids.astype(jnp.float32),
         jnp.asarray(lrs, jnp.float32),
-        jnp.asarray(lrs_next, jnp.float32),
         jnp.asarray(gammas, jnp.float32),
         jnp.asarray(cgs, jnp.float32),
-        jnp.asarray(vscales, jnp.float32)]))           # (8, k)
+        jnp.asarray(vscales, jnp.float32),
+        jnp.asarray(hcs, jnp.float32)]))               # (8, k)
 
     flat_spec = pl.BlockSpec((block_r, LANES), lambda ri, j: (ri, 0))
     slab_spec = pl.BlockSpec((n, block_r, LANES), lambda ri, j: (0, ri, 0))
@@ -196,22 +242,36 @@ def flat_master_update_batch_2d(theta, v, v0, u2, sent, g, ids, lrs,
     scal_spec = pl.BlockSpec((SCAL_ROWS, k), lambda ri, j: (0, 0))
 
     f32 = jnp.float32
-    in_specs = [scal_spec, flat_spec, slab_spec]
-    inputs = [scal, theta, v]
+    in_specs = [scal_spec]
+    inputs = [scal]
+    if hat_mode == "weighted":
+        in_specs.append(pl.BlockSpec((k, n), lambda ri, j: (0, 0)))
+        inputs.append(jnp.asarray(weights, f32))
+    # state inputs alias their outputs: with donated caller buffers the
+    # batch updates the master state in place (no-copy tested)
+    aliases = {len(inputs): 0}
+    in_specs.append(flat_spec)
+    inputs.append(theta)
+    aliases[len(inputs)] = 1
+    in_specs.append(slab_spec)
+    inputs.append(v)
     out_specs = [flat_spec, slab_spec]
     out_shape = [jax.ShapeDtypeStruct((r, LANES), f32),
                  jax.ShapeDtypeStruct((n, r, LANES), f32)]
     if track_v0:
+        aliases[len(inputs)] = len(out_specs)
         in_specs.append(flat_spec)
         inputs.append(v0)
         out_specs.append(flat_spec)
         out_shape.append(jax.ShapeDtypeStruct((r, LANES), f32))
     if adaptive:
+        aliases[len(inputs)] = len(out_specs)
         in_specs.append(flat_spec)
         inputs.append(u2)
         out_specs.append(flat_spec)
         out_shape.append(jax.ShapeDtypeStruct((r, LANES), f32))
     if track_sent:
+        aliases[len(inputs)] = len(out_specs)
         in_specs.append(slab_spec)
         inputs.append(sent)
         out_specs.append(slab_spec)
@@ -226,11 +286,12 @@ def flat_master_update_batch_2d(theta, v, v0, u2, sent, g, ids, lrs,
 
     outs = pl.pallas_call(
         _make_kernel(nesterov, track_v0, adaptive, track_sent, b2, eps,
-                     dc_lambda, sent_view, telemetry),
+                     dc_lambda, sent_view, hat_mode, telemetry),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
     )(*inputs)
 
@@ -242,3 +303,163 @@ def flat_master_update_batch_2d(theta, v, v0, u2, sent, g, ids, lrs,
     hats = next(it)
     pres = next(it) if telemetry else None
     return theta_n, v_n, v0_n, u2_n, sent_n, hats, pres
+
+
+# ---------------------------------------------------------------------------
+# gap-aware: two-phase reduce-then-apply lowering
+# ---------------------------------------------------------------------------
+def gap_pallas_supported(rows: int, n: int) -> bool:
+    """The two-phase grid needs >= 2 row tiles: with a single tile the
+    phase-0 and phase-1 flushes of the same output block are issued
+    back-to-back from different pipeline slots and may race on HBM.
+    Tiny states fall back to the jnp reference (which is fast there)."""
+    try:
+        block_r = _pick_block_rows(rows, n, 2)
+    except ValueError:
+        return False
+    return rows // block_r >= 2
+
+
+def _make_gap_kernel(gap_ema: float, sqrt_p: float, telemetry: bool):
+    def kernel(*refs):
+        it = iter(refs)
+        scal_ref, theta_ref, v_ref, sent_ref, g_ref = (
+            next(it), next(it), next(it), next(it), next(it))
+        theta_o, v_o, sent_o, hat_o, stat_o = (
+            next(it), next(it), next(it), next(it), next(it))
+        pre_o = next(it) if telemetry else None
+        acc = next(it)                           # SMEM (4,): gap2, vn2, avg
+
+        ph = pl.program_id(0)
+        ri = pl.program_id(1)
+        nt = pl.num_programs(1)
+        i = scal_ref[0, 0].astype(jnp.int32)
+        lr = scal_ref[1, 0]
+        gamma = scal_ref[2, 0]
+        cg = scal_ref[3, 0]
+        vs = scal_ref[4, 0]
+
+        @pl.when((ph == 0) & (ri == 0))
+        def _seed():
+            acc[0] = 0.0
+            acc[1] = 0.0
+            acc[2] = scal_ref[5, 0]              # avg_step in
+
+        theta = theta_ref[...]
+        si = sent_ref[pl.ds(i, 1), :, :][0]
+
+        @pl.when(ph == 0)
+        def _reduce():
+            # pass 1: accumulate ||theta - sent_i||^2 across row tiles;
+            # outputs get a passthrough write so every flush carries
+            # valid data (phase 1 overwrites the same blocks)
+            d = theta - si
+            acc[0] = acc[0] + jnp.sum(d * d)
+            theta_o[...] = theta
+            v_o[...] = v_ref[...]
+            sent_o[...] = sent_ref[...]
+            hat_o[...] = theta
+            if telemetry:
+                pre_o[...] = theta
+
+        @pl.when(ph == 1)
+        def _apply():
+            # pass 2: the penalized family update per tile, accumulating
+            # ||v'||^2 for the avg_step EMA as it goes
+            gap = jnp.sqrt(acc[0]) / sqrt_p
+            penalty = 1.0 + gap / jnp.maximum(acc[2], 1e-12)
+            gj = (1.0 / penalty) * g_ref[...]
+            vi = v_ref[pl.ds(i, 1), :, :][0]
+            v_new = gamma * vi + cg * ((1.0 / vs) * gj)
+            th = ((-lr) * vs) * v_new + theta
+            theta_o[...] = th
+            hat_o[...] = th
+            v_o[...] = v_ref[...]
+            v_o[pl.ds(i, 1), :, :] = v_new[None]
+            sent_o[...] = sent_ref[...]
+            sent_o[pl.ds(i, 1), :, :] = th[None]
+            if telemetry:
+                # every phase's visit must write (the phase-1 flush is
+                # the one that lands); theta here is the pre-update input
+                pre_o[...] = theta
+            acc[1] = acc[1] + jnp.sum(v_new * v_new)
+
+            @pl.when(ri == nt - 1)
+            def _finish():
+                step_rms = lr * vs * jnp.sqrt(acc[1]) / sqrt_p
+                avg = gap_ema * acc[2] + (1 - gap_ema) * step_rms
+                acc[2] = avg
+                stat_o[...] = jnp.zeros(
+                    (SCAL_ROWS, LANES), jnp.float32).at[0, 0].set(avg)
+
+    return kernel
+
+
+def gap_master_update_1(theta, v, sent, avg_step, g_row, i, lr, gamma,
+                        cg, vs, *, gap_ema: float, n_elems: int,
+                        telemetry: bool, interpret: bool):
+    """ONE gap-aware message, grid (2, row_tiles) with SMEM-scratch
+    norm partials.  Returns (theta', v', sent', avg_step', hat, pre)."""
+    r, lanes = theta.shape
+    n = v.shape[0]
+    assert lanes == LANES, lanes
+    block_r = _pick_block_rows(r, n, 2)
+    nt = r // block_r
+    grid = (2, nt)
+    # f32-rounded like the reference's jnp.sqrt(asarray(n_elems, f32))
+    sqrt_p = float(np.sqrt(np.float32(n_elems), dtype=np.float32))
+    scal = jnp.zeros((SCAL_ROWS, LANES), jnp.float32).at[:6, 0].set(
+        jnp.stack([jnp.asarray(i, jnp.float32),
+                   jnp.asarray(lr, jnp.float32),
+                   jnp.asarray(gamma, jnp.float32),
+                   jnp.asarray(cg, jnp.float32),
+                   jnp.asarray(vs, jnp.float32),
+                   jnp.asarray(avg_step, jnp.float32)]))
+
+    f32 = jnp.float32
+    flat_spec = pl.BlockSpec((block_r, LANES), lambda ph, ri: (ri, 0))
+    slab_spec = pl.BlockSpec((n, block_r, LANES),
+                             lambda ph, ri: (0, ri, 0))
+    stat_spec = pl.BlockSpec((SCAL_ROWS, LANES), lambda ph, ri: (0, 0))
+    out = pl.pallas_call(
+        _make_gap_kernel(gap_ema, sqrt_p, telemetry),
+        grid=grid,
+        in_specs=[stat_spec, flat_spec, slab_spec, slab_spec, flat_spec],
+        out_specs=[flat_spec, slab_spec, slab_spec, flat_spec, stat_spec]
+        + ([flat_spec] if telemetry else []),
+        out_shape=[jax.ShapeDtypeStruct((r, LANES), f32),
+                   jax.ShapeDtypeStruct((n, r, LANES), f32),
+                   jax.ShapeDtypeStruct((n, r, LANES), f32),
+                   jax.ShapeDtypeStruct((r, LANES), f32),
+                   jax.ShapeDtypeStruct((SCAL_ROWS, LANES), f32)]
+        + ([jax.ShapeDtypeStruct((r, LANES), f32)] if telemetry else []),
+        scratch_shapes=[pltpu.SMEM((4,), f32)],
+        interpret=interpret,
+    )(scal, theta, v, sent, g_row)
+    theta_n, v_n, sent_n, hat, stat = out[:5]
+    pre = out[5] if telemetry else None
+    return theta_n, v_n, sent_n, stat[0, 0], hat, pre
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gap_ema", "n_elems", "telemetry",
+                              "interpret"))
+def flat_master_update_batch_gap(theta, v, sent, avg_step, g, ids, lrs,
+                                 gammas, cgs, vscales, *, gap_ema: float,
+                                 n_elems: int, telemetry: bool = False,
+                                 interpret: bool = True):
+    """k gap-aware messages: k chained two-phase kernels in one jit
+    (see module docstring for why the messages cannot share one grid).
+    Returns (theta', v', sent', avg_step', hats, pres or None)."""
+    k = g.shape[0]
+    hats, pres = [], []
+    for j in range(k):
+        theta, v, sent, avg_step, hat, pre = gap_master_update_1(
+            theta, v, sent, avg_step, g[j], ids[j], lrs[j], gammas[j],
+            cgs[j], vscales[j], gap_ema=gap_ema, n_elems=n_elems,
+            telemetry=telemetry, interpret=interpret)
+        hats.append(hat)
+        if telemetry:
+            pres.append(pre)
+    return (theta, v, sent, avg_step, jnp.stack(hats),
+            jnp.stack(pres) if telemetry else None)

@@ -4,8 +4,9 @@ One call applies k coalesced worker messages IN ORDER to the flat master
 state.  The update rule is the family-shared per-worker-momentum shape
 (paper Alg. 4/6/8/9 + the Nadam extension), widened to the
 delay-compensated / gap-aware members (Alg. 7/10, App. C "GA") via a
-per-worker ``sent`` snapshot slab, and to moving learning-rate schedules
-via per-message scalars:
+per-worker ``sent`` snapshot slab, to moving learning-rate schedules via
+per-message scalars, and to the whole send family via per-message hat
+coefficients + optional rate weights:
 
     delta  = theta - sent_i                      [sent slab only]
     ghat   = g_j + lam * (g_j^2 (.) delta)       [delay compensation]
@@ -16,34 +17,50 @@ via per-message scalars:
     num    = (gamma_j * s_j) * v_i' + cg_j*ghat  [nesterov]  else  v_i'
     theta' = theta - lr_j * s_j^? * num / den    (s_j only for heavy-ball)
     v0'    = v0 - v_i + v_i'                     [track_v0: O(k) sum]
-    hat_j  = theta' - lrn_j*gamma_j*s_j * v0'/den  [track_v0] else theta'
+    hat_j  =                                     [by hat_mode]
+        theta'                                            ["theta"]
+        theta' - hc_j * v0' [/ den]                       ["v0"]
+        theta' - hc_j * v_i'                              ["self": lwp]
+        theta' - hc_j * sum_m w_jm v_m'                   ["weighted"]
     sent_i'= hat_j (dana-dc) or theta' (dc/ga)   [sent slab only]
     avg'   = ema*avg + (1-ema) * lr_j*s_j*||v_i'||/sqrt(P)   [gap-aware]
 
 with (per message j) worker id i = ids[j], update rate lr_j = lr(t+j),
-look-ahead rate lrn_j = lr(t+j+1), momentum gamma_j, gradient
-coefficient cg_j (1, or 1 - beta1 for Nadam), and momentum-correction
-scale s_j = vscales[j] (the running Goyal-correction product; exactly
-1.0 under a constant schedule).  Messages are sequential by
-construction: a worker appearing twice in one batch sees its own first
-update, including its own refreshed ``sent`` snapshot.
+momentum gamma_j, gradient coefficient cg_j (1, or 1 - beta1 for Nadam),
+momentum-correction scale s_j = vscales[j] (the running Goyal-correction
+product; exactly 1.0 under a constant schedule), and hat coefficient
+hc_j — the send scale at the post-update step, lr(t+j+1) [* gamma]
+[* tau] [* vscale], composed in ``_msg_scalars`` in the SAME factor
+order as ``Algorithm._send_scale``.  ``weights`` carries dana-hetero's
+rate weights r_m / r_{i_j}, already advanced message by message through
+the rate lane.  Messages are sequential by construction: a worker
+appearing twice in one batch sees its own first update, including its
+own refreshed ``sent`` snapshot and momentum row.
 
 The gap penalty is the one non-elementwise term: each message needs the
 norm of delta over ALL rows before it can touch any row, then a second
-norm of v_i' after — the two-pass reduce-then-apply below.  That is why
-the Pallas lowering (kernel.py) covers only the elementwise family and
-gap-aware runs this reference under jit on every backend.
+norm of v_i' after.  The Pallas lowering (kernel.py) handles it with a
+two-phase grid; this jitted reference stays the cross-backend oracle.
 
 Expression shapes/associativity deliberately mirror the pytree algorithm
 implementations so the flat path is bit-identical for the elementwise
-family, schedules included (tested); the gap penalty reduces over the
-flat buffer instead of leaf-by-leaf, so gap-aware agrees to reduction
--order tolerance only.
+family, schedules included (tested); the gap penalty and the hetero
+rate-weighted hat reduce over the flat buffer instead of leaf-by-leaf,
+so those agree to reduction-order tolerance.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def default_hat_coefs(lrs_next, gammas, vscales, *, adaptive: bool):
+    """The legacy v0 look-ahead scale lr(t+j+1)*gamma [*vscale] — ONE
+    definition shared by the reference and the Pallas wrapper for
+    callers that do not pass explicit ``hcs`` (production always does,
+    via FlatAlgorithm._msg_scalars / compose_send_scale)."""
+    return (lrs_next * gammas if adaptive
+            else (lrs_next * gammas) * vscales)
 
 
 def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
@@ -55,10 +72,14 @@ def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
                                  gap_aware: bool = False,
                                  gap_ema: float = 0.99,
                                  n_elems: int = 0,
-                                 telemetry: bool = False):
+                                 telemetry: bool = False,
+                                 hat_mode: str | None = None,
+                                 hcs=None, weights=None):
     """theta (R,128); v (N,R,128); v0/u2 (R,128) or None; sent (N,R,128)
     or None; avg_step scalar or None; g (k,R,128); ids (k,) int;
-    lrs/lrs_next/gammas/cgs/vscales (k,) f32.
+    lrs/lrs_next/gammas/cgs/vscales (k,) f32; hcs (k,) f32 hat
+    coefficients or None (legacy v0 look-ahead scale); weights (k, N)
+    f32 rate weights (hat_mode "weighted" only).
 
     Returns (theta', v', v0', u2', sent', avg_step', hats (k,R,128),
     thetas_pre or None).
@@ -66,6 +87,11 @@ def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
     k = g.shape[0]
     track_v0 = v0 is not None
     adaptive = u2 is not None
+    if hat_mode is None:
+        hat_mode = "v0" if track_v0 else "theta"
+    if hcs is None:
+        hcs = default_hat_coefs(lrs_next, gammas, vscales,
+                                adaptive=adaptive)
     if gap_aware and not n_elems:
         raise ValueError("gap_aware needs n_elems (the real element "
                          "count; padding rows must not dilute the gap)")
@@ -74,8 +100,8 @@ def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
     hats, pres = [], []
     for j in range(k):
         i = ids[j]
-        lr, lrn = lrs[j], lrs_next[j]
-        gamma, cg, vs = gammas[j], cgs[j], vscales[j]
+        lr = lrs[j]
+        gamma, cg, vs, hc = gammas[j], cgs[j], vscales[j], hcs[j]
         if telemetry:
             pres.append(theta)
         vi = jax.lax.dynamic_index_in_dim(v, i, axis=0, keepdims=False)
@@ -111,15 +137,25 @@ def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
                 theta = ((-lr) * vs) * (v_new / denom) + theta
             else:
                 theta = ((-lr) * vs) * v_new + theta
+        v = jax.lax.dynamic_update_index_in_dim(v, v_new, i, axis=0)
         if track_v0:
             v0 = (v0 - vi) + v_new
-            if adaptive:
-                hat = theta - ((lrn * gamma) * v0) / denom
-            else:
-                # mirror DanaZero.send: axpy(-lr*gamma*vscale, v0, theta)
-                hat = (((-lrn) * gamma) * vs) * v0 + theta
-        else:
+        if hat_mode == "theta":
             hat = theta
+        elif hat_mode == "v0":
+            if adaptive:
+                hat = theta - (hc * v0) / denom
+            else:
+                # mirror DanaZero.send: axpy(-c, v0, theta)
+                hat = (-hc) * v0 + theta
+        elif hat_mode == "self":
+            hat = (-hc) * v_new + theta           # mirror LWP.send
+        elif hat_mode == "weighted":
+            # mirror DanaHetero.send: tensordot over the updated slab
+            wsum = jnp.tensordot(weights[j], v, axes=1)
+            hat = (-hc) * wsum + theta
+        else:
+            raise ValueError(f"unknown hat_mode {hat_mode!r}")
         if sent is not None:
             # the family's send refreshes worker i's snapshot with what
             # it just returned: the look-ahead view (dana-dc) or theta
@@ -131,7 +167,6 @@ def flat_master_update_batch_ref(theta, v, v0, u2, sent, avg_step, g, ids,
             # mirror GapAware: lr * vscale * tree_l2(v_new) / sqrt(P)
             step_rms = lr * vs * jnp.sqrt(jnp.sum(v_new * v_new)) / sqrt_p
             avg_step = gap_ema * avg_step + (1 - gap_ema) * step_rms
-        v = jax.lax.dynamic_update_index_in_dim(v, v_new, i, axis=0)
         hats.append(hat)
     return (theta, v, v0, u2, sent, avg_step, jnp.stack(hats),
             jnp.stack(pres) if telemetry else None)

@@ -47,6 +47,15 @@ def test_quick_cluster_covers_sent_family():
     assert set(algos) & {"dc-asgd", "dana-dc", "ga-asgd"}
 
 
+def test_quick_cluster_covers_dana_hetero():
+    """The cluster smoke must sweep dana-hetero: its rate-weighted send
+    is the PR-5 weighted-slab reduction path (receive batch + send
+    kernel + rate lane), and bench_cluster's eligibility assertion plus
+    the send sweep keep it pinned in CI."""
+    algos = _argv_values(bench_run.QUICK["cluster"], "--algos")
+    assert "dana-hetero" in algos
+
+
 def test_bench_scaling_out_empty_writes_nothing(tmp_path, monkeypatch):
     """bench_scaling must treat --out "" as 'no artifact', not fall
     through to its default path (the --quick contract)."""

@@ -288,12 +288,26 @@ def test_bounded_mailbox_applies_backpressure():
     assert max(stats["coalesce_counts"]) <= 2
 
 
-def test_use_kernel_rejected_for_non_dana():
-    algo = make_algorithm("asgd", HP)
+def test_use_kernel_rejected_for_ineligible():
+    # the flat family closed over asgd/lwp/dana-hetero in PR 5; easgd's
+    # replica exchange remains the ineligible negative case
+    algo = make_algorithm("easgd", HP)
     cfg = ClusterConfig(num_workers=2, total_grads=10, mode="free",
                         use_kernel=True)
     with pytest.raises((ValueError, RuntimeError)):
         run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg)
+
+
+def test_asgd_auto_routes_flat_in_live_mode():
+    """asgd joined the flat family (gamma = 0): live modes auto-route it
+    through the batched kernel and the run completes."""
+    algo = make_algorithm("asgd", HP)
+    cfg = ClusterConfig(num_workers=4, total_grads=120, mode="free",
+                        coalesce=4, record_telemetry=False)
+    stats = {}
+    run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg, stats_out=stats)
+    assert stats["applied"] == 120
+    assert stats["use_kernel"] is True
 
 
 def test_cluster_cli_smoke(tmp_path):

@@ -21,7 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.flat import LANES, FlatSpec, ScalarLane
+from repro.core.flat import (LANES, RATE_INTERVAL, RATE_LANE, RATE_LAST_T,
+                             FlatSpec, ScalarLane)
+from repro.kernels.flat_update import flat_send_view, flat_send_view_ref
 
 # ---------------------------------------------------------------------------
 # shared property checks
@@ -224,6 +226,112 @@ def test_scalar_lane_init_seeding():
 
 
 # ---------------------------------------------------------------------------
+# the rate ScalarLane (dana-hetero's per-worker rate telemetry)
+# ---------------------------------------------------------------------------
+def check_rate_lane(n, events, ema, seed):
+    """Property: driving the lane through a message sequence (point EMA
+    + timestamp updates via ScalarLane ops) matches a plain numpy f32
+    replay of DanaHetero.receive's interval/last_t vectors, and the
+    derived rate weights match its send."""
+    lane = RATE_LANE.pack({RATE_INTERVAL: jnp.ones((n,)),
+                           RATE_LAST_T: jnp.zeros((n,))})
+    interval = np.ones((n,), np.float32)
+    last_t = np.zeros((n,), np.float32)
+    ema32 = np.float32(ema)
+    for i, now in events:
+        now32 = np.float32(now)
+        iv = RATE_LANE.get(lane, RATE_INTERVAL)
+        lt = RATE_LANE.get(lane, RATE_LAST_T)
+        dt = jnp.maximum(jnp.asarray(now32) - lt[i], 1e-6)
+        lane = RATE_LANE.set_at(lane, RATE_INTERVAL, i,
+                                ema32 * iv[i] + (1 - ema32) * dt)
+        lane = RATE_LANE.set_at(lane, RATE_LAST_T, i, now32)
+        dt_np = np.maximum(np.float32(now32 - last_t[i]), np.float32(1e-6))
+        interval[i] = ema32 * interval[i] + (np.float32(1) - ema32) * dt_np
+        last_t[i] = now32
+    np.testing.assert_allclose(
+        np.asarray(RATE_LANE.get(lane, RATE_INTERVAL)), interval,
+        rtol=1e-6, atol=0)
+    np.testing.assert_array_equal(
+        np.asarray(RATE_LANE.get(lane, RATE_LAST_T)), last_t)
+    # all other lane slots stay exactly zero (the padding invariant)
+    np.testing.assert_array_equal(np.asarray(lane[:, 2:]),
+                                  np.zeros((n, LANES - 2), np.float32))
+    # rate weights: w_j = r_j / r_i, w_i == 1 exactly
+    rates = 1.0 / np.maximum(interval, np.float32(1e-6))
+    for i in range(n):
+        w = rates / np.maximum(rates[i], np.float32(1e-6))
+        assert w[i] == np.float32(1.0)
+        assert (w > 0).all()
+
+
+@pytest.mark.parametrize("n,k,seed", [(2, 5, 0), (5, 17, 1), (8, 40, 2)])
+def test_rate_lane_properties_seeded(n, k, seed):
+    rng = np.random.default_rng(seed)
+    t, events = 0.0, []
+    for _ in range(k):
+        t += float(rng.exponential(0.7))
+        events.append((int(rng.integers(0, n)), t))
+    check_rate_lane(n, events, ema=0.8, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# the SendSpec weighted-slab reduction, incl. row-range sub-specs
+# ---------------------------------------------------------------------------
+def check_send_reduction(R, N, shards, seed, adaptive):
+    """Properties of view = theta - c * sum_j w_j slab_j [/ denom]:
+
+    * the jnp reference equals the hand-written tensordot expression;
+    * the Pallas lowering (interpret) matches it — bit-for-bit at N=1,
+      reduction-order tolerance for the N-way mix;
+    * the reduction is PER ROW: computing the view on a row-range slice
+      equals slicing the full view (the sharded master's send path),
+      bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=(R, LANES)), jnp.float32)
+    slab = jnp.asarray(rng.normal(size=(N, R, LANES)) * 0.4, jnp.float32)
+    # N = 1 carries the BIT-EXACT contract and the family only ever uses
+    # w = [1] there (dana-zero/dana-dc/dana-nadam/lwp); arbitrary
+    # weights belong to the N-way rate mix, which is tolerance-only
+    w = (jnp.ones((1,)) if N == 1
+         else jnp.asarray(np.abs(rng.normal(size=(N,))) + 0.1,
+                          jnp.float32))
+    c = jnp.float32(abs(rng.normal()) * 0.1)
+    u2 = (jnp.asarray(np.abs(rng.normal(size=(R, LANES))) * 0.02,
+                      jnp.float32) if adaptive else None)
+    full = flat_send_view_ref(theta, slab, w, c, u2=u2)
+    expect = jnp.tensordot(w, slab, axes=1)
+    expect = (theta - (c * expect) / (jnp.sqrt(u2) + 1e-8) if adaptive
+              else (-c) * expect + theta)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(expect))
+    # pallas vs the JITTED ref: two different XLA graphs — fma
+    # contraction may differ by 1 ULP (the N-way mix adds reduction
+    # -order drift on top).  The BIT-EXACT contract lives on the
+    # production jnp path (flat == tree, pinned in test_flat_update).
+    full_j = jax.jit(lambda: flat_send_view_ref(theta, slab, w, c,
+                                                u2=u2))()
+    pallas = flat_send_view(theta, slab, w, c, u2=u2, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(pallas), np.asarray(full_j),
+                               rtol=2e-6, atol=2e-6)
+    # row-range locality: slice-then-reduce == reduce-then-slice
+    spec = FlatSpec(None, [(R * LANES,)], ["float32"], row_align=1)
+    assert spec.rows == R
+    for r0, r1 in spec.row_ranges(min(shards, R)):
+        piece = flat_send_view_ref(theta[r0:r1], slab[:, r0:r1], w, c,
+                                   u2=u2[r0:r1] if adaptive else None)
+        np.testing.assert_array_equal(np.asarray(piece),
+                                      np.asarray(full[r0:r1]))
+
+
+@pytest.mark.parametrize("R,N,shards,adaptive", [
+    (8, 1, 2, False), (16, 4, 3, False), (24, 7, 5, True),
+    (8, 1, 1, True), (40, 3, 4, False),
+])
+def test_send_reduction_properties_seeded(R, N, shards, adaptive):
+    check_send_reduction(R, N, shards, seed=R * 7 + N, adaptive=adaptive)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis: arbitrary pytrees / shapes / dtypes / alignments / splits
 # (the seeded corpus above always runs; these widen it when hypothesis is
 # installed — a module-level importorskip would skip the corpus too)
@@ -263,6 +371,23 @@ if HAVE_HYPOTHESIS:
     @given(st.integers(1, 12), st.integers(1, 24), st.integers(0, 2 ** 16))
     def test_scalar_lane_properties_hypothesis(n_names, n, seed):
         check_scalar_lane(tuple(f"s{j}" for j in range(n_names)), n, seed)
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 8), st.integers(1, 40), st.integers(0, 2 ** 16))
+    def test_rate_lane_properties_hypothesis(n, k, seed):
+        rng = np.random.default_rng(seed)
+        t, events = 0.0, []
+        for _ in range(k):
+            t += float(rng.exponential(0.5))
+            events.append((int(rng.integers(0, n)), t))
+        check_rate_lane(n, events, ema=0.8, seed=seed)
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 6).map(lambda x: 8 * x), st.integers(1, 9),
+           st.integers(1, 8), st.booleans(), st.integers(0, 2 ** 16))
+    def test_send_reduction_properties_hypothesis(R, N, shards, adaptive,
+                                                  seed):
+        check_send_reduction(R, N, shards, seed=seed, adaptive=adaptive)
 
     @settings(**SETTINGS)
     @given(st.integers(1, 64), st.integers(1, 12), st.integers(0, 2 ** 16))

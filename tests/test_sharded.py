@@ -150,8 +150,9 @@ def test_sharded_gap_exchange_matches_single_master(shards):
     algo = make_algorithm("ga-asgd", HP)
     sm = ShardedMaster(algo, algo.init(PARAMS0, 4), shards=shards,
                        history=History(), stop=threading.Event(),
-                       total_grads=100, record_telemetry=False)
-    assert sm.coalesce == 1            # clamped: per-message exchange
+                       total_grads=100, coalesce=8,
+                       record_telemetry=False)
+    assert sm.coalesce == 8            # PR-5: the coalesce=1 clamp is gone
     spec = sm.spec
     views_h = []
     for ids, seed in BATCHES:
@@ -183,6 +184,95 @@ def test_sharded_gap_exchange_matches_single_master(shards):
     for a, b in zip(views_s, views_h):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-5, atol=2e-6)
+
+
+def test_sharded_gap_batched_exchange_matches_single_master():
+    """The lifted coalesce=1 restriction: S shard threads draining REAL
+    batches through ``_apply_gap`` (the streaming _NormExchange ring,
+    two combines per message) reproduce the single flat master's
+    batched gap-aware pass to float tolerance."""
+    shards = 2
+    single, views_s = _drive_single("ga-asgd", n=4)
+    algo = make_algorithm("ga-asgd", HP)
+    sm = ShardedMaster(algo, algo.init(PARAMS0, 4), shards=shards,
+                       history=History(), stop=threading.Event(),
+                       total_grads=100, coalesce=4,
+                       record_telemetry=False)
+    spec = sm.spec
+    views_by_shard = [[] for _ in range(shards)]
+    for ids, seed in BATCHES:
+        g_flat = [spec.pack(g) for g in _grads(len(ids), seed)]
+        msgs_by_shard = [
+            [GradMsg(wid, g_flat[j][srv.r0:srv.r1], None, 0, 0.0)
+             for j, wid in enumerate(ids)]
+            for srv in sm.shards_
+        ]
+        # both shards must run concurrently: each message's exchange
+        # blocks until every shard has published its partial
+        threads = [
+            threading.Thread(target=srv._apply, args=(msgs,))
+            for srv, msgs in zip(sm.shards_, msgs_by_shard)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive()
+        for s, msgs in enumerate(msgs_by_shard):
+            views_by_shard[s].extend(m.wait_reply(1.0).view for m in msgs)
+    for a, b in zip(jax.tree.leaves(single.state),
+                    jax.tree.leaves(sm.state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    for j, v_single in enumerate(views_s):
+        v_shard = jnp.concatenate(
+            [views_by_shard[s][j] for s in range(shards)], axis=0)
+        np.testing.assert_allclose(np.asarray(v_shard),
+                                   np.asarray(v_single),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_sharded_gap_reorder_injection_reclamps_to_per_message():
+    """The norm exchange pairs partials by applied count, so gap-aware
+    shards must apply the IDENTICAL order: with per-shard (reorder)
+    injectors attached the coalesce window re-clamps to 1 — a 1-message
+    chunk cannot be permuted — and the faulted run still completes."""
+    algo = make_algorithm("ga-asgd", HP)
+    inj = [FaultPlan(seed=2, reorder_prob=1.0, reorder_shards=(0,))]
+    from repro.cluster.faults import FaultInjector
+    injectors = [FaultInjector(inj[0], 0, 32, shard_id=s)
+                 for s in range(2)]
+    sm = ShardedMaster(algo, algo.init(PARAMS0, 4), shards=2,
+                       history=History(), stop=threading.Event(),
+                       total_grads=10, coalesce=4, injectors=injectors,
+                       record_telemetry=False)
+    assert sm.coalesce == 1
+    # a stall-only plan never permutes chunk order: batching survives
+    stall_inj = [FaultInjector(FaultPlan(seed=1, stall_prob=0.5), 0, 32,
+                               shard_id=s) for s in range(2)]
+    sm2 = ShardedMaster(algo, algo.init(PARAMS0, 4), shards=2,
+                        history=History(), stop=threading.Event(),
+                        total_grads=10, coalesce=4, injectors=stall_inj,
+                        record_telemetry=False)
+    assert sm2.coalesce == 4
+    cfg = ClusterConfig(num_workers=4, total_grads=80, mode="free",
+                        coalesce=4, shards=2, record_telemetry=False,
+                        faults=FaultPlan(seed=2, reorder_prob=1.0))
+    stats = {}
+    run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg, stats_out=stats)
+    assert stats["applied"] == 80
+
+
+def test_sharded_gap_free_mode_coalesced_completes():
+    """End to end: a free-mode ga-asgd sharded cluster with coalesce > 1
+    (the ring exchange under real worker + shard threads) completes."""
+    algo = make_algorithm("ga-asgd", HP)
+    cfg = ClusterConfig(num_workers=4, total_grads=120, mode="free",
+                        coalesce=4, shards=2, record_telemetry=False)
+    stats = {}
+    run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg, stats_out=stats)
+    assert stats["applied"] == 120
+    assert stats["shard_applied"] == [120, 120]
 
 
 def test_sharded_gap_deterministic_cluster_matches_single():
@@ -230,11 +320,15 @@ def test_sharded_deterministic_cluster_matches_engine():
 
 
 @pytest.mark.parametrize("name", ["multi-asgd", "dana-nadam", "dc-asgd",
-                                  "dana-dc"])
+                                  "dana-dc", "asgd", "lwp",
+                                  "dana-hetero"])
 def test_sharded_deterministic_matches_single_flat(name):
     """Sharded vs single-master flat cluster, same deterministic run:
-    identical parameters for the non-DANA family members and the newly
-    eligible sent-snapshot members too."""
+    identical parameters for the non-DANA family members, the
+    sent-snapshot members, and the PR-5 additions (asgd's gamma=0
+    update, lwp's tau look-ahead, dana-hetero's rate-weighted send —
+    per-row, so row sharding stays bit-exact; the rate lane replicates
+    through the copied-scalar path)."""
     def run(shards):
         algo = make_algorithm(name, HP)
         cfg = ClusterConfig(num_workers=3, total_grads=60,
@@ -401,7 +495,9 @@ def test_sharded_dropout_worker_rejoins():
 # plumbing / guard rails
 # ---------------------------------------------------------------------------
 def test_sharded_rejects_ineligible_algorithm():
-    algo = make_algorithm("asgd", HP)
+    # easgd's replica exchange is outside the flat family (asgd and lwp
+    # joined it in PR 5, so they no longer serve as the negative case)
+    algo = make_algorithm("easgd", HP)
     with pytest.raises(ValueError, match="eligible"):
         ShardedMaster(algo, algo.init(PARAMS0, 2), shards=2,
                       history=History(), stop=threading.Event(),
