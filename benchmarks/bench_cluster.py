@@ -36,6 +36,17 @@ Three measurements:
   (free-running workers, telemetry off) per (worker count, k).  Noisier —
   it includes worker grad computation, GIL hand-offs and queue dynamics —
   but shows the win surviving contact with real threads.
+* **staleness profile** — the observability layer on a paced-mode run:
+  per-update staleness (the paper's tau) and drained-batch-size
+  histograms from a ``repro.obs.MetricsRegistry``, recorded per
+  algorithm (dana-zero vs asgd by default) so the artifact shows the
+  actual staleness *distribution* the cluster produces — the quantity
+  DANA is built to tame.
+
+``--trace PATH`` wraps the phases in tracer spans and records the live
+and staleness sections' cluster runs (worker/master/mailbox spans +
+depth/busy counter tracks) into one Chrome-trace JSON — the CI workflow
+uploads it as an artifact; open it in ``ui.perfetto.dev``.
 """
 from __future__ import annotations
 
@@ -57,6 +68,8 @@ from repro.kernels.flat_update import (FLAT_ELIGIBLE, SEND_KERNEL,
                                        eligibility_matrix,
                                        kernel_eligible, send_spec_for)
 from repro.models.toy import make_classifier_fns
+from repro.obs import (STALENESS_EDGES, MetricsRegistry, trace,
+                       validate_chrome_trace)
 
 from .common import print_csv, save_json
 
@@ -286,6 +299,40 @@ def live_row(algo_name: str, num_workers: int, k: int, total_grads: int):
     }
 
 
+def staleness_profile_row(algo_name: str, num_workers: int,
+                          total_grads: int, time_scale: float = 2e-4):
+    """One paced-mode cluster run with the metrics registry attached:
+    the per-update staleness histogram (the paper's tau — fed from lag
+    at the History choke point) plus the sent-snapshot and
+    drained-batch-size histograms.  Paced mode (gamma-model execution
+    times) is what gives the run a real staleness *distribution*; free
+    mode would measure the scheduler, deterministic mode a fixed replay.
+    """
+    params0, grad_fn, next_batch = _setup()
+    algo = make_algorithm(algo_name, HP)
+    reg = MetricsRegistry()
+    cfg = ClusterConfig(num_workers=num_workers, total_grads=total_grads,
+                        mode="paced", coalesce=4, time_scale=time_scale)
+    stats: dict = {}
+    run_cluster(algo, grad_fn, params0, next_batch, cfg,
+                stats_out=stats, metrics=reg)
+    snap = reg.snapshot()
+    h = reg.histogram("staleness", STALENESS_EDGES)
+    return {
+        "section": "obs", "algo": algo_name, "workers": num_workers,
+        "grads": total_grads, "mode": "paced",
+        "staleness_nonzero_buckets": h.nonzero_buckets(),
+        "staleness_mean": snap["staleness"]["mean"],
+        "staleness_p50": snap["staleness"]["p50"],
+        "staleness_p99": snap["staleness"]["p99"],
+        "staleness": snap["staleness"],
+        "sent_staleness": snap["sent_staleness"],
+        "drain_k": snap["drain_k"],
+        "gap": snap["gap"],
+        "updates_per_s": stats["updates_per_s"],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--algos", nargs="*", default=["dana-zero"],
@@ -306,36 +353,49 @@ def main(argv=None):
     ap.add_argument("--grads", type=int, default=3000)
     ap.add_argument("--reps", type=int, default=200)
     ap.add_argument("--skip-live", action="store_true")
+    ap.add_argument("--skip-obs", action="store_true",
+                    help="skip the staleness-profile section")
     ap.add_argument("--out", default="results/bench_cluster.json")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome-trace JSON of the bench "
+                         "(per-phase spans + the live/obs cluster runs)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the staleness-profile metrics snapshots "
+                         "as a standalone JSON artifact")
     args = ap.parse_args(argv)
 
+    if args.trace:
+        trace.enable()
     matrix = check_eligibility_matrix()     # raises on regression
     algo0 = args.algos[0]
     cap_rows = []
-    for algo_name in args.algos:
-        for n in args.workers:
-            for k in args.coalesce:
-                for path in _paths_for(algo_name):
+    with trace.span("capacity", "bench"):
+        for algo_name in args.algos:
+            for n in args.workers:
+                for k in args.coalesce:
+                    for path in _paths_for(algo_name):
+                        cap_rows.append(master_capacity_row(
+                            algo_name, n, k, path, reps=args.reps))
+        if args.sched:
+            # the lifted constant-lr restriction: the same path sweep
+            # under a moving warm-up + step-decay schedule (first algo)
+            n0, k_hi = max(args.workers), max(args.coalesce)
+            for path in ("tree", "flat"):
+                if path in _paths_for(algo0):
                     cap_rows.append(master_capacity_row(
-                        algo_name, n, k, path, reps=args.reps))
-    if args.sched:
-        # the lifted constant-lr restriction: the same path sweep under
-        # a moving warm-up + step-decay schedule (first algo only)
-        n0, k_hi = max(args.workers), max(args.coalesce)
-        for path in ("tree", "flat"):
-            if path in _paths_for(algo0):
-                cap_rows.append(master_capacity_row(
-                    algo0, n0, k_hi, path, reps=args.reps, sched=True))
+                        algo0, n0, k_hi, path, reps=args.reps,
+                        sched=True))
     # send-path sweep: the look-ahead view construction, tree vs the
     # weighted-slab reduction kernel, for every swept algorithm
     send_rows = []
-    for algo_name in args.algos:
-        for path in ("tree", "flat"):
-            if path == "flat" and "flat" not in _paths_for(algo_name):
-                continue
-            send_rows.append(send_capacity_row(
-                algo_name, max(args.workers), path,
-                reps=max(args.reps, 50)))
+    with trace.span("send", "bench"):
+        for algo_name in args.algos:
+            for path in ("tree", "flat"):
+                if path == "flat" and "flat" not in _paths_for(algo_name):
+                    continue
+                send_rows.append(send_capacity_row(
+                    algo_name, max(args.workers), path,
+                    reps=max(args.reps, 50)))
     paths = _paths_for(algo0)
     shard_rows = []
     if "flat" in paths and args.shards:
@@ -343,15 +403,28 @@ def main(argv=None):
         # the wide state makes each rep ~50x the toy row's; scale reps so
         # the sweep costs about as much as one capacity row
         shard_reps = max(3, args.reps // 20)
-        for s in args.shards:
-            shard_rows.append(sharded_capacity_row(
-                algo0, n0, k_hi, s, reps=shard_reps,
-                width=args.shard_width))
+        with trace.span("sharded", "bench"):
+            for s in args.shards:
+                shard_rows.append(sharded_capacity_row(
+                    algo0, n0, k_hi, s, reps=shard_reps,
+                    width=args.shard_width))
     live_rows = []
     if not args.skip_live:
-        for n in args.workers:
-            for k in args.coalesce:
-                live_rows.append(live_row(algo0, n, k, args.grads))
+        with trace.span("live", "bench"):
+            for n in args.workers:
+                for k in args.coalesce:
+                    live_rows.append(live_row(algo0, n, k, args.grads))
+    obs_rows = []
+    if not args.skip_obs:
+        # the staleness profile: dana-zero (per-worker momentum) vs asgd
+        # (the no-momentum baseline) under identical pacing, plus the
+        # sweep's lead algorithm when it is neither
+        obs_algos = list(dict.fromkeys([algo0, "dana-zero", "asgd"]))
+        obs_grads = min(args.grads, 600)
+        with trace.span("obs", "bench"):
+            for a in obs_algos:
+                obs_rows.append(staleness_profile_row(
+                    a, max(args.workers), obs_grads))
 
     print_csv(cap_rows, ["section", "algo", "workers", "k", "path",
                          "sched", "us_per_msg", "master_updates_per_s"])
@@ -367,6 +440,11 @@ def main(argv=None):
                               "updates_per_s", "steady_updates_per_s",
                               "master_updates_per_s", "mean_coalesce",
                               "wall_s"])
+    if obs_rows:
+        print_csv(obs_rows, ["section", "algo", "workers", "grads",
+                             "staleness_nonzero_buckets",
+                             "staleness_mean", "staleness_p50",
+                             "staleness_p99", "updates_per_s"])
 
     def _cap(n, k, path, algo=algo0, sched=False):
         return next(r["master_updates_per_s"] for r in cap_rows
@@ -441,11 +519,32 @@ def main(argv=None):
         claims["coalesced_live_endtoend_beats_per_message"] = (
             _live(n0, k_hi, "steady_updates_per_s")
             > _live(n0, 1, "steady_updates_per_s"))
+    if obs_rows:
+        # the paced cluster produces a real staleness DISTRIBUTION (>= 2
+        # occupied histogram buckets) — a degenerate single-bucket
+        # histogram would mean the obs wiring or the pacing regressed
+        claims["staleness_hist_nondegenerate"] = all(
+            r["staleness_nonzero_buckets"] >= 2 for r in obs_rows)
+        claims["staleness_p99_by_algo"] = {
+            r["algo"]: r["staleness_p99"] for r in obs_rows}
     print("claims:", claims)
     save_json(args.out, {"capacity": cap_rows, "send": send_rows,
                          "sharded": shard_rows, "live": live_rows,
-                         "claims": claims})
-    return cap_rows + send_rows + shard_rows + live_rows, claims
+                         "obs": obs_rows, "claims": claims})
+    if args.metrics_out:
+        save_json(args.metrics_out,
+                  {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "obs": obs_rows})
+    if args.trace:
+        trace.disable()
+        obj = trace.export(args.trace)
+        errs = validate_chrome_trace(obj)
+        if errs:
+            raise RuntimeError(f"exported trace failed validation: "
+                               f"{errs[:5]}")
+        print(f"[trace] {args.trace}: {len(obj['traceEvents'])} events, "
+              f"VALID")
+    return cap_rows + send_rows + shard_rows + live_rows + obs_rows, claims
 
 
 if __name__ == "__main__":

@@ -125,6 +125,11 @@ def main(argv=None):
                     choices=list(SUITES))
     ap.add_argument("--no-trajectory", action="store_true",
                     help="skip the BENCH_kernels.json append")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="record the cluster suite with tracing on: "
+                         "writes DIR/cluster.trace.json (Chrome-trace, "
+                         "open in ui.perfetto.dev) and "
+                         "DIR/cluster.metrics.json (CI artifacts)")
     args = ap.parse_args(argv)
     if args.full and args.quick:
         ap.error("--full and --quick are mutually exclusive")
@@ -138,6 +143,12 @@ def main(argv=None):
         mod, fast, full = SUITES[name]
         argv_i = (full if args.full
                   else QUICK.get(name, fast) if args.quick else fast)
+        if name == "cluster" and args.trace_dir:
+            argv_i = argv_i + [
+                "--trace", os.path.join(args.trace_dir,
+                                        "cluster.trace.json"),
+                "--metrics-out", os.path.join(args.trace_dir,
+                                              "cluster.metrics.json")]
         print(f"\n===== {name} {' '.join(argv_i)} =====", flush=True)
         t0 = time.time()
         ok, claims = True, None

@@ -33,6 +33,8 @@ import dataclasses
 
 import numpy as np
 
+from ..obs import trace
+
 
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
@@ -110,4 +112,8 @@ class FaultInjector:
         if self._reorder_rng.random() >= self.plan.reorder_prob:
             return msgs
         perm = self._reorder_rng.permutation(len(msgs))
+        if trace.enabled:
+            trace.instant("reorder", "faults", k=len(msgs),
+                          shard=-1 if self.shard_id is None
+                          else self.shard_id)
         return [msgs[j] for j in perm]

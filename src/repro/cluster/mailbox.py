@@ -21,7 +21,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 from typing import Any
+
+from ..obs import trace
 
 
 @dataclasses.dataclass
@@ -163,8 +166,14 @@ class FanoutMailbox:
         self._tele_cb = tele_cb
         self._lock = threading.Lock()
 
+    @property
+    def depth(self) -> int:
+        """Deepest per-shard queue — a lock-free sampler read (see
+        ``Mailbox.depth``)."""
+        return max(mb.depth for mb in self.mailboxes)
+
     def __len__(self) -> int:
-        return max(len(mb) for mb in self.mailboxes)
+        return self.depth
 
     def put(self, msg: GradMsg, stop) -> bool:
         shards = len(self.mailboxes)
@@ -189,20 +198,35 @@ class FanoutMailbox:
 
 
 class Mailbox:
-    """Bounded FIFO with batched (coalescing) drain."""
+    """Bounded FIFO with batched (coalescing) drain.
+
+    Queue depth is mirrored into ``_depth``, a plain int updated only
+    while the condition lock is already held for the queue mutation
+    itself.  ``depth`` reads it WITHOUT the lock (int loads are atomic
+    under the GIL), so the observability sampler — which polls depth at
+    a few hundred Hz — never contends with the worker put / master drain
+    hot path.  The reading is an instantaneous snapshot, exactly what a
+    depth sample wants.
+    """
 
     def __init__(self, capacity: int = 0):
         self._capacity = capacity          # 0 = unbounded
         self._q: collections.deque[GradMsg] = collections.deque()
         self._cond = threading.Condition()
+        self._depth = 0                    # lock-free depth mirror
+
+    @property
+    def depth(self) -> int:
+        """Current queue depth — lock-free, for sampler threads."""
+        return self._depth
 
     def __len__(self) -> int:
-        with self._cond:
-            return len(self._q)
+        return self._depth
 
     def put(self, msg: GradMsg, stop: threading.Event) -> bool:
         """Enqueue; blocks while full.  Returns False if the cluster shut
         down before the message could be enqueued."""
+        t0 = time.perf_counter() if trace.enabled else 0.0
         with self._cond:
             while self._capacity and len(self._q) >= self._capacity:
                 if stop.is_set():
@@ -211,8 +235,12 @@ class Mailbox:
             if stop.is_set():
                 return False
             self._q.append(msg)
+            self._depth = len(self._q)
             self._cond.notify_all()
-            return True
+        if trace.enabled:
+            trace.complete("put", "mailbox", t0,
+                           time.perf_counter() - t0, worker=msg.worker_id)
+        return True
 
     def drain(self, max_k: int, stop: threading.Event,
               timeout: float = 0.05, pow2: bool = False) -> list[GradMsg]:
@@ -225,6 +253,7 @@ class Mailbox:
         master's fused receive compiles O(log k) variants instead of one
         per batch size (at steady state the queue is deep and the batch is
         exactly ``max_k`` anyway)."""
+        t0 = time.perf_counter() if trace.enabled else 0.0
         with self._cond:
             while not self._q:
                 if stop.is_set():
@@ -234,12 +263,19 @@ class Mailbox:
             if pow2:
                 k = 1 << (k.bit_length() - 1)
             out = [self._q.popleft() for _ in range(k)]
+            self._depth = len(self._q)
             self._cond.notify_all()
-            return out
+        if trace.enabled:
+            # the span is mostly WAIT time: in Perfetto, long drain spans
+            # against short apply spans = an under-fed (idle) server
+            trace.complete("drain", "mailbox", t0,
+                           time.perf_counter() - t0, k=k)
+        return out
 
     def drain_nowait(self) -> list[GradMsg]:
         with self._cond:
             out = list(self._q)
             self._q.clear()
+            self._depth = 0
             self._cond.notify_all()
             return out

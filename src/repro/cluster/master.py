@@ -62,7 +62,9 @@ from ..core.metrics import History
 from ..core.types import (tree_gap, tree_index, tree_l2, tree_scale,
                           tree_set_index)
 from ..kernels.dana_update import dana_master_update
-from ..kernels.flat_update import FlatAlgorithm, kernel_eligible
+from ..kernels.flat_update import (FlatAlgorithm, family_spec_for,
+                                   kernel_eligible)
+from ..obs import trace
 from .faults import FaultInjector
 from .mailbox import GradMsg, Mailbox, Reply
 
@@ -80,7 +82,11 @@ def run_serve_loop(server):
     overflow.  ``server`` provides mailbox/stop/total/applied/coalesce/
     injector/eval_boundary plus ``_apply(chunk)`` and
     ``_pull_reply(msg)``; errors land on ``server.error`` and raise the
-    stop flag.
+    stop flag.  Observability rides the existing timing: ``server.metrics``
+    (a ``serve_instruments`` bundle or None) gets the drained-batch-size
+    histogram and pull/overflow counters, and when tracing is enabled the
+    already-measured ``busy_s`` interval doubles as the apply span under
+    the ``server.obs_cat`` category ("master" or "shard").
 
     Chunks additionally never straddle an eval boundary
     (``server.eval_boundary``, 0 when no eval is configured): evals run
@@ -103,6 +109,7 @@ def run_serve_loop(server):
             overflow, work = work[room:], work[:room]
             if server.injector is not None:
                 work = server.injector.reorder(work)
+            mx = server.metrics
             while work:
                 # pull filtering / end-of-run truncation can leave a
                 # non-power-of-two batch; chunk it back to the warmed
@@ -118,9 +125,25 @@ def run_serve_loop(server):
                     server.coalesce_counts.get(k, 0) + 1
                 t_in = time.perf_counter()
                 server._apply(chunk)
-                server.busy_s += time.perf_counter() - t_in
+                dt = time.perf_counter() - t_in
+                server.busy_s += dt
+                if mx is not None:
+                    mx.drain_k.observe(k)
+                if trace.enabled:
+                    # reuse the busy_s interval: the apply span costs the
+                    # traced path zero extra clock reads
+                    trace.complete("apply", server.obs_cat, t_in, dt, k=k)
+            if pulls and mx is not None:
+                mx.pulls.add(len(pulls))
             for m in pulls:
+                t_p = time.perf_counter() if trace.enabled else 0.0
                 server._pull_reply(m)
+                if trace.enabled:
+                    trace.complete("pull", server.obs_cat, t_p,
+                                   time.perf_counter() - t_p,
+                                   worker=m.worker_id)
+            if overflow and mx is not None:
+                mx.overflow.add(len(overflow))
             for m in overflow:
                 m.respond(None)
             msgs = []
@@ -196,6 +219,15 @@ class Master:
         # modes, wall-clock seconds in free mode)
         self._time_fn = time_fn or (lambda m: m.t_send)
         self.coalesce_counts: dict[int, int] = {}   # drained-k histogram
+        # observability: trace span category + serve-side instrument
+        # bundle (attached by run_cluster when a registry is passed)
+        self.obs_cat = "master"
+        self.metrics = None
+        # sent-snapshot members (dc-asgd, dana-dc, ga-asgd) refresh a
+        # worker's snapshot on every send, so per-update staleness ==
+        # lag; snapshot-free members record NaN (no snapshot to age)
+        fam = family_spec_for(algo)
+        self._sent_family = fam is not None and fam.sent_key is not None
         # steady-state marker: wall time when 20% of the grads have been
         # applied (compile + ramp-up excluded from steady throughput)
         self._steady_mark = max(1, total_grads // 5)
@@ -282,6 +314,11 @@ class Master:
 
         def fused(flat, ids, nows, grads, views):
             g_flat = jnp.stack(grads)
+            # per-message sent-snapshot staleness comes from the scalar
+            # lane, read BEFORE apply_batch consumes the donated state
+            # (None for snapshot-free members)
+            stals = (fa.batch_staleness(flat, ids, k) if telemetry
+                     else None)
             flat, hats, pres = fa.apply_batch(flat, ids, g_flat, nows,
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
@@ -289,7 +326,7 @@ class Master:
                 d = pres - jnp.stack(views)  # zero in the padding region
                 gaps = jnp.sqrt(jnp.sum(d * d, axis=(1, 2))) * inv_sqrt_p
                 gnorms = jnp.sqrt(jnp.sum(g_flat * g_flat, axis=(1, 2)))
-                return flat, out_views, gaps, gnorms
+                return flat, out_views, gaps, gnorms, stals
             return flat, out_views, None, None
 
         # the flat state is donated: the batched kernel aliases its state
@@ -337,8 +374,11 @@ class Master:
                 state, view = _one(state, ids[j], grads[j], nows[j])
                 out_views.append(view)
             if telemetry:
+                # staleness slot: None on the tree path — the host
+                # computes it from view_step in _apply (== lag for the
+                # sent-snapshot family, NaN otherwise)
                 return state, tuple(out_views), jnp.stack(gaps), \
-                    jnp.stack(gnorms)
+                    jnp.stack(gnorms), None
             return state, tuple(out_views), None, None
 
         fn = jax.jit(fused)
@@ -354,7 +394,12 @@ class Master:
         grads = tuple(m.grad for m in work)
         views = tuple(m.view for m in work) if telemetry else None
         t0 = self._step
-        st, out_views, gaps, gnorms = fn(st, ids, nows, grads, views)
+        if telemetry:
+            st, out_views, gaps, gnorms, stals = fn(st, ids, nows, grads,
+                                                    views)
+        else:
+            st, out_views, _, _ = fn(st, ids, nows, grads, views)
+            gaps = gnorms = stals = None
         if self.state_is_flat:
             self._flat_state = st
         else:
@@ -363,6 +408,8 @@ class Master:
         if telemetry:           # one host transfer per batch, not 2k
             gaps = np.asarray(gaps)
             gnorms = np.asarray(gnorms)
+            if stals is not None:
+                stals = np.asarray(stals)
         evals = []
         for j, m in enumerate(work):
             self.applied += 1
@@ -370,10 +417,17 @@ class Master:
                 self.steady_t = time.perf_counter()
             m.respond(Reply(view=out_views[j], step=t0 + j + 1))
             if telemetry:
+                if stals is not None:            # flat path: lane-based
+                    stal = float(stals[j])
+                elif self._sent_family:          # tree path: == lag
+                    stal = float(t0 + j - m.view_step)
+                else:
+                    stal = float("nan")
                 self.history.record(
                     time=self._time_fn(m), step=t0 + j + 1,
                     worker=m.worker_id, lag=t0 + j - m.view_step,
-                    gap=float(gaps[j]), grad_norm=float(gnorms[j]))
+                    gap=float(gaps[j]), grad_norm=float(gnorms[j]),
+                    staleness=stal)
             if (self.applied % self.eval_every == 0
                     or self.applied == self.total):
                 evals.append((self._time_fn(m), t0 + j + 1))

@@ -23,6 +23,9 @@ from ..core.gamma import GammaModel
 from ..core.metrics import History
 from ..core.types import Pytree
 from ..kernels.flat_update import kernel_eligible
+from ..obs import trace
+from ..obs.metrics import (MetricsRegistry, SnapshotPublisher,
+                           history_observer, serve_instruments)
 from .clock import VirtualClock
 from .faults import FaultInjector, FaultPlan
 from .mailbox import Mailbox
@@ -58,12 +61,22 @@ def run_cluster(
     cfg: ClusterConfig,
     eval_fn: Callable[[Pytree], Any] | None = None,
     stats_out: dict | None = None,
+    metrics: MetricsRegistry | None = None,
 ) -> History:
     """Run one threaded parameter-server training session.
 
     Arguments match ``repro.core.engine.run_simulation``; ``stats_out``
     (optional dict) receives runtime statistics: applied message count,
     wall time, per-worker message counts and the coalescing histogram.
+
+    ``metrics`` (optional ``repro.obs.MetricsRegistry``) wires the
+    observability layer in: telemetry rows feed the staleness/gap
+    histograms through ``History.record``, the serve loops feed the
+    drained-batch-size histogram and pull/overflow counters, and a
+    background ``SnapshotPublisher`` samples mailbox depth + per-shard
+    busy time off the hot path (its series lands in
+    ``stats_out["obs_series"]``).  ``metrics=None`` (the default) leaves
+    the hot path exactly as before — the instruments are never touched.
     """
     if cfg.mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {cfg.mode!r}")
@@ -153,6 +166,32 @@ def run_cluster(
             eval_fn=eval_fn, eval_every=cfg.eval_every, injector=injector,
             time_fn=time_fn)
 
+    # -- observability wiring (None-guarded: zero hot-path cost when off)
+    publisher = None
+    if metrics is not None:
+        history.observer = history_observer(metrics)
+        serve_mx = serve_instruments(metrics)
+        if sharded:
+            for srv in master.shards_:
+                srv.metrics = serve_mx       # shared: per-thread cells
+        else:
+            master.metrics = serve_mx
+    if metrics is not None or trace.enabled:
+        # gauge sources are lock-free reads (Mailbox.depth contract),
+        # sampled by a background thread — never by cluster threads
+        if sharded:
+            sources = {}
+            for s, (mb, srv) in enumerate(zip(master.mailboxes,
+                                              master.shards_)):
+                sources[f"mailbox_depth/shard{s}"] = \
+                    (lambda mb=mb: mb.depth)
+                sources[f"busy_s/shard{s}"] = \
+                    (lambda srv=srv: srv.busy_s)
+        else:
+            sources = {"mailbox_depth": lambda: mailbox.depth,
+                       "busy_s/master": lambda: master.busy_s}
+        publisher = SnapshotPublisher(sources, registry=metrics)
+
     # warm-up pulls, in worker order on one thread (engine semantics)
     init_views = [master.initial_view(i) for i in range(n)]
     if not deterministic:
@@ -214,6 +253,8 @@ def run_cluster(
     prev_switch = sys.getswitchinterval()
     sys.setswitchinterval(2e-4)
     try:
+        if publisher is not None:
+            publisher.start()
         master_thread.start()
         for w in workers:
             w.start()
@@ -232,6 +273,8 @@ def run_cluster(
                         f"worker {w.wid} failed to shut down")
     finally:
         sys.setswitchinterval(prev_switch)
+        if publisher is not None:
+            publisher.stop()
 
     errors = [("master", master.error)] if master.error else []
     errors += [(f"worker-{w.wid}", w.error) for w in workers if w.error]
@@ -270,6 +313,8 @@ def run_cluster(
         )
         if sharded:
             stats_out["shard_applied"] = master.shard_applied
+        if publisher is not None:
+            stats_out["obs_series"] = publisher.series()
         if master.state_is_flat:
             fa = master._flat_algo
             flat = (master.shards_[0].state if sharded

@@ -176,6 +176,11 @@ class _ShardServer:
         self.coalesce_counts: dict[int, int] = {}
         self.busy_s = 0.0
         self.error: BaseException | None = None
+        # observability (run_serve_loop): all shards share one
+        # serve_instruments bundle — its cells are per-thread, so S
+        # serving threads never contend
+        self.obs_cat = "shard"
+        self.metrics = None
 
     # -- fused coalesced receive over this shard's rows ------------------
     def _get_fused(self, k: int, telemetry: bool):
@@ -381,6 +386,10 @@ class ShardedMaster:
         self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
         self._time_fn = time_fn or (lambda m: m.t_send)
         self._inv_sqrt_p = 1.0 / math.sqrt(self.spec.n_elems)
+        # sent-snapshot members refresh the applying worker's snapshot on
+        # every send, so per-update staleness == lag (same bookkeeping
+        # the single master uses on its tree path)
+        self._sent_family = self._flat_algo.fam.sent_key is not None
         self._hist_lock = threading.Lock()
         self._eval_slots: dict = {}     # step -> {"thetas": {sid: rows}, "t"}
         self._steady_mark = max(1, total_grads // 5)
@@ -444,7 +453,9 @@ class ShardedMaster:
             self.history.record(
                 time=t, step=step, worker=worker, lag=lag,
                 gap=math.sqrt(d2) * self._inv_sqrt_p,
-                grad_norm=math.sqrt(g2))
+                grad_norm=math.sqrt(g2),
+                staleness=float(lag) if self._sent_family
+                else float("nan"))
 
     def _eval_contribute(self, sid: int, step_ev: int, theta_rows, t_ev):
         if self._eval_jit is None:

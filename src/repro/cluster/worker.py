@@ -24,8 +24,10 @@ and one push fans out to every shard).
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable
 
+from ..obs import trace
 from .clock import VirtualClock
 from .faults import FaultInjector
 from .mailbox import GradMsg, Mailbox
@@ -81,9 +83,15 @@ class Worker(threading.Thread):
                       self._view if (self.telemetry and grad is not None)
                       else None,
                       self._view_step, t_send)
+        t0 = time.perf_counter() if trace.enabled else 0.0
         if not self.mailbox.put(msg, self.stop):
             return False
         reply = msg.wait_reply(self.rpc_timeout)
+        if trace.enabled:
+            # the fused push-pull round trip: enqueue + queueing delay +
+            # master service time, as seen from this worker
+            trace.complete("rpc", "worker", t0, time.perf_counter() - t0,
+                           pull_only=grad is None)
         if reply is None:
             return False
         self._view, self._view_step = reply.view, reply.step
@@ -104,7 +112,11 @@ class Worker(threading.Thread):
                         and self.master.applied < self.master.total):
                     batch = self.next_batch(self.wid, counter)
                     counter += 1
+                    tg = time.perf_counter() if trace.enabled else 0.0
                     grad = self.grad_jit(self._view, batch)
+                    if trace.enabled:
+                        trace.complete("grad", "worker", tg,
+                                       time.perf_counter() - tg)
                     ok = self._push(grad, t)
             finally:
                 if ok:
@@ -126,8 +138,13 @@ class Worker(threading.Thread):
                 back = self.injector.offline_until(self.wid,
                                                    self.master.step)
                 if back is not None:
+                    if trace.enabled:
+                        trace.instant("dropout", "faults", worker=self.wid,
+                                      back_step=back)
                     if not self._await_rejoin(back):
                         return
+                    if trace.enabled:
+                        trace.instant("rejoin", "faults", worker=self.wid)
                     # rejoin: stale view discarded, pull-only request
                     if not self._push(None, self.now_fn()):
                         return
@@ -139,7 +156,11 @@ class Worker(threading.Thread):
                 return
             batch = self.next_batch(self.wid, counter)
             counter += 1
+            tg = time.perf_counter() if trace.enabled else 0.0
             grad = self.grad_jit(self._view, batch)
+            if trace.enabled:
+                trace.complete("grad", "worker", tg,
+                               time.perf_counter() - tg)
             if not self._push(grad, self.now_fn()):
                 return
 

@@ -53,15 +53,24 @@ def run_simulation(
     next_batch: Callable[[int, int], Any],
     cfg: SimulationConfig,
     eval_fn: Callable[[Pytree], Any] | None = None,
+    metrics=None,
 ) -> History:
     """Run one asynchronous (or synchronous, for SSGD) training simulation.
 
     grad_fn(params, batch) -> grad pytree            (pure, jit-compiled here)
     next_batch(worker_id, counter) -> batch          (host-side, deterministic)
     eval_fn(params) -> loss or (loss, metric)        (pure, jit-compiled here)
+
+    ``metrics`` (optional ``repro.obs.MetricsRegistry``) taps every
+    telemetry row through the same ``history_observer`` adapter the
+    threaded cluster uses, so both backends fill the SAME staleness/gap
+    instruments — comparable by construction.
     """
     n = cfg.num_workers
     history = History()
+    if metrics is not None:
+        from ..obs.metrics import history_observer
+        history.observer = history_observer(metrics)
     draw = cfg.exec_model.sampler(n)
 
     eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
@@ -91,6 +100,14 @@ def run_simulation(
         from ..kernels.flat_update import FlatAlgorithm
         algo_exec = FlatAlgorithm(algo)
     state = algo_exec.init(params0, n)
+
+    # sent-snapshot members (dc-asgd, dana-dc, ga-asgd) refresh the
+    # applying worker's snapshot on every send, so its per-update
+    # staleness equals the lag the event loop already tracks; snapshot
+    # -free members record NaN (row-aligned series either way)
+    from ..kernels.flat_update import family_spec_for
+    fam = family_spec_for(algo)
+    sent_family = fam is not None and fam.sent_key is not None
 
     # ---- asynchronous event loop ---------------------------------------
     @jax.jit
@@ -124,7 +141,9 @@ def run_simulation(
             state, views[i], batch, jnp.int32(i), jnp.float32(t_now))
         if cfg.record_telemetry:
             history.record(time=t_now, step=int(state["t"]), worker=i,
-                           lag=lag, gap=gap, grad_norm=gnorm)
+                           lag=lag, gap=gap, grad_norm=gnorm,
+                           staleness=float(lag) if sent_family
+                           else float("nan"))
         views[i] = new_view
         pull_step[i] = int(state["t"])
         done += 1

@@ -16,6 +16,11 @@ class History:
     lag: list = dataclasses.field(default_factory=list)
     gap: list = dataclasses.field(default_factory=list)
     grad_norm: list = dataclasses.field(default_factory=list)
+    # per-update sent-snapshot staleness: how many master updates old the
+    # applying worker's ``sent`` snapshot was (the scalar the flat layout
+    # carries in its SENT_STEP lane).  NaN for snapshot-free algorithms —
+    # the series stays row-aligned with lag/gap either way.
+    staleness: list = dataclasses.field(default_factory=list)
     # evaluation curve (sparser)
     eval_time: list = dataclasses.field(default_factory=list)
     eval_step: list = dataclasses.field(default_factory=list)
@@ -25,14 +30,26 @@ class History:
     # engine and the cluster runtime; the backend-equivalence tests compare
     # these bit-for-bit)
     final_params: Any = None
+    # optional metrics tap (``repro.obs.metrics.history_observer``):
+    # because BOTH backends funnel every telemetry row through
+    # ``record``, hooking here makes their metrics comparable by
+    # construction
+    observer: Any = dataclasses.field(default=None, repr=False,
+                                      compare=False)
 
-    def record(self, *, time, step, worker, lag, gap, grad_norm):
+    def record(self, *, time, step, worker, lag, gap, grad_norm,
+               staleness=float("nan")):
         self.time.append(float(time))
         self.step.append(int(step))
         self.worker.append(int(worker))
         self.lag.append(int(lag))
         self.gap.append(float(gap))
         self.grad_norm.append(float(grad_norm))
+        self.staleness.append(float(staleness))
+        if self.observer is not None:
+            self.observer(time=time, step=step, worker=worker, lag=lag,
+                          gap=gap, grad_norm=grad_norm,
+                          staleness=staleness)
 
     def record_eval(self, *, time, step, loss, metric=float("nan")):
         self.eval_time.append(float(time))

@@ -465,6 +465,24 @@ class FlatAlgorithm:
         return (jnp.asarray(flat["t"], jnp.float32)
                 - self.lane.get(flat["wscal"], SENT_STEP))
 
+    def batch_staleness(self, flat: dict, wids, k: int):
+        """Per-message sent-snapshot staleness for a k-message batch,
+        BEFORE ``apply_batch`` consumes (donates) ``flat``: message j
+        applies at master step ``t + j`` against worker ``wids[j]``'s
+        snapshot, and a duplicate id inside the batch chains through its
+        own in-batch re-stamp (exactly the stamps ``apply_batch`` would
+        have written after j+1 messages).  Returns a (k,) f32 vector, or
+        None for snapshot-free members."""
+        if self.lane is None:
+            return None
+        sent = self.lane.get(flat["wscal"], SENT_STEP)
+        t = jnp.asarray(flat["t"], jnp.float32)
+        out = []
+        for j in range(k):                       # k static, <= coalesce
+            out.append(t + j - sent[wids[j]])
+            sent = sent.at[wids[j]].set(t + (j + 1))
+        return jnp.stack(out)
+
     # -- the flat send path ----------------------------------------------
     def _gamma(self) -> float:
         return (self.fam.gamma if self.fam.gamma is not None

@@ -16,6 +16,12 @@
   # 5% transient stalls, out-of-order delivery within the coalesce window
   PYTHONPATH=src python -m repro.launch.cluster --mode paced --workers 8 \
       --grads 2000 --dropout 2:200:600 --stall-prob 0.05 --reorder-prob 0.2
+
+  # observability: Chrome-trace JSON (open in ui.perfetto.dev) + a
+  # metrics snapshot (staleness/gap histograms, mailbox depth series)
+  PYTHONPATH=src python -m repro.launch.cluster --mode free --workers 8 \
+      --grads 2000 --coalesce 4 --trace results/cluster.trace.json \
+      --metrics-out results/cluster.metrics.json
 """
 from __future__ import annotations
 
@@ -110,6 +116,11 @@ def main(argv=None):
                     help="(deterministic mode) also run the discrete-event "
                          "engine and report the max parameter difference")
     ap.add_argument("--out", default=None, help="JSON artifact path")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome-trace/Perfetto JSON of the run")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot JSON (staleness/gap/"
+                         "drain-k histograms, depth/busy series)")
     args = ap.parse_args(argv)
 
     params0, grad_fn, next_batch, eval_fn = _setup(args)
@@ -136,11 +147,36 @@ def main(argv=None):
 
     algo = make_algorithm(args.algo, hp, sched)
     stats: dict = {}
-    hist = run_cluster(algo, grad_fn, params0, next_batch, cfg, eval_fn,
-                       stats_out=stats)
+    registry = None
+    if args.metrics_out:
+        from ..obs import MetricsRegistry
+        registry = MetricsRegistry()
+    if args.trace:
+        from ..obs import trace
+        trace.enable()
+    try:
+        hist = run_cluster(algo, grad_fn, params0, next_batch, cfg,
+                           eval_fn, stats_out=stats, metrics=registry)
+    finally:
+        if args.trace:
+            from ..obs import trace, validate_chrome_trace
+            trace.disable()
+            obj = trace.export(args.trace)
+            errs = validate_chrome_trace(obj)
+            spans = sum(1 for e in obj["traceEvents"] if e["ph"] == "X")
+            print(f"[trace] {args.trace}: {len(obj['traceEvents'])} "
+                  f"events, {spans} spans, "
+                  f"{'VALID' if not errs else errs[:3]}")
+    if registry is not None:
+        registry.to_json(args.metrics_out,
+                         extra={"series": stats.get("obs_series", {})})
+        print(f"[metrics] {args.metrics_out}: "
+              f"{', '.join(registry.names())}")
     summary = hist.summary()
+    # obs_series (the publisher's full time series) lives in the
+    # --metrics-out artifact, not the console summary
     summary.update({k: v for k, v in stats.items()
-                    if k != "grads_per_worker"})
+                    if k not in ("grads_per_worker", "obs_series")})
     print("== cluster run ==")
     for k, v in summary.items():
         print(f"  {k}: {v}")

@@ -1,0 +1,34 @@
+"""Cluster observability: lock-free tracing + typed metrics.
+
+Two pieces, one budget:
+
+* ``repro.obs.trace`` — per-thread ring-buffer span tracer with a
+  Chrome-trace/Perfetto JSON exporter (open a ``--trace`` artifact in
+  ``ui.perfetto.dev``).  Disabled it costs one module-attribute read
+  per call site; enabled it never takes a lock on the hot path.
+* ``repro.obs.metrics`` — counters / gauges / fixed-bucket histograms
+  (staleness, gap, drained-batch k, mailbox depth, per-shard busy
+  time) with a background ``SnapshotPublisher`` that samples gauges
+  off the hot path and mirrors them onto Perfetto counter tracks.
+
+Wired through the threaded cluster (``repro.cluster``), the
+discrete-event engine (``repro.core.engine`` — comparable metrics, no
+spans: virtual time has no wall-clock spans to show), the cluster CLI
+(``--trace`` / ``--metrics-out``) and ``benchmarks/bench_cluster.py``
+(per-phase profiles + staleness histograms).  This layer is the
+measurement prerequisite for the ROADMAP's autoscaler (item 3: live
+mailbox depth + per-shard busy telemetry) and row rebalancing (item 4).
+"""
+from . import trace
+from .metrics import (DEPTH_EDGES, DRAIN_K_EDGES, GAP_EDGES,
+                      STALENESS_EDGES, Counter, Gauge, Histogram,
+                      MetricsRegistry, SnapshotPublisher,
+                      history_observer, serve_instruments)
+from .trace import validate_chrome_trace
+
+__all__ = [
+    "trace", "validate_chrome_trace", "MetricsRegistry", "Counter",
+    "Gauge", "Histogram", "SnapshotPublisher", "history_observer",
+    "serve_instruments", "STALENESS_EDGES", "GAP_EDGES", "DRAIN_K_EDGES",
+    "DEPTH_EDGES",
+]

@@ -97,3 +97,78 @@ def test_trajectory_append_recovers_from_corruption(tmp_path):
     bench_run._append_trajectory({"probe": 1}, path=str(p))
     trail = json.loads(p.read_text())
     assert trail == [{"probe": 1}]
+
+
+def test_tracing_disabled_guard_within_noise_of_hot_path():
+    """Observability overhead guard: with tracing DISABLED, the guarded
+    call sites must cost a negligible fraction of the measured hot path.
+
+    The tracer's disabled-path contract is one module-attribute read and
+    a branch per call site.  We measure that guard cost directly (delta
+    over an empty loop, best of 3), scale it by the number of guarded
+    sites a message crosses, and require it to stay under 10% of the
+    measured per-message wall cost of a real free-mode cluster run — a
+    RELATIVE threshold, so the test doesn't flake on slow CI hosts but
+    does fail if the guard regresses into allocation, locking, or a time
+    syscall."""
+    import time
+
+    import jax
+
+    from repro.cluster import ClusterConfig, run_cluster
+    from repro.core import GammaModel, HyperParams, make_algorithm
+    from repro.data.synthetic import ClassificationTask
+    from repro.models.toy import make_classifier_fns
+    from repro.obs import trace
+
+    assert not trace.enabled
+
+    N = 200_000
+
+    def best_of(fn, reps=3):
+        return min(fn() for _ in range(reps))
+
+    def empty_loop():
+        t0 = time.perf_counter()
+        for _ in range(N):
+            pass
+        return time.perf_counter() - t0
+
+    def guarded_loop():
+        t0 = time.perf_counter()
+        for _ in range(N):
+            if trace.enabled:  # pragma: no cover - must not be taken
+                trace.complete("x", "test", 0.0, 0.0)
+        return time.perf_counter() - t0
+
+    per_guard = max(best_of(guarded_loop) - best_of(empty_loop), 0.0) / N
+    # one message crosses ~6 guarded sites: mailbox put + drain, serve
+    # apply, worker rpc + grad, publisher-side depth read
+    per_msg_guard = 6 * per_guard
+
+    # reference: real per-message wall cost, measured (warm-up run first
+    # so jit compilation stays out of the measurement)
+    task = ClassificationTask(dim=8, num_classes=4, batch_size=8, seed=3)
+    init, grad_fn, make_eval = make_classifier_fns([8, 16, 4])
+    params0 = init(jax.random.PRNGKey(0))
+    eval_fn = make_eval(task.eval_batch(32))
+    grads = 240
+
+    def run_once():
+        algo = make_algorithm("dana-zero", HyperParams(lr=0.05,
+                                                       momentum=0.9))
+        cfg = ClusterConfig(num_workers=4, total_grads=grads,
+                            eval_every=10_000, mode="free", coalesce=4,
+                            exec_model=GammaModel(seed=5))
+        t0 = time.perf_counter()
+        run_cluster(algo, grad_fn, params0, task.batch, cfg, eval_fn)
+        return time.perf_counter() - t0
+
+    run_once()                             # warm-up (compilation)
+    per_msg_cost = best_of(run_once, reps=2) / grads
+
+    ratio = per_msg_guard / per_msg_cost
+    assert ratio < 0.10, (
+        f"disabled-tracing guard costs {per_msg_guard * 1e9:.0f} ns/msg "
+        f"({ratio:.1%} of the {per_msg_cost * 1e6:.1f} us/msg hot path); "
+        f"the disabled path must stay near-free")

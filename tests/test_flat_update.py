@@ -402,9 +402,9 @@ def test_flat_fused_telemetry_matches_tree():
     views = tuple(jax.tree.map(lambda l: l + 0.01 * j, PARAMS0)
                   for j in range(k))
     spec = m_flat._flat_algo.spec
-    _, _, gaps_t, gn_t = m_tree._get_fused(k, True)(state, ids, nows,
-                                                    grads, views)
-    _, _, gaps_f, gn_f = m_flat._get_fused_flat(k, True)(
+    _, _, gaps_t, gn_t, _ = m_tree._get_fused(k, True)(state, ids, nows,
+                                                       grads, views)
+    _, _, gaps_f, gn_f, _ = m_flat._get_fused_flat(k, True)(
         m_flat._flat_state, ids, nows,
         tuple(spec.pack(g) for g in grads),
         tuple(spec.pack(v) for v in views))

@@ -1,0 +1,398 @@
+"""Observability layer tests: tracer, metrics registry, cluster wiring.
+
+Three contracts are load-bearing:
+
+* the exported trace is valid Chrome-trace JSON with spans from every
+  component type (worker, master/shard, mailbox) plus counter tracks —
+  the same check CI runs against the bench artifact;
+* staleness telemetry is backend-identical: the discrete-event engine,
+  the tree-path cluster, and the flat-kernel cluster record the same
+  ``History.staleness`` series in deterministic mode;
+* observability is inert when off: telemetry/tracing toggles must not
+  change a single bit of the trained parameters.
+"""
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, Mailbox, run_cluster
+from repro.cluster.mailbox import FanoutMailbox
+from repro.core import (GammaModel, HyperParams, SimulationConfig,
+                        make_algorithm, run_simulation)
+from repro.data.synthetic import ClassificationTask
+from repro.models.toy import make_classifier_fns
+from repro.obs import (DRAIN_K_EDGES, STALENESS_EDGES, Counter, Gauge,
+                       Histogram, MetricsRegistry, SnapshotPublisher,
+                       history_observer, trace, validate_chrome_trace)
+
+HP = HyperParams(lr=0.05, momentum=0.9)
+TASK = ClassificationTask(dim=8, num_classes=4, batch_size=8, seed=3)
+INIT, GRAD_FN, MAKE_EVAL = make_classifier_fns([8, 16, 4])
+PARAMS0 = INIT(jax.random.PRNGKey(0))
+EVAL_FN = MAKE_EVAL(TASK.eval_batch(32))
+
+
+@pytest.fixture(autouse=True)
+def _trace_off():
+    """The tracer is module-global state: never leak it across tests."""
+    yield
+    trace.disable()
+
+
+def _run_cluster(name, *, workers=4, grads=80, seed=5, metrics=None, **kw):
+    algo = make_algorithm(name, HP)
+    cfg = ClusterConfig(num_workers=workers, total_grads=grads,
+                        eval_every=1000, exec_model=GammaModel(seed=seed),
+                        mode=kw.pop("mode", "deterministic"), **kw)
+    return run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg, EVAL_FN,
+                       metrics=metrics)
+
+
+def _run_engine(name, *, workers=4, grads=80, seed=5, metrics=None):
+    algo = make_algorithm(name, HP)
+    cfg = SimulationConfig(num_workers=workers, total_grads=grads,
+                           eval_every=1000, exec_model=GammaModel(seed=seed))
+    return run_simulation(algo, GRAD_FN, PARAMS0, TASK.batch, cfg, EVAL_FN,
+                          metrics=metrics)
+
+
+def _assert_params_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# tracer unit behavior
+# ---------------------------------------------------------------------------
+def test_ring_drop_oldest():
+    trace.enable(capacity=8)
+    for j in range(20):
+        trace.complete(f"ev{j}", "test", 0.0, 1e-6, j=j)
+    trace.disable()
+    obj = trace.export()
+    spans = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == 8
+    # drop-oldest: the tail survives, the head is gone
+    assert sorted(e["args"]["j"] for e in spans) == list(range(12, 20))
+    assert obj["otherData"]["dropped_events"] == 12
+
+
+def test_begin_end_nesting_and_span_cm():
+    trace.enable()
+    trace.begin("outer", "test")
+    trace.begin("inner", "test")
+    trace.end(k=1)
+    trace.end()
+    with trace.span("cm", "test", tag="x"):
+        pass
+    trace.disable()
+    spans = [e for e in trace.export()["traceEvents"] if e["ph"] == "X"]
+    names = [e["name"] for e in spans]
+    assert names == ["outer", "inner", "cm"]   # export sorts by start ts
+    inner = next(e for e in spans if e["name"] == "inner")
+    outer = next(e for e in spans if e["name"] == "outer")
+    assert inner["dur"] <= outer["dur"]
+    assert next(e for e in spans if e["name"] == "cm")["args"] == {
+        "tag": "x"}
+
+
+def test_disabled_guard_records_nothing():
+    trace.enable()
+    trace.disable()
+    # call sites are guarded by trace.enabled; a correctly-guarded hot
+    # path emits nothing once disabled
+    if trace.enabled:  # pragma: no cover - the guard is the point
+        trace.complete("x", "test", 0.0, 1.0)
+    with trace.span("guarded", "test"):
+        pass
+    assert all(e["ph"] == "M" or e["ph"] != "X"
+               for e in trace.export()["traceEvents"])
+
+
+def test_export_writes_file_and_validates(tmp_path):
+    trace.enable()
+    trace.complete("apply", "master", 0.0, 1e-5, k=4)
+    trace.instant("dropout", "faults", worker=2)
+    trace.counter("mailbox_depth", 3)
+    trace.disable()
+    path = tmp_path / "t.json"
+    obj = trace.export(str(path))
+    assert validate_chrome_trace(obj) == []
+    on_disk = json.loads(path.read_text())
+    assert validate_chrome_trace(on_disk) == []
+    phs = {e["ph"] for e in on_disk["traceEvents"]}
+    assert {"M", "X", "i", "C"} <= phs
+
+
+def test_validator_rejects_malformed():
+    assert validate_chrome_trace([]) != []                 # not an object
+    assert validate_chrome_trace({}) != []                 # no traceEvents
+    base = {"pid": 1, "tid": 1, "ts": 0.0}
+    good = dict(base, ph="X", name="a", dur=1.0)
+    cases = [
+        dict(base, ph="Q", name="a"),                      # unknown ph
+        dict(base, ph="X", name="a"),                      # X without dur
+        dict(base, ph="X", name="a", dur=-1.0),            # negative dur
+        dict(base, ph="X", dur=1.0),                       # missing name
+        dict(base, ph="C", name="a", args={"v": "high"}),  # non-numeric C
+        dict(ph="X", name="a", ts=0.0, dur=1.0),           # missing pid/tid
+    ]
+    for bad in cases:
+        errs = validate_chrome_trace({"traceEvents": [good, bad]})
+        assert errs, f"accepted malformed event {bad}"
+    # zero spans is itself invalid (wiring regression, not a trace)
+    assert validate_chrome_trace({"traceEvents": []}) == [
+        "trace contains no complete spans"]
+    assert validate_chrome_trace({"traceEvents": [good]}) == []
+
+
+# ---------------------------------------------------------------------------
+# metrics instruments
+# ---------------------------------------------------------------------------
+def test_counter_multithreaded_exact():
+    c = Counter("c")
+    barrier = threading.Barrier(8)
+
+    def work():
+        barrier.wait()
+        for _ in range(1000):
+            c.add(1.0)
+
+    ts = [threading.Thread(target=work) for _ in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert c.value == 8000.0
+
+
+def test_histogram_buckets_quantiles_nan():
+    h = Histogram("h", STALENESS_EDGES)
+    for x in [0, 0, 1, 3, 5, 100, float("nan")]:
+        h.observe(x)
+    assert h.count == 6                      # NaN is not a sample
+    snap = h.snapshot()
+    assert snap["buckets"]["le_0"] == 2
+    assert snap["buckets"]["le_1"] == 1
+    assert snap["buckets"]["le_3"] == 1
+    assert snap["buckets"]["le_6"] == 1      # 5 falls in (4, 6]
+    assert snap["buckets"]["le_128"] == 1
+    assert snap["min"] == 0 and snap["max"] == 100
+    assert h.quantile(0.5) == 1.0
+    assert h.quantile(0.99) == 128.0
+    assert h.nonzero_buckets() == 5
+    empty = Histogram("e", DRAIN_K_EDGES)
+    assert np.isnan(empty.quantile(0.5))
+
+
+def test_histogram_multithreaded_merge():
+    h = Histogram("h", (10, 20, 30))
+
+    def work(v):
+        for _ in range(500):
+            h.observe(v)
+
+    ts = [threading.Thread(target=work, args=(v,)) for v in (5, 15, 99)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    snap = h.snapshot()
+    assert snap["count"] == 1500
+    assert snap["buckets"] == {"le_10": 500, "le_20": 500, "le_30": 0,
+                               "inf": 500}
+
+
+def test_histogram_rejects_bad_edges():
+    with pytest.raises(ValueError):
+        Histogram("h", (3, 1, 2))
+    with pytest.raises(ValueError):
+        Histogram("h", ())
+
+
+def test_registry_idempotent_and_kind_checked():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    assert reg.histogram("h", STALENESS_EDGES) is reg.histogram(
+        "h", STALENESS_EDGES)
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+    g = reg.gauge("g", fn=lambda: 7.0)
+    assert g.value == 7.0
+    snap = reg.snapshot()
+    assert snap["g"] == {"type": "gauge", "value": 7.0}
+    assert reg.names() == ["g", "h", "x"]
+
+
+def test_gauge_set_and_fn():
+    g = Gauge("g")
+    g.set(3)
+    assert g.value == 3.0
+    assert Gauge("g2", fn=lambda: 11).value == 11.0
+
+
+def test_history_observer_feeds_instruments():
+    reg = MetricsRegistry()
+    obs = history_observer(reg)
+    obs(lag=2.0, gap=1e-3, grad_norm=2.0, staleness=2.0)
+    obs(lag=4.0, gap=1e-2, grad_norm=0.0, staleness=float("nan"))
+    snap = reg.snapshot()
+    assert snap["updates"]["value"] == 2.0
+    assert snap["staleness"]["count"] == 2
+    assert snap["sent_staleness"]["count"] == 1      # NaN dropped
+    assert snap["gap"]["count"] == 2
+    assert snap["normalized_gap"]["count"] == 1      # grad_norm==0 skipped
+
+
+def test_snapshot_publisher_samples_and_stops():
+    vals = iter(range(1000))
+    pub = SnapshotPublisher({"x": lambda: next(vals), "bad": None},
+                            interval=0.002)
+    pub.start()
+    time.sleep(0.05)
+    pub.stop()
+    assert not pub.is_alive()
+    series = pub.series()
+    assert len(series["x"]) >= 2                 # sampled + final sample
+    xs = [v for _, v in series["x"]]
+    assert xs == sorted(xs)
+    assert series["bad"] == []                   # failing source swallowed
+
+
+def _msg(wid=0):
+    from repro.cluster.mailbox import GradMsg
+    return GradMsg(wid, grad=("g0", "g1"), view=None, view_step=0,
+                   t_send=0.0)
+
+
+def test_mailbox_depth_lock_free_read():
+    mb = Mailbox()
+    stop = threading.Event()
+    for j in range(3):
+        mb.put(_msg(j), stop)
+    assert mb.depth == 3
+    got = []
+    with mb._cond:                       # holder blocks put/drain...
+        t = threading.Thread(target=lambda: got.append(mb.depth))
+        t.start()
+        t.join(timeout=1.0)              # ...but depth reads never wait
+        assert not t.is_alive()
+    assert got == [3]
+    mb.drain(8, stop)
+    assert mb.depth == 0
+
+
+def test_fanout_mailbox_depth_is_max_over_shards():
+    fo = FanoutMailbox([Mailbox(), Mailbox()])
+    stop = threading.Event()
+    for j in range(3):
+        fo.put(_msg(j), stop)            # fan-out: every shard gets a part
+    assert fo.mailboxes[0].depth == 3
+    fo.mailboxes[0].drain(2, stop)
+    assert fo.mailboxes[0].depth == 1
+    assert fo.mailboxes[1].depth == 3
+    assert fo.depth == 3                 # deepest shard queue
+
+
+# ---------------------------------------------------------------------------
+# cluster wiring: traced runs export component spans + counter tracks
+# ---------------------------------------------------------------------------
+def _traced_run(name, **kw):
+    trace.enable()
+    try:
+        _run_cluster(name, mode="free", grads=120, coalesce=4, **kw)
+    finally:
+        trace.disable()
+    return trace.export()
+
+
+def test_traced_single_master_run():
+    obj = _traced_run("dc-asgd")
+    assert validate_chrome_trace(obj) == []
+    spans = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    cats = {e.get("cat") for e in spans}
+    assert {"worker", "master", "mailbox"} <= cats
+    tracks = {e["name"] for e in obj["traceEvents"] if e["ph"] == "C"}
+    assert {"mailbox_depth", "busy_s/master"} <= tracks
+    # thread_name metadata makes Perfetto tracks readable
+    tnames = {e["args"]["name"] for e in obj["traceEvents"]
+              if e["ph"] == "M"}
+    assert any(n.startswith("ps-worker") for n in tnames)
+
+
+def test_traced_sharded_run():
+    obj = _traced_run("dana-zero", shards=2)
+    assert validate_chrome_trace(obj) == []
+    cats = {e.get("cat") for e in obj["traceEvents"] if e["ph"] == "X"}
+    assert {"worker", "shard", "mailbox"} <= cats
+    tracks = {e["name"] for e in obj["traceEvents"] if e["ph"] == "C"}
+    assert {"busy_s/shard0", "busy_s/shard1", "mailbox_depth/shard0",
+            "mailbox_depth/shard1"} <= tracks
+
+
+def test_cluster_metrics_registry_populated():
+    reg = MetricsRegistry()
+    _run_cluster("dc-asgd", mode="free", grads=120, coalesce=4,
+                 metrics=reg)
+    snap = reg.snapshot()
+    assert snap["updates"]["value"] == 120
+    assert snap["staleness"]["count"] == 120
+    # dc-asgd carries a sent snapshot: its staleness series is real
+    assert snap["sent_staleness"]["count"] == 120
+    assert snap["drain_k"]["count"] >= 120 / 4     # coalesced batches
+    assert snap["drain_k"]["sum"] == 120
+    assert snap["gap"]["count"] == 120
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: staleness series is backend-identical
+# ---------------------------------------------------------------------------
+def test_staleness_identical_across_backends_sent_family():
+    h_e = _run_engine("dc-asgd")
+    h_tree = _run_cluster("dc-asgd", use_kernel=False)
+    h_flat = _run_cluster("dc-asgd", use_kernel=True)
+    assert len(h_e.staleness) == 80
+    # sent-snapshot refreshed on every send => staleness == lag
+    np.testing.assert_array_equal(h_e.staleness, h_e.lag)
+    np.testing.assert_array_equal(h_e.staleness, h_tree.staleness)
+    np.testing.assert_array_equal(h_e.staleness, h_flat.staleness)
+    assert max(h_e.staleness) > 0          # non-degenerate with 4 workers
+
+
+def test_staleness_nan_for_snapshot_free_algo():
+    h_e = _run_engine("dana-zero")
+    h_c = _run_cluster("dana-zero")
+    assert len(h_c.staleness) == 80
+    assert all(np.isnan(h_e.staleness))
+    assert all(np.isnan(h_c.staleness))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: observability off == observability on, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,kernel", [("dc-asgd", True),
+                                         ("dana-zero", False)])
+def test_telemetry_toggle_params_bit_identical(name, kernel):
+    h_on = _run_cluster(name, use_kernel=kernel, record_telemetry=True)
+    h_off = _run_cluster(name, use_kernel=kernel, record_telemetry=False)
+    assert h_off.lag == []                 # telemetry really off
+    _assert_params_equal(h_on.final_params, h_off.final_params)
+
+
+def test_tracing_toggle_params_bit_identical():
+    h_off = _run_cluster("dana-zero", use_kernel=True)
+    trace.enable()
+    try:
+        h_on = _run_cluster("dana-zero", use_kernel=True)
+    finally:
+        trace.disable()
+    _assert_params_equal(h_on.final_params, h_off.final_params)
+
+
+def test_metrics_registry_params_bit_identical():
+    h_plain = _run_cluster("dc-asgd", use_kernel=True)
+    h_metered = _run_cluster("dc-asgd", use_kernel=True,
+                             metrics=MetricsRegistry())
+    _assert_params_equal(h_plain.final_params, h_metered.final_params)
