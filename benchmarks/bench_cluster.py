@@ -32,6 +32,12 @@ Three measurements:
   shrinks ~1/S while the shards run in parallel.  On a GIL-bound CPU
   container the parallel win is bounded by dispatch overhead — the
   sweep records where sharding starts paying on this hardware.
+* **memory tier** — the scalar-prefetch slab kernel (PR 7) vs the PR-2
+  full-slab kernel over an N-sweep with Zipf-skewed sender ids: wall
+  time per k-message batch for the forced kernels AND the production
+  ``prefetch_pays``-routed dispatch, plus the analytic slab traffic
+  (2u streams for u unique senders vs 2N), and a skewed-pull
+  micro-bench (full view vs the hot-row ``view_rows`` slice).
 * **live throughput** — end-to-end gradients/sec of the threaded cluster
   (free-running workers, telemetry off) per (worker count, k).  Noisier —
   it includes worker grad computation, GIL hand-offs and queue dynamics —
@@ -56,6 +62,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.cluster import (ClusterConfig, Mailbox, Master, ShardedMaster,
                            run_cluster)
@@ -65,8 +72,12 @@ from repro.core.schedules import Schedule
 from repro.core.types import HyperParams
 from repro.data.synthetic import ClassificationTask
 from repro.kernels.flat_update import (FLAT_ELIGIBLE, SEND_KERNEL,
-                                       eligibility_matrix,
-                                       kernel_eligible, send_spec_for)
+                                       FlatAlgorithm, eligibility_matrix,
+                                       flat_master_update_batch,
+                                       kernel_eligible, prefetch_pays,
+                                       send_spec_for)
+from repro.kernels.flat_update.kernel import (
+    flat_master_update_batch_2d, flat_master_update_batch_prefetch)
 from repro.models.toy import make_classifier_fns
 from repro.obs import (STALENESS_EDGES, MetricsRegistry, trace,
                        validate_chrome_trace)
@@ -278,6 +289,100 @@ def send_capacity_row(algo_name: str, num_workers: int, path: str,
     }
 
 
+def memtier_rows_for(n: int, k: int = 8, rows: int = 256, reps: int = 6,
+                     zipf_a: float = 1.5, seed: int = 0) -> list[dict]:
+    """One N point of the memory-tier sweep: wall time (interpret mode)
+    of a k-message batch with Zipf-skewed sender ids through three slab
+    paths — the forced scalar-prefetch kernel, the forced PR-2 full-slab
+    kernel, and the production ``prefetch_pays``-routed dispatch
+    (``memtier``) — plus the analytic slab traffic each path streams
+    (the prefetch grid moves 2u rows for u unique senders; the dense
+    grid moves 2N regardless of who sent)."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n + 1) ** zipf_a
+    ids_np = rng.choice(n, size=k, p=w / w.sum())
+    u = len({int(i) for i in ids_np})
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    theta = jax.random.normal(ks[0], (rows, 128))
+    v = jax.random.normal(ks[1], (n, rows, 128)) * 0.1
+    v0 = jnp.sum(v, axis=0)
+    g = jax.random.normal(ks[2], (k, rows, 128))
+    ids = jnp.asarray(ids_np, jnp.int32)
+    lrs = jnp.full((k,), HP.lr)
+    gammas = jnp.full((k,), HP.momentum)
+    ones = jnp.ones((k,))
+    args = (theta, v, v0, None, None, g, ids, lrs, lrs, gammas, ones,
+            ones)
+
+    def _call(path):
+        if path == "memtier":
+            return flat_master_update_batch(
+                theta, v, v0, None, None, None, g, ids, lrs, lrs,
+                gammas, ones, ones, nesterov=False, telemetry=False,
+                use_pallas=True, prefetch=True)
+        fn = (flat_master_update_batch_prefetch if path == "prefetch"
+              else flat_master_update_batch_2d)
+        return fn(*args, nesterov=False, telemetry=False, interpret=True)
+
+    routed = prefetch_pays(rows, n, k)
+    out_rows = []
+    for path in ("memtier", "prefetch", "full_slab"):
+        out = _call(path)
+        jax.block_until_ready(out[0])
+        dt = float("inf")                                # best of 3
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = _call(path)
+            jax.block_until_ready(out[0])
+            dt = min(dt, (time.perf_counter() - t0) / reps)
+        streams_pf = path == "prefetch" or (path == "memtier" and routed)
+        out_rows.append({
+            "section": "memtier", "n": n, "k": k, "u": u, "rows": rows,
+            "path": path,
+            "routed_to": ("prefetch" if routed else "full_slab")
+            if path == "memtier" else path,
+            "ms_per_batch": dt * 1e3,
+            "slab_rows_streamed": (2 * u if streams_pf else 2 * n) * rows,
+            "slab_rows_full": 2 * n * rows,
+        })
+    return out_rows
+
+
+def memtier_pull_row(width: int = 4096, num_workers: int = 8,
+                     hot_frac: int = 8, reps: int = 200) -> dict:
+    """The skewed-pull micro-bench: views/sec of the full flat send view
+    vs the hot-row ``view_rows`` slice (one ``hot_frac``-th of the rows,
+    row-aligned) — the protocol-layer saving a worker gets by declaring
+    the rows its Zipf-hot gradient actually reads."""
+    params0, _, _ = _setup(width=width)
+    algo = make_algorithm("dana-zero", HP)
+    fa = FlatAlgorithm(algo)
+    flat = fa.init(params0, num_workers)
+    rows = int(flat["theta"].shape[0])
+    hot = max(8, (rows // hot_frac) // 8 * 8)
+    full_jit = jax.jit(lambda fl, i: fa._view_flat(fl, i))
+    hot_jit = jax.jit(lambda fl, i, b=hot: fa.view_rows(fl, i, 0, b))
+    res = {}
+    for name, fn in (("full", full_jit), ("hot", hot_jit)):
+        out = fn(flat, jnp.int32(1))
+        jax.block_until_ready(out)
+        dt = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn(flat, jnp.int32(1))
+            jax.block_until_ready(out)
+            dt = min(dt, (time.perf_counter() - t0) / reps)
+        res[name] = dt
+    return {
+        "section": "memtier_pull", "workers": num_workers, "rows": rows,
+        "hot_rows": hot, "us_full_view": res["full"] * 1e6,
+        "us_hot_view": res["hot"] * 1e6,
+        "saving_x": res["full"] / res["hot"],
+    }
+
+
 def live_row(algo_name: str, num_workers: int, k: int, total_grads: int):
     """End-to-end throughput of the threaded cluster in free mode."""
     params0, grad_fn, next_batch = _setup()
@@ -350,6 +455,12 @@ def main(argv=None):
                          "state -> sharding divides real memory traffic)")
     ap.add_argument("--no-sched", dest="sched", action="store_false",
                     help="skip the scheduled-lr capacity variant")
+    ap.add_argument("--memtier-n", type=int, nargs="*",
+                    default=[8, 16, 64],
+                    help="worker counts for the memory-tier slab sweep "
+                         "(empty list skips the section)")
+    ap.add_argument("--memtier-reps", type=int, default=6,
+                    help="timed reps per memory-tier point (best of 3)")
     ap.add_argument("--grads", type=int, default=3000)
     ap.add_argument("--reps", type=int, default=200)
     ap.add_argument("--skip-live", action="store_true")
@@ -408,6 +519,14 @@ def main(argv=None):
                 shard_rows.append(sharded_capacity_row(
                     algo0, n0, k_hi, s, reps=shard_reps,
                     width=args.shard_width))
+    memtier_rows = []
+    pull_row = None
+    if args.memtier_n:
+        with trace.span("memtier", "bench"):
+            for n in args.memtier_n:
+                memtier_rows.extend(memtier_rows_for(
+                    n, reps=args.memtier_reps))
+            pull_row = memtier_pull_row(reps=max(args.reps, 50))
     live_rows = []
     if not args.skip_live:
         with trace.span("live", "bench"):
@@ -435,6 +554,13 @@ def main(argv=None):
         print_csv(shard_rows, ["section", "algo", "workers", "k", "shards",
                                "width", "rows", "us_per_msg",
                                "master_updates_per_s"])
+    if memtier_rows:
+        print_csv(memtier_rows, ["section", "n", "k", "u", "path",
+                                 "routed_to", "ms_per_batch",
+                                 "slab_rows_streamed", "slab_rows_full"])
+    if pull_row is not None:
+        print_csv([pull_row], ["section", "workers", "rows", "hot_rows",
+                               "us_full_view", "us_hot_view", "saving_x"])
     if live_rows:
         print_csv(live_rows, ["section", "algo", "workers", "k", "path",
                               "updates_per_s", "steady_updates_per_s",
@@ -515,6 +641,47 @@ def main(argv=None):
             best_s = max(sweep, key=sweep.get)
             claims["sharded_best_shards"] = int(best_s)
             claims["sharded_best_over_S1_x"] = sweep[best_s] / sweep["1"]
+    if memtier_rows:
+        def _mt(n, path):
+            return next(r["ms_per_batch"] for r in memtier_rows
+                        if r["n"] == n and r["path"] == path)
+        ns = sorted(args.memtier_n)
+        n_hi = ns[-1]
+        # the headline: the scalar-prefetch kernel vs the PR-2 full-slab
+        # kernel where the dense grid's tiles shrink (the sweep head)
+        claims["prefetch_over_full_slab_x"] = (
+            _mt(n_hi, "full_slab") / _mt(n_hi, "prefetch"))
+        claims["prefetch_over_full_slab_x_by_n"] = {
+            str(n): _mt(n, "full_slab") / _mt(n, "prefetch") for n in ns}
+        # the production dispatch must never regress the dense regime:
+        # at every swept N the routed path stays within noise (15%) of
+        # the full-slab baseline — at small N it IS the full-slab kernel
+        # by ``prefetch_pays`` routing, so this pins the routing rule
+        claims["memtier_auto_over_full_x_by_n"] = {
+            str(n): _mt(n, "full_slab") / _mt(n, "memtier") for n in ns}
+        if 8 in ns:
+            claims["prefetch_not_slower_at_n8"] = (
+                _mt(8, "memtier") <= 1.15 * _mt(8, "full_slab"))
+        claims["memtier_routing_by_n"] = {
+            str(r["n"]): r["routed_to"] for r in memtier_rows
+            if r["path"] == "memtier"}
+        # the traffic story: streamed slab rows scale with the u unique
+        # senders (Zipf-skewed, so u < k <= N at the sweep head), never
+        # with the worker count
+        claims["memtier_streamed_rows_by_n"] = {
+            str(r["n"]): {"u": r["u"],
+                          "prefetch": r["slab_rows_streamed"],
+                          "full_slab": r["slab_rows_full"]}
+            for r in memtier_rows if r["path"] == "prefetch"}
+        claims["slab_traffic_scales_with_u"] = all(
+            r["slab_rows_streamed"] == 2 * r["u"] * r["rows"]
+            and (r["u"] >= r["n"]
+                 or r["slab_rows_streamed"] < r["slab_rows_full"])
+            for r in memtier_rows if r["path"] == "prefetch")
+    if pull_row is not None:
+        claims["skewed_pull_saving_x"] = pull_row["saving_x"]
+        claims["skewed_pull_rows"] = {"hot": pull_row["hot_rows"],
+                                      "full": pull_row["rows"]}
     if live_rows:
         claims["coalesced_live_endtoend_beats_per_message"] = (
             _live(n0, k_hi, "steady_updates_per_s")
@@ -528,9 +695,11 @@ def main(argv=None):
         claims["staleness_p99_by_algo"] = {
             r["algo"]: r["staleness_p99"] for r in obs_rows}
     print("claims:", claims)
+    memtier_all = memtier_rows + ([pull_row] if pull_row else [])
     save_json(args.out, {"capacity": cap_rows, "send": send_rows,
-                         "sharded": shard_rows, "live": live_rows,
-                         "obs": obs_rows, "claims": claims})
+                         "sharded": shard_rows, "memtier": memtier_all,
+                         "live": live_rows, "obs": obs_rows,
+                         "claims": claims})
     if args.metrics_out:
         save_json(args.metrics_out,
                   {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -544,7 +713,8 @@ def main(argv=None):
                                f"{errs[:5]}")
         print(f"[trace] {args.trace}: {len(obj['traceEvents'])} events, "
               f"VALID")
-    return cap_rows + send_rows + shard_rows + live_rows + obs_rows, claims
+    return (cap_rows + send_rows + shard_rows + memtier_all + live_rows
+            + obs_rows, claims)
 
 
 if __name__ == "__main__":

@@ -87,10 +87,13 @@ QUICK = {
     # (narrow --shard-width keeps the smoke compile cheap); --algos must
     # cover at least one sent-snapshot member (dc-asgd) AND the
     # rate-weighted member (dana-hetero, PR 5) so a kernel- or
-    # send-kernel-eligibility regression fails the smoke
+    # send-kernel-eligibility regression fails the smoke; --memtier-n
+    # must span the dense regime (8) and the shrunk-tile regime (64) so
+    # the PR-7 memory-tier routing claims stay in the trajectory
     "cluster": ["--grads", "160", "--workers", "4",
                 "--coalesce", "1", "4", "--shards", "1", "2",
                 "--shard-width", "256", "--reps", "10",
+                "--memtier-n", "8", "64", "--memtier-reps", "3",
                 "--algos", "dana-zero", "dc-asgd", "dana-hetero",
                 "--out", ""],
     "scaling-lm": ["--preset", "lm", "--grads", "60", "--workers", "2",

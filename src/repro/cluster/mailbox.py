@@ -30,28 +30,38 @@ from ..obs import trace
 @dataclasses.dataclass
 class Reply:
     """Master's answer to one gradient push: the fresh parameter view and
-    the master step it was issued at (the worker's next ``pull_step``)."""
+    the master step it was issued at (the worker's next ``pull_step``).
+
+    ``rows`` is None for a full view; a hot-row pull answered over only
+    the requested row range carries that ``(r0, r1)`` back so the worker
+    merges the partial view instead of replacing its copy."""
     view: Any
     step: int
+    rows: Any = None
 
 
 class GradMsg:
     """One worker->master message.
 
     ``grad is None`` marks a pull-only request (a rejoining worker asking
-    for fresh parameters without contributing an update).
+    for fresh parameters without contributing an update).  ``rows``
+    (pull-only) is an optional ``(r0, r1)`` flat-row range the worker
+    declares hot: the master may serve the view over just those rows
+    (``Reply.rows`` echoes the range it honored; sent-snapshot masters
+    fall back to the full view and leave it None).
     """
 
     __slots__ = ("worker_id", "grad", "view", "view_step", "t_send",
-                 "_event", "_reply")
+                 "rows", "_event", "_reply")
 
     def __init__(self, worker_id: int, grad: Any, view: Any,
-                 view_step: int, t_send: float):
+                 view_step: int, t_send: float, rows=None):
         self.worker_id = worker_id
         self.grad = grad
         self.view = view              # params the gradient was computed on
         self.view_step = view_step    # master step the view was issued at
         self.t_send = t_send          # virtual (det/paced) or wall time
+        self.rows = rows              # hot-row range for pull-only requests
         self._event = threading.Event()
         self._reply: Reply | None = None
 
@@ -80,7 +90,8 @@ class _ReplyGroup:
     """
 
     __slots__ = ("parent", "shards", "_lock", "_views", "_left", "_failed",
-                 "_step0", "_tele_cb", "_tele_left", "_d2", "_g2", "_meta")
+                 "_step0", "_rows_ok", "_tele_cb", "_tele_left", "_d2",
+                 "_g2", "_meta")
 
     def __init__(self, parent: GradMsg, shards: int, tele_cb=None):
         self.parent = parent
@@ -90,6 +101,7 @@ class _ReplyGroup:
         self._left = shards
         self._failed = False
         self._step0 = 0
+        self._rows_ok = True         # every shard honored its hot-row slice
         self._tele_cb = tele_cb
         self._tele_left = shards
         self._d2 = 0.0
@@ -102,15 +114,23 @@ class _ReplyGroup:
                 self._failed = True
             else:
                 self._views[sid] = reply.view
+                if reply.rows is None:
+                    self._rows_ok = False
                 if sid == 0:
                     self._step0 = reply.step
             self._left -= 1
             done = self._left == 0
             failed = self._failed
         if done:
+            # the assembled reply is partial (hot rows) only when the
+            # parent asked for a range AND every shard served its slice
+            # (a sent-snapshot master falls back to full shard views)
+            rows = (self.parent.rows
+                    if self.parent.rows is not None and self._rows_ok
+                    else None)
             self.parent.respond(None if failed else
                                 Reply(view=tuple(self._views),
-                                      step=self._step0))
+                                      step=self._step0, rows=rows))
 
     def add_telemetry(self, sid: int, *, worker: int, step: int, lag: int,
                       t: float, d2: float, g2: float):
@@ -135,8 +155,9 @@ class ShardMsg(GradMsg):
 
     def __init__(self, worker_id: int, grad: Any, view: Any,
                  view_step: int, t_send: float, *, group: _ReplyGroup,
-                 sid: int):
-        super().__init__(worker_id, grad, view, view_step, t_send)
+                 sid: int, rows=None):
+        super().__init__(worker_id, grad, view, view_step, t_send,
+                         rows=rows)
         self.group = group
         self.sid = sid
 
@@ -159,12 +180,26 @@ class FanoutMailbox:
     interleave differently per shard and the shards would apply
     *different* message sets at the total boundary.  The lock covers
     only queue appends (a blocked bounded ``Mailbox.put`` drains
-    independently of other workers' puts, so it cannot deadlock)."""
+    independently of other workers' puts, so it cannot deadlock).
 
-    def __init__(self, mailboxes: list["Mailbox"], tele_cb=None):
+    ``ranges`` (the shards' static row ranges) lets a pull-only hot-row
+    request fan out sliced: each part asks its shard for the local-row
+    intersection of the worker's hot range with the shard's range (empty
+    intersections become zero-row requests the shard answers with a
+    zero-row view).  ``full_fanout=True`` is the row-rebalancing wire
+    mode: shard ranges move at run time, so every part carries the WHOLE
+    packed gradient and each shard slices its own (current) rows inside
+    its fused jit — hot-row slicing is disabled there (ranges are no
+    longer static)."""
+
+    def __init__(self, mailboxes: list["Mailbox"], tele_cb=None,
+                 ranges=None, full_fanout: bool = False):
         self.mailboxes = list(mailboxes)
         self._tele_cb = tele_cb
         self._lock = threading.Lock()
+        self.ranges = (None if full_fanout or ranges is None
+                       else tuple(ranges))
+        self.full_fanout = full_fanout
 
     @property
     def depth(self) -> int:
@@ -178,13 +213,30 @@ class FanoutMailbox:
     def put(self, msg: GradMsg, stop) -> bool:
         shards = len(self.mailboxes)
         group = _ReplyGroup(msg, shards, tele_cb=self._tele_cb)
-        parts = [
-            ShardMsg(msg.worker_id,
-                     None if msg.grad is None else msg.grad[s],
-                     None if msg.view is None else msg.view[s],
-                     msg.view_step, msg.t_send, group=group, sid=s)
-            for s in range(shards)
-        ]
+        if self.full_fanout:
+            # rebalance wire mode: one full packed gradient, shared by
+            # every part (read-only on the shards; each slices in-jit)
+            parts = [
+                ShardMsg(msg.worker_id, msg.grad, msg.view, msg.view_step,
+                         msg.t_send, group=group, sid=s)
+                for s in range(shards)
+            ]
+        else:
+            part_rows = [None] * shards
+            if msg.rows is not None and self.ranges is not None:
+                h0, h1 = msg.rows
+                part_rows = [
+                    (max(h0, s0) - s0, max(min(h1, s1), max(h0, s0)) - s0)
+                    for s0, s1 in self.ranges
+                ]
+            parts = [
+                ShardMsg(msg.worker_id,
+                         None if msg.grad is None else msg.grad[s],
+                         None if msg.view is None else msg.view[s],
+                         msg.view_step, msg.t_send, group=group, sid=s,
+                         rows=part_rows[s])
+                for s in range(shards)
+            ]
         with self._lock:
             for s, (part, mb) in enumerate(zip(parts, self.mailboxes)):
                 if not mb.put(part, stop):

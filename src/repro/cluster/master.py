@@ -80,11 +80,14 @@ def run_serve_loop(server):
     messages) -> apply fault reordering to the accepted work -> chunk to
     the warmed power-of-two fused variants -> reply to pulls -> reject
     overflow.  ``server`` provides mailbox/stop/total/applied/coalesce/
-    injector/eval_boundary plus ``_apply(chunk)`` and
-    ``_pull_reply(msg)``; errors land on ``server.error`` and raise the
-    stop flag.  Observability rides the existing timing: ``server.metrics``
+    injector/eval_boundary/slab_info plus ``_apply(chunk)`` and
+    ``_pull_reply(msg)`` (which returns the number of view rows served,
+    0 when unknown); errors land on ``server.error`` and raise the stop
+    flag.  Observability rides the existing timing: ``server.metrics``
     (a ``serve_instruments`` bundle or None) gets the drained-batch-size
-    histogram and pull/overflow counters, and when tracing is enabled the
+    histogram, pull/overflow counters and the memory-tier traffic
+    counters (``slab_info = (n_slab_workers, rows_per_sender)`` on flat
+    servers, None on the tree path), and when tracing is enabled the
     already-measured ``busy_s`` interval doubles as the apply span under
     the ``server.obs_cat`` category ("master" or "shard").
 
@@ -129,6 +132,17 @@ def run_serve_loop(server):
                 server.busy_s += dt
                 if mx is not None:
                     mx.drain_k.observe(k)
+                    info = server.slab_info
+                    if info is not None:
+                        # memory-tier traffic: the prefetch lowering
+                        # streams 2 slab rows (read+write) per UNIQUE
+                        # sender per slab; the full-slab kernel streams
+                        # them for every worker.  Recording both makes
+                        # the 2N->2u claim visible in exported series.
+                        n_slab, rows2 = info
+                        u = min(len({m.worker_id for m in chunk}), n_slab)
+                        mx.slab_rows_streamed.add(u * rows2)
+                        mx.slab_rows_total.add(n_slab * rows2)
                 if trace.enabled:
                     # reuse the busy_s interval: the apply span costs the
                     # traced path zero extra clock reads
@@ -137,7 +151,9 @@ def run_serve_loop(server):
                 mx.pulls.add(len(pulls))
             for m in pulls:
                 t_p = time.perf_counter() if trace.enabled else 0.0
-                server._pull_reply(m)
+                served_rows = server._pull_reply(m)
+                if mx is not None and served_rows:
+                    mx.pull_rows.add(served_rows)
                 if trace.enabled:
                     trace.complete("pull", server.obs_cat, t_p,
                                    time.perf_counter() - t_p,
@@ -228,6 +244,17 @@ class Master:
         # lag; snapshot-free members record NaN (no snapshot to age)
         fam = family_spec_for(algo)
         self._sent_family = fam is not None and fam.sent_key is not None
+        # memory-tier traffic model for the serve-loop counters: slab
+        # worker count + rows one sender streams (2 r/w streams per slab)
+        self.slab_info = None
+        if self.state_is_flat and "v" in self._flat_state:
+            n_slab = int(self._flat_state["v"].shape[0])
+            n_slabs = 2 if "sent" in self._flat_state else 1
+            rows = int(self._flat_state["v"].shape[-2])
+            self.slab_info = (n_slab, 2 * rows * n_slabs)
+        # hot-row pulls: one jitted row-sliced view closure per distinct
+        # (static) requested range — see FlatAlgorithm.view_rows
+        self._view_rows_jit: dict = {}
         # steady-state marker: wall time when 20% of the grads have been
         # applied (compile + ramp-up excluded from steady throughput)
         self._steady_mark = max(1, total_grads // 5)
@@ -444,14 +471,35 @@ class Master:
                         else (out, float("nan")))
         self.history.record_eval(time=t, step=step, loss=loss, metric=metric)
 
-    def _pull_reply(self, m: GradMsg):
+    def _pull_reply(self, m: GradMsg) -> int:
         if self.state_is_flat:
+            if m.rows is not None and not self._sent_family:
+                # hot-row pull: serve the view over only the declared
+                # rows (row-local reduction, bit-equal to the full
+                # view's slice).  Sent-snapshot members never take this
+                # branch — their send must refresh the worker's full
+                # snapshot slab row, so they fall through to the
+                # full-range send below (Reply.rows stays None and the
+                # worker replaces its whole view).
+                r0, r1 = int(m.rows[0]), int(m.rows[1])
+                fn = self._view_rows_jit.get((r0, r1))
+                if fn is None:
+                    fa = self._flat_algo
+                    fn = jax.jit(lambda fl, i, a=r0, b=r1:
+                                 fa.view_rows(fl, i, a, b))
+                    self._view_rows_jit[(r0, r1)] = fn
+                view = fn(self._flat_state, jnp.int32(m.worker_id))
+                m.respond(Reply(view=view, step=self._step,
+                                rows=(r0, r1)))
+                return r1 - r0
             view, self._flat_state = self._flat_send_jit(
                 self._flat_state, jnp.int32(m.worker_id))
-        else:
-            view, self._tree_state = self._send_jit(self._tree_state,
-                                                    jnp.int32(m.worker_id))
+            m.respond(Reply(view=view, step=self._step))
+            return int(view.shape[-2])
+        view, self._tree_state = self._send_jit(self._tree_state,
+                                                jnp.int32(m.worker_id))
         m.respond(Reply(view=view, step=self._step))
+        return 0
 
     # -- main loop -------------------------------------------------------
     def serve(self):

@@ -51,6 +51,16 @@ class ClusterConfig:
     shards: int = 1                 # row-range master shards (flat path)
     mailbox_capacity: int = 0       # 0 = unbounded
     rpc_timeout: float = 120.0
+    # memory tier: per-worker hot flat-row ranges for pull-only requests
+    # (a tuple of num_workers entries, each None or (r0, r1)); masters
+    # that cannot honor a range (tree path, sent-snapshot family) fall
+    # back to full-range pulls
+    hot_rows: tuple | None = None
+    # row-sharded placement: optional custom initial shard row ranges,
+    # and online busy_s-driven rebalancing at eval watermarks
+    shard_ranges: tuple | None = None
+    rebalance: bool = False
+    rebalance_threshold: float = 1.1
 
 
 def run_cluster(
@@ -97,6 +107,11 @@ def run_cluster(
                          "stalls, or a live mode")
 
     sharded = cfg.shards > 1
+    if cfg.rebalance and not sharded:
+        raise ValueError("rebalance=True requires shards > 1 (there is "
+                         "nothing to move rows between)")
+    if cfg.shard_ranges is not None and not sharded:
+        raise ValueError("shard_ranges requires shards > 1")
     use_kernel = cfg.use_kernel
     if use_kernel is None:
         # auto-routing is numerically silent for the elementwise family:
@@ -155,7 +170,9 @@ def run_cluster(
             total_grads=cfg.total_grads, coalesce=coalesce,
             record_telemetry=cfg.record_telemetry, eval_fn=eval_fn,
             eval_every=cfg.eval_every, injectors=shard_injectors,
-            time_fn=time_fn, mailbox_capacity=cfg.mailbox_capacity)
+            time_fn=time_fn, mailbox_capacity=cfg.mailbox_capacity,
+            ranges=cfg.shard_ranges, rebalance=cfg.rebalance,
+            rebalance_threshold=cfg.rebalance_threshold)
         mailbox = master.frontdoor
     else:
         mailbox = Mailbox(cfg.mailbox_capacity)
@@ -212,7 +229,24 @@ def run_cluster(
         ]
         draw = (lambda wid: samplers[wid](wid))
 
-    if sharded:
+    if sharded and master.rebalancer is not None:
+        # rebalance wire format: shard ranges move at run time, so the
+        # worker ships the FULL packed gradient (the fan-out hands every
+        # shard the same buffer and each slices its current rows in-jit);
+        # the view stays the range-ordered tuple of (current-width)
+        # slices, re-traced per width combination after a move
+        spec = master.spec
+
+        def _rebalance_grad(fv, batch):
+            return spec.pack(grad_fn(spec.unpack(spec.concat_rows(fv)),
+                                     batch))
+
+        grad_jit = jax.jit(_rebalance_grad)
+        if publisher is not None:
+            # the rebalancer's busy_s signal prefers the published
+            # series (the PR-6 observability path) over the live gauges
+            master.rebalancer.series_fn = publisher.series
+    elif sharded:
         # sharded wire format: the worker's own jit gathers its view from
         # the range-ordered shard slices and scatters its packed gradient
         # back into per-shard slices — the worker pushes ONE gradient and
@@ -235,12 +269,56 @@ def run_cluster(
             grad_fn(spec.unpack(fv), batch)))
     else:
         grad_jit = jax.jit(grad_fn)
+    # hot-row pulls: one jitted merge closure per declaring worker, built
+    # against the STATIC layout (skipped under rebalancing — ranges move,
+    # so those runs fall back to full-range pulls automatically)
+    hot_rows: list = [None] * n
+    merge_views: list = [None] * n
+    if cfg.hot_rows is not None:
+        if len(cfg.hot_rows) != n:
+            raise ValueError(f"hot_rows needs one entry per worker "
+                             f"({n}), got {len(cfg.hot_rows)}")
+        if not master.state_is_flat:
+            raise ValueError("hot_rows requires the flat kernel master "
+                             "(use_kernel must not be False)")
+        rows_total = master._flat_algo.spec.rows
+        rebalancing = sharded and master.rebalancer is not None
+        for wid, hr in enumerate(cfg.hot_rows):
+            if hr is None:
+                continue
+            r0, r1 = int(hr[0]), int(hr[1])
+            if not 0 <= r0 < r1 <= rows_total:
+                raise ValueError(f"hot_rows[{wid}]={hr} outside "
+                                 f"[0, {rows_total})")
+            if rebalancing:
+                continue
+            if sharded:
+                plans = []
+                for s, (s0, s1) in enumerate(master.ranges):
+                    a, b = max(r0, s0), min(r1, s1)
+                    if a < b:
+                        plans.append((s, a - s0, b - s0))
+
+                def merge(old, piece, plans=tuple(plans)):
+                    new = list(old)
+                    for s, a, b in plans:
+                        new[s] = new[s].at[a:b].set(piece[s])
+                    return tuple(new)
+
+                merge_views[wid] = jax.jit(merge)
+            else:
+                merge_views[wid] = jax.jit(
+                    lambda old, piece, a=r0, b=r1:
+                    old.at[a:b].set(piece))
+            hot_rows[wid] = (r0, r1)
+
     workers = [
         Worker(wid, master=master, mailbox=mailbox, grad_jit=grad_jit,
                next_batch=next_batch, stop=stop, mode=cfg.mode,
                init_view=init_views[wid], clock=clock, draw=draw,
                now_fn=now_fn, time_scale=cfg.time_scale, injector=injector,
-               telemetry=cfg.record_telemetry, rpc_timeout=cfg.rpc_timeout)
+               telemetry=cfg.record_telemetry, rpc_timeout=cfg.rpc_timeout,
+               hot_rows=hot_rows[wid], merge_view=merge_views[wid])
         for wid in range(n)
     ]
 
@@ -313,6 +391,9 @@ def run_cluster(
         )
         if sharded:
             stats_out["shard_applied"] = master.shard_applied
+            if master.rebalancer is not None:
+                stats_out["rebalance_moves"] = master.rebalance_moves
+                stats_out["shard_ranges"] = master.current_ranges
         if publisher is not None:
             stats_out["obs_series"] = publisher.series()
         if master.state_is_flat:

@@ -139,12 +139,149 @@ class _NormExchange:
         return float(total)
 
 
+class RowRebalancer:
+    """Online row-range rebalancing between adjacent shards.
+
+    Every ``every`` applied messages (the eval watermarks — the shared
+    serve loop already guarantees no fused chunk straddles them, so all
+    S shards pause at EXACTLY the same applied count) the first shard to
+    reach the watermark reads the per-shard ``busy_s`` gauges — through
+    ``SnapshotPublisher.series()`` when the observability layer is wired,
+    the live gauges otherwise — and decides at most ONE boundary shift:
+    the busiest shard donates a row-aligned block from the edge adjacent
+    to its least-busy neighbor.  The decision is cached per watermark, so
+    every shard sees the identical plan; the donor slices the rows off
+    its state (``slice_flat``) and publishes them in a rendezvous slot,
+    the receiver blocks until they arrive and concatenates
+    (``merge_flat``).  Because the fan-out delivers every message to
+    every shard and the family is elementwise per row, WHERE a row lives
+    never changes its arithmetic — the reassembled final state is
+    bit-identical to the unrebalanced run (tested), the PR-4
+    exact-applied-count watermark is what makes the handoff
+    torn-state-free.  Shards not named in the plan pass straight
+    through (their rows are untouched).  Gap-aware is excluded (its
+    cross-shard norm exchange assumes fixed ranges)."""
+
+    def __init__(self, owner: "ShardedMaster", *, every: int,
+                 threshold: float = 1.1, series_fn=None):
+        self.owner = owner
+        self.every = max(1, every)
+        self.threshold = float(threshold)
+        self.series_fn = series_fn          # SnapshotPublisher.series
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._plans: dict = {}              # watermark -> plan | None
+        self._pieces: dict = {}             # watermark -> donated rows
+        self.moves: list[tuple] = []        # (watermark, donor, recv, n)
+
+    # -- decision ---------------------------------------------------------
+    def _busy(self) -> list[float]:
+        busy = [float(srv.busy_s) for srv in self.owner.shards_]
+        if self.series_fn is not None:
+            try:
+                series = self.series_fn()
+                for s in range(len(busy)):
+                    pts = series.get(f"busy_s/shard{s}")
+                    if pts:
+                        busy[s] = float(pts[-1][1])
+            except Exception:  # noqa: BLE001 - observation must not kill
+                pass
+        return busy
+
+    def _decide(self):
+        srvs = self.owner.shards_
+        busy = self._busy()
+        donor = max(range(len(busy)), key=lambda s: busy[s])
+        cands = [s for s in (donor - 1, donor + 1) if 0 <= s < len(busy)]
+        recv = min(cands, key=lambda s: busy[s])
+        if busy[donor] < self.threshold * max(busy[recv], 1e-12):
+            return None
+        align = self.owner.spec.row_align
+        rows_d = srvs[donor].r1 - srvs[donor].r0
+        rows_r = srvs[recv].r1 - srvs[recv].r0
+        # shift a quarter of the row imbalance, row-aligned, and leave
+        # the donor at least one aligned block (no empty shards)
+        move = max((rows_d - rows_r) // 4 // align * align, 0)
+        move = min(move, (rows_d - align) // align * align)
+        if move < align:
+            return None
+        return (donor, recv, move)
+
+    def _plan_for(self, wm: int):
+        with self._lock:
+            if wm not in self._plans:
+                self._plans[wm] = self._decide()
+            return self._plans[wm]
+
+    # -- rendezvous -------------------------------------------------------
+    def at_watermark(self, srv: "_ShardServer"):
+        wm = srv.applied
+        if wm % self.every or wm >= self.owner.total:
+            return
+        plan = self._plan_for(wm)
+        if plan is None:
+            return
+        donor, recv, move = plan
+        if srv.sid == donor:
+            self._donate(srv, wm, recv, move)
+        elif srv.sid == recv:
+            self._receive(srv, wm, donor, move)
+
+    def _donate(self, srv, wm, recv, move):
+        # re-clamp against the donor's rows AT EXECUTION time: the plan
+        # may have been computed by a shard that ran ahead of an earlier
+        # move (barrier-free shard clocks), so the planned size can be
+        # stale — the receiver sizes its merge from the piece itself
+        align = self.owner.spec.row_align
+        rows = srv.r1 - srv.r0
+        move = min(move, (rows - align) // align * align)
+        if move < align:
+            piece = None                # no-op move, unblock the receiver
+        elif recv < srv.sid:            # give away the leading edge
+            piece = slice_flat(srv.state, 0, move)
+            srv.state = slice_flat(srv.state, move, rows)
+            srv.r0 += move
+        else:                           # give away the trailing edge
+            piece = slice_flat(srv.state, rows - move, rows)
+            srv.state = slice_flat(srv.state, 0, rows - move)
+            srv.r1 -= move
+        with self._cond:
+            self._pieces[wm] = piece
+            if piece is not None:
+                self.moves.append((wm, srv.sid, recv, move))
+            self._cond.notify_all()
+
+    def _receive(self, srv, wm, donor, move):
+        with self._cond:
+            while wm not in self._pieces:
+                if self.owner.stop.is_set():
+                    return
+                self._cond.wait(timeout=0.05)
+            piece = self._pieces.pop(wm)
+        if piece is None:
+            return                      # donor had nothing left to give
+        move = int(piece["theta"].shape[-2])
+        if donor < srv.sid:             # rows arrive BEFORE this range
+            srv.state = merge_flat([piece, srv.state])
+            srv.r0 -= move
+        else:                           # rows arrive AFTER this range
+            srv.state = merge_flat([srv.state, piece])
+            srv.r1 += move
+
+
 class _ShardServer:
     """One row-range shard: a lean single-threaded master over rows
     [r0, r1).  The serve loop mirrors ``Master.serve`` (drain -> reorder
     -> chunk to warmed power-of-two fused variants -> apply -> reply) but
     the state is a row slice and telemetry/eval flow to the owner's
-    aggregators as partials instead of being recorded directly."""
+    aggregators as partials instead of being recorded directly.
+
+    Under row rebalancing (``owner.rebalancer``) the range [r0, r1) is
+    MUTABLE: gradients arrive as full packed buffers and each fused
+    variant slices this shard's current rows in-jit (the cache key
+    carries the range, so a moved boundary simply compiles the next
+    variant), and at eval watermarks the shard hands row ranges to / takes
+    them from an adjacent shard through the rebalancer's rendezvous."""
 
     def __init__(self, sid: int, owner: "ShardedMaster", r0: int, r1: int,
                  state: dict, mailbox: Mailbox,
@@ -160,14 +297,16 @@ class _ShardServer:
         self.total = owner.total
         self.coalesce = owner.coalesce
         self.telemetry = owner.record_telemetry
-        # fused chunks never straddle an eval watermark (see
-        # master.run_serve_loop): all S shards snapshot at the same
-        # applied counts even when their drain batches differ
+        # fused chunks never straddle an eval (or rebalance) watermark
+        # (see master.run_serve_loop): all S shards snapshot / move rows
+        # at the same applied counts even when their drain batches differ
         self.eval_boundary = (owner.eval_every
-                              if owner._eval_jit is not None else 0)
+                              if (owner._eval_jit is not None
+                                  or owner.rebalancer is not None) else 0)
         self.applied = 0
         self._step = 0
         self._fused: dict = {}
+        self._view_rows_jit: dict = {}
         self._send_jit = jax.jit(self.fa.send_flat)
         if owner._gap_ex is not None:
             self._gap_partial_jit = jax.jit(self.fa.gap_partial)
@@ -182,9 +321,24 @@ class _ShardServer:
         self.obs_cat = "shard"
         self.metrics = None
 
+    # -- memory-tier traffic model (serve-loop counters) -----------------
+    @property
+    def slab_info(self):
+        st = self.state
+        if "v" not in st:
+            return None
+        n_slabs = 2 if "sent" in st else 1
+        return (int(st["v"].shape[0]),
+                2 * int(st["v"].shape[-2]) * n_slabs)
+
     # -- fused coalesced receive over this shard's rows ------------------
     def _get_fused(self, k: int, telemetry: bool):
-        key = (k, telemetry)
+        # under rebalancing the wire carries FULL packed gradients and
+        # the slice happens here, in-jit; the key carries the current
+        # range so a moved boundary compiles a fresh variant
+        rows = ((self.r0, self.r1) if self.owner.rebalancer is not None
+                else None)
+        key = (k, telemetry, rows)
         fn = self._fused.get(key)
         if fn is not None:
             return fn
@@ -192,6 +346,8 @@ class _ShardServer:
 
         def fused(flat, ids, nows, grads, views):
             g = jnp.stack(grads)
+            if rows is not None:
+                g = g[:, rows[0]:rows[1]]
             flat, hats, pres = fa.apply_batch(flat, ids, g, nows,
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
@@ -209,7 +365,12 @@ class _ShardServer:
         return fn
 
     def warm(self):
-        zero = jnp.zeros_like(self.state["theta"])
+        if self.owner.rebalancer is not None:
+            # rebalance wire mode: full packed gradients on the wire
+            zero = jnp.zeros((self.owner.spec.rows,
+                              self.state["theta"].shape[-1]), jnp.float32)
+        else:
+            zero = jnp.zeros_like(self.state["theta"])
         view = self.state["theta"]
         if self.owner._gap_ex is not None:
             i0 = jnp.int32(0)
@@ -284,6 +445,13 @@ class _ShardServer:
         views = tuple(m.view for m in work) if telemetry else None
         t0 = self._step
         st, out_views, d2, g2 = fn(self.state, ids, nows, grads, views)
+        if self.owner.rebalancer is not None:
+            # rebalancing steers by busy_s, but JAX dispatch is async —
+            # without a sync the heavy shard's compute finishes outside
+            # its timed window and busy_s measures only dispatch.  Sync
+            # here (inside run_serve_loop's busy_s interval) so the
+            # gauge is proportional to this shard's actual row load.
+            jax.block_until_ready(st["theta"])
         self.state = st
         self._step = t0 + k
         if telemetry:               # one host transfer per batch per shard
@@ -310,11 +478,30 @@ class _ShardServer:
         for t_ev, step_ev in evals:
             self.owner._eval_contribute(self.sid, step_ev,
                                         self.state["theta"], t_ev)
+        # row moves happen AFTER the eval contribution, so an eval and a
+        # move at the same watermark both see the pre-move ranges
+        if self.owner.rebalancer is not None:
+            self.owner.rebalancer.at_watermark(self)
 
-    def _pull_reply(self, m: GradMsg):
+    def _pull_reply(self, m: GradMsg) -> int:
+        if m.rows is not None and not self.owner._sent_family:
+            # hot-row pull over this shard's local-row intersection
+            # (possibly empty); sent-snapshot members need the full-range
+            # send below (it refreshes the worker's snapshot rows)
+            r0, r1 = int(m.rows[0]), int(m.rows[1])
+            fn = self._view_rows_jit.get((r0, r1))
+            if fn is None:
+                fa = self.fa
+                fn = jax.jit(lambda fl, i, a=r0, b=r1:
+                             fa.view_rows(fl, i, a, b))
+                self._view_rows_jit[(r0, r1)] = fn
+            view = fn(self.state, jnp.int32(m.worker_id))
+            m.respond(Reply(view=view, step=self._step, rows=(r0, r1)))
+            return r1 - r0
         view, self.state = self._send_jit(self.state,
                                           jnp.int32(m.worker_id))
         m.respond(Reply(view=view, step=self._step))
+        return int(view.shape[-2])
 
     # -- shard serve loop -------------------------------------------------
     def serve(self):
@@ -345,7 +532,10 @@ class ShardedMaster:
                  injectors: list[FaultInjector] | None = None,
                  time_fn: Callable[[GradMsg], float] | None = None,
                  mailbox_capacity: int = 0,
-                 use_pallas: bool | None = None):
+                 use_pallas: bool | None = None,
+                 ranges: tuple | None = None,
+                 rebalance: bool = False,
+                 rebalance_threshold: float = 1.1):
         if shards < 1:
             raise ValueError(f"need shards >= 1, got {shards}")
         if not kernel_eligible(algo):
@@ -357,8 +547,36 @@ class ShardedMaster:
         self._flat_algo = FlatAlgorithm(algo, use_pallas)
         flat = self._flat_algo.adopt(state)
         self.spec = self._flat_algo.spec
-        self.ranges = self.spec.row_ranges(shards)
+        if ranges is not None:
+            # caller-chosen initial ranges (a skewed placement is the
+            # rebalancer's natural starting point); same invariants as
+            # row_ranges: contiguous, ordered, non-empty, covering
+            ranges = tuple((int(a), int(b)) for a, b in ranges)
+            if (len(ranges) != shards or ranges[0][0] != 0
+                    or ranges[-1][1] != self.spec.rows
+                    or any(a >= b for a, b in ranges)
+                    or any(ranges[s][1] != ranges[s + 1][0]
+                           for s in range(shards - 1))):
+                raise ValueError(f"ranges must be {shards} contiguous "
+                                 f"non-empty ranges covering "
+                                 f"[0, {self.spec.rows}), got {ranges}")
+            self.ranges = ranges
+        else:
+            self.ranges = self.spec.row_ranges(shards)
         self.subs = [self.spec.subspec(r0, r1) for r0, r1 in self.ranges]
+        self.rebalancer = None
+        if rebalance:
+            if self._flat_algo.fam.gap_aware:
+                raise ValueError("row rebalancing is not supported for "
+                                 "gap-aware members (the cross-shard norm"
+                                 " exchange assumes fixed ranges)")
+            if record_telemetry:
+                raise ValueError("row rebalancing requires "
+                                 "record_telemetry=False (telemetry "
+                                 "views are sliced to static ranges)")
+            self.rebalancer = RowRebalancer(
+                self, every=max(1, eval_every),
+                threshold=rebalance_threshold)
         self.num_shards = shards
         self.history = history
         self.stop = stop
@@ -405,7 +623,8 @@ class ShardedMaster:
         ]
         self.frontdoor = FanoutMailbox(
             self.mailboxes,
-            tele_cb=self._record_telemetry if record_telemetry else None)
+            tele_cb=self._record_telemetry if record_telemetry else None,
+            ranges=self.ranges, full_fanout=self.rebalancer is not None)
 
     # -- worker-visible state -------------------------------------------
     @property
@@ -525,3 +744,14 @@ class ShardedMaster:
     @property
     def shard_applied(self) -> list[int]:
         return [srv.applied for srv in self.shards_]
+
+    @property
+    def current_ranges(self) -> tuple:
+        """Live row ranges (sid order == row order, moves included)."""
+        return tuple((srv.r0, srv.r1) for srv in self.shards_)
+
+    @property
+    def rebalance_moves(self) -> list:
+        """(watermark, donor, receiver, rows) log of executed moves."""
+        return ([] if self.rebalancer is None
+                else list(self.rebalancer.moves))

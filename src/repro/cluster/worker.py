@@ -44,7 +44,9 @@ class Worker(threading.Thread):
                  now_fn: Callable[[], float] | None = None,
                  time_scale: float = 1e-3,
                  injector: FaultInjector | None = None,
-                 telemetry: bool = True, rpc_timeout: float = 120.0):
+                 telemetry: bool = True, rpc_timeout: float = 120.0,
+                 hot_rows: tuple[int, int] | None = None,
+                 merge_view: Callable | None = None):
         super().__init__(name=f"ps-worker-{wid}", daemon=True)
         self.wid = wid
         self.master = master
@@ -60,6 +62,13 @@ class Worker(threading.Thread):
         self.injector = injector
         self.telemetry = telemetry
         self.rpc_timeout = rpc_timeout
+        # hot-row pulls: the (r0, r1) flat-row range this worker declares
+        # hot — pull-only requests ask the master for just those rows and
+        # ``merge_view`` patches the partial reply into the cached view
+        # (both set together by the runtime; a master that cannot honor
+        # the range replies with a full view and rows=None)
+        self.hot_rows = (hot_rows if merge_view is not None else None)
+        self.merge_view = merge_view
         self._view, self._view_step = init_view
         self.error: BaseException | None = None
         self.grads_sent = 0
@@ -82,7 +91,8 @@ class Worker(threading.Thread):
         msg = GradMsg(self.wid, grad,
                       self._view if (self.telemetry and grad is not None)
                       else None,
-                      self._view_step, t_send)
+                      self._view_step, t_send,
+                      rows=self.hot_rows if grad is None else None)
         t0 = time.perf_counter() if trace.enabled else 0.0
         if not self.mailbox.put(msg, self.stop):
             return False
@@ -94,7 +104,13 @@ class Worker(threading.Thread):
                            pull_only=grad is None)
         if reply is None:
             return False
-        self._view, self._view_step = reply.view, reply.step
+        if reply.rows is not None:
+            # partial (hot-row) view: patch the declared rows into the
+            # cached copy instead of replacing it
+            self._view = self.merge_view(self._view, reply.view)
+            self._view_step = reply.step
+        else:
+            self._view, self._view_step = reply.view, reply.step
         if grad is not None:
             self.grads_sent += 1
         return True

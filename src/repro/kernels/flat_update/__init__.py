@@ -1,13 +1,13 @@
 from .ops import (FLAT_ELIGIBLE, SEND_KERNEL, SENT_STEP, FamilySpec,
                   FlatAlgorithm, SendSpec, eligibility_matrix,
                   family_spec_for, flat_master_update_batch,
-                  kernel_eligible, merge_flat, pack_state, send_spec_for,
-                  shard_bitexact, slice_flat, unpack_state)
+                  kernel_eligible, merge_flat, pack_state, prefetch_pays,
+                  send_spec_for, shard_bitexact, slice_flat, unpack_state)
 from .send import flat_send_view, flat_send_view_ref
 
 __all__ = ["FLAT_ELIGIBLE", "SEND_KERNEL", "SENT_STEP", "FamilySpec",
            "FlatAlgorithm", "SendSpec", "eligibility_matrix",
            "family_spec_for", "flat_master_update_batch",
            "flat_send_view", "flat_send_view_ref", "kernel_eligible",
-           "merge_flat", "pack_state", "send_spec_for", "shard_bitexact",
-           "slice_flat", "unpack_state"]
+           "merge_flat", "pack_state", "prefetch_pays", "send_spec_for",
+           "shard_bitexact", "slice_flat", "unpack_state"]

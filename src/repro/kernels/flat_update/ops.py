@@ -62,8 +62,10 @@ import jax.numpy as jnp
 from ...core.flat import (FlatSpec, RATE_INTERVAL, RATE_LANE, RATE_LAST_T,
                           ScalarLane)
 from ...core.schedules import Schedule
-from .kernel import (flat_master_update_batch_2d,
-                     flat_master_update_batch_gap, gap_pallas_supported)
+from .kernel import (_pick_block_rows, flat_master_update_batch_2d,
+                     flat_master_update_batch_gap,
+                     flat_master_update_batch_prefetch,
+                     gap_pallas_supported)
 from .ref import flat_master_update_batch_ref
 from .send import flat_send_view
 
@@ -370,31 +372,79 @@ def unpack_state(algo, flat: dict, spec: FlatSpec) -> dict:
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
+def prefetch_pays(rows: int, n: int, k: int, *, n_slabs: int = 1,
+                  weighted: bool = False, gap: bool = False) -> bool:
+    """Memory-tier routing rule: the scalar-prefetch kernel pays exactly
+    when the dense full-slab grid's resident window (every worker row,
+    per slab) forces SMALLER row tiles than the k-shaped prefetch window
+    — or cannot tile at all.  While the dense slab still fits the same
+    tile, its 2N streams are one sequential burst and the per-message
+    window bookkeeping (scratch loads/flushes) would only add overhead;
+    once N shrinks the dense tiles, the 2u-stream prefetch grid keeps
+    the large tiles AND drops the untouched workers' traffic."""
+    window_p = 3 if gap else k + 2 + (k if weighted else 0)
+    try:
+        pf_block = _pick_block_rows(rows, window_p, n_slabs)
+    except ValueError:
+        return False                      # nothing tiles; ref path serves
+    try:
+        dense_block = _pick_block_rows(rows, n, n_slabs)
+    except ValueError:
+        return True                       # only the prefetch grid tiles
+    return dense_block < pf_block
+
+
 def flat_master_update_batch(theta, v, v0, u2, sent, avg_step, g, ids,
                              lrs, lrs_next, gammas, cgs, vscales, *,
                              nesterov, b2=0.999, eps=1e-8, dc_lambda=None,
                              sent_view=False, gap_aware=False,
                              gap_ema=0.99, n_elems=0, hat_mode=None,
                              hcs=None, weights=None, telemetry=False,
-                             use_pallas=None):
+                             use_pallas=None, prefetch=True):
     """Pallas on TPU, jnp reference elsewhere (bit-identical off-TPU).
 
-    Gap-aware lowers to the two-phase (2, row_tiles) grid chained per
-    message when the state is big enough to tile (see
-    ``kernel.gap_pallas_supported``); the jitted jnp reference is the
-    cross-backend oracle and serves tiny states."""
+    The Pallas elementwise path is a two-tier memory hierarchy:
+    ``prefetch=True`` (the default) routes each batch with
+    ``prefetch_pays`` — the scalar-prefetch kernel (slab traffic 2u
+    streams for u unique senders, VMEM budget independent of N) exactly
+    when the dense grid's N-row window shrinks its tiles or cannot tile
+    at all, the dense full-slab kernel while the whole slab still rides
+    one tile (its 2N streams are one sequential burst there).
+    ``prefetch=False`` forces the PR-2 full-slab kernel (kept as the
+    bench baseline).  Gap-aware lowers to the two-phase (2, row_tiles)
+    grid chained per message when the state is big enough to tile (see
+    ``kernel.gap_pallas_supported``), ordering the variants by the same
+    routing rule; the jitted jnp reference is the cross-backend oracle
+    and serves tiny states."""
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas and gap_aware \
-            and gap_pallas_supported(theta.shape[-2], v.shape[0]):
-        theta, v, sent, avg_step, hats, pres = \
-            flat_master_update_batch_gap(
-                theta, v, sent, avg_step, g, ids, lrs, gammas, cgs,
-                vscales, gap_ema=gap_ema, n_elems=n_elems,
-                telemetry=telemetry, interpret=not _on_tpu())
-        return theta, v, None, None, sent, avg_step, hats, pres
+    if use_pallas and gap_aware:
+        order = (False,)
+        if prefetch:
+            order = ((True, False)
+                     if prefetch_pays(theta.shape[-2], v.shape[0],
+                                      g.shape[0], n_slabs=2, gap=True)
+                     else (False, True))
+        for pf in order:
+            if not gap_pallas_supported(theta.shape[-2], v.shape[0],
+                                        prefetch=pf):
+                continue
+            theta, v, sent, avg_step, hats, pres = \
+                flat_master_update_batch_gap(
+                    theta, v, sent, avg_step, g, ids, lrs, gammas, cgs,
+                    vscales, gap_ema=gap_ema, n_elems=n_elems,
+                    telemetry=telemetry, interpret=not _on_tpu(),
+                    prefetch=pf)
+            return theta, v, None, None, sent, avg_step, hats, pres
     if use_pallas and not gap_aware:
-        theta, v, v0, u2, sent, hats, pres = flat_master_update_batch_2d(
+        if prefetch:
+            prefetch = prefetch_pays(
+                theta.shape[-2], v.shape[0], g.shape[0],
+                n_slabs=2 if sent is not None else 1,
+                weighted=hat_mode == "weighted")
+        fn = (flat_master_update_batch_prefetch if prefetch
+              else flat_master_update_batch_2d)
+        theta, v, v0, u2, sent, hats, pres = fn(
             theta, v, v0, u2, sent, g, ids, lrs, lrs_next, gammas, cgs,
             vscales, nesterov=nesterov, b2=b2, eps=eps,
             dc_lambda=dc_lambda, sent_view=sent_view, hat_mode=hat_mode,
@@ -524,6 +574,36 @@ class FlatAlgorithm:
         return flat_send_view(flat["theta"], slab, w,
                               self._send_scale(flat),
                               u2=flat.get("u2") if sp.adaptive else None,
+                              eps=self.fam.eps, use_pallas=self.use_pallas)
+
+    def view_rows(self, flat: dict, i, r0: int, r1: int):
+        """Hot-row pull: the send view over ONLY rows [r0, r1).
+
+        Every look-ahead reduction is elementwise per row, so slicing the
+        operands commutes with the reduction bit-for-bit — this equals
+        ``_view_flat(flat, i)[r0:r1]`` (the same row-locality the sharded
+        master's per-range sends rely on).  Pure (no state update), so it
+        is only a valid SEND for the snapshot-free members
+        (``fam.sent_key is None``); sent-snapshot callers must fall back
+        to the full-range ``send_flat``.  ``r0``/``r1`` are static:
+        callers jit one closure per distinct hot range."""
+        if r1 <= r0:
+            # empty intersection (sharded hot pull outside this shard's
+            # range): a zero-row view, no kernel launch
+            return jnp.zeros((0, flat["theta"].shape[-1]), jnp.float32)
+        sp = self.send_spec
+        th = flat["theta"][r0:r1]
+        if sp.source is None:
+            return jnp.copy(th)
+        slab = flat["v0"][None] if sp.source == "v0" else flat["v"]
+        if sp.weights == "rate":
+            w = self._rate_weights(flat, jnp.asarray(i, jnp.int32))
+        else:
+            w = jnp.ones((slab.shape[0],), jnp.float32)
+        u2 = flat.get("u2") if sp.adaptive else None
+        return flat_send_view(th, slab[:, r0:r1], w,
+                              self._send_scale(flat),
+                              u2=None if u2 is None else u2[r0:r1],
                               eps=self.fam.eps, use_pallas=self.use_pallas)
 
     def send_flat(self, flat: dict, i=0):

@@ -257,16 +257,28 @@ def history_observer(reg: MetricsRegistry):
 
 def serve_instruments(reg: MetricsRegistry):
     """The serve-loop-side instruments (drained-batch size, pulls,
-    overflow) as one attribute bundle; every shard server shares it
-    (instruments are per-thread-cell lock-free)."""
+    overflow, memory-tier traffic) as one attribute bundle; every shard
+    server shares it (instruments are per-thread-cell lock-free).
+
+    The memory-tier pair makes the prefetch kernel's 2N->2u claim
+    observable: per fused apply, ``slab_rows_streamed`` counts the slab
+    rows the scalar-prefetch lowering actually moves (2 streams — read +
+    write — per unique sender per slab) while ``slab_rows_total`` counts
+    what the full-slab kernel would have moved (2 streams per WORKER per
+    slab).  ``pull_rows`` counts view rows served on the pull path, so
+    hot-row (partial-range) pulls show up as fewer rows per pull."""
 
     class _ServeMetrics:
-        __slots__ = ("drain_k", "pulls", "overflow")
+        __slots__ = ("drain_k", "pulls", "overflow",
+                     "slab_rows_streamed", "slab_rows_total", "pull_rows")
 
     m = _ServeMetrics()
     m.drain_k = reg.histogram("drain_k", DRAIN_K_EDGES)
     m.pulls = reg.counter("pulls")
     m.overflow = reg.counter("overflow_rejected")
+    m.slab_rows_streamed = reg.counter("slab_rows_streamed")
+    m.slab_rows_total = reg.counter("slab_rows_total")
+    m.pull_rows = reg.counter("pull_rows")
     return m
 
 

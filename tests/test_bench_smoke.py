@@ -47,6 +47,19 @@ def test_quick_cluster_covers_sent_family():
     assert set(algos) & {"dc-asgd", "dana-dc", "ga-asgd"}
 
 
+def test_quick_cluster_covers_memtier_sweep():
+    """The cluster smoke must sweep the memory-tier section across BOTH
+    routing regimes: N = 8 (dense full-slab tiles survive — the routed
+    path must not regress) and one N past the tiling knee (the
+    scalar-prefetch kernel's 2u-stream win), so the PR-7 claims —
+    prefetch_over_full_slab_x, prefetch_not_slower_at_n8,
+    slab_traffic_scales_with_u, skewed_pull_saving_x — stay in the CI
+    trajectory."""
+    ns = [int(s) for s in _argv_values(bench_run.QUICK["cluster"],
+                                       "--memtier-n")]
+    assert 8 in ns and max(ns) >= 48
+
+
 def test_quick_cluster_covers_dana_hetero():
     """The cluster smoke must sweep dana-hetero: its rate-weighted send
     is the PR-5 weighted-slab reduction path (receive batch + send
@@ -80,6 +93,15 @@ def test_run_quick_kernels_and_cluster_appends_trajectory(tmp_path,
     # the sharded capacity sweep rides in the cluster suite's claims
     sweep = out["cluster"]["claims"]["shard_sweep_updates_per_s"]
     assert set(sweep) == {"1", "2"} and all(v > 0 for v in sweep.values())
+    # the PR-7 memory-tier claims: present and non-degenerate (the
+    # routed dispatch must not lose to the full-slab kernel at N = 8;
+    # the prefetch kernel must win where the dense tiles shrink; slab
+    # traffic must scale with unique senders; hot-row pulls must save)
+    cl = out["cluster"]["claims"]
+    assert cl["prefetch_not_slower_at_n8"]
+    assert cl["prefetch_over_full_slab_x"] > 1.0
+    assert cl["slab_traffic_scales_with_u"]
+    assert cl["skewed_pull_saving_x"] > 1.0
     trail = json.loads(traj.read_text())
     assert isinstance(trail, list) and len(trail) == 1
     entry = trail[0]
