@@ -32,6 +32,12 @@ Three measurements:
   shrinks ~1/S while the shards run in parallel.  On a GIL-bound CPU
   container the parallel win is bounded by dispatch overhead — the
   sweep records where sharding starts paying on this hardware.
+* **procs capacity** — the same S-way sweep with the shard servers as
+  OS *processes* (the ``backend="process"`` hot path): barrier-synced
+  spawned children each timing the fused pass over their row range.
+  Side-by-side with the threaded sweep this records the GIL-escape
+  margin the process backend buys on this hardware (bounded above by
+  the container's core count).
 * **memory tier** — the scalar-prefetch slab kernel (PR 7) vs the PR-2
   full-slab kernel over an N-sweep with Zipf-skewed sender ids: wall
   time per k-message batch for the forced kernels AND the production
@@ -57,6 +63,9 @@ uploads it as an artifact; open it in ``ui.perfetto.dev``.
 from __future__ import annotations
 
 import argparse
+import multiprocessing as mp
+import os
+import tempfile
 import threading
 import time
 
@@ -239,6 +248,105 @@ def sharded_capacity_row(algo_name: str, num_workers: int, k: int,
         "section": "sharded", "algo": algo_name, "workers": num_workers,
         "k": k, "shards": shards, "width": width,
         "rows": master.spec.rows,
+        "us_per_msg": dt / k * 1e6,
+        "master_updates_per_s": k / dt,
+    }
+
+
+def _procs_shard_main(conn, barrier, algo_name, num_workers, k, reps,
+                      width, sid, shards, trials):
+    """One shard-server process of the procs capacity sweep (spawn
+    target; module-level for picklability).  Rebuilds the same setup the
+    threaded sweep uses, takes its own shard's fused pass, and times
+    ``reps`` applications per barrier-synced trial."""
+    try:
+        from repro.cluster.procs import _enable_jax_cache
+        _enable_jax_cache(os.environ.get(
+            "REPRO_JAX_CACHE_DIR",
+            os.path.join(tempfile.gettempdir(), "repro-jax-cache")))
+        params0, grad_fn, next_batch = _setup(width=width)
+        algo = make_algorithm(algo_name, HP)
+        master = ShardedMaster(algo, algo.init(params0, num_workers),
+                               shards=shards, history=History(),
+                               stop=threading.Event(), total_grads=1,
+                               coalesce=k, record_telemetry=False)
+        srv = master.shards_[sid]
+        gbuf = master.spec.pack(jax.jit(grad_fn)(params0,
+                                                 next_batch(0, 0)))
+        ids = jnp.asarray([j % num_workers for j in range(k)], jnp.int32)
+        nows = jnp.zeros((k,), jnp.float32)
+        fn = srv._get_fused(k, telemetry=False)
+        grads = tuple(gbuf[srv.r0:srv.r1] for _ in range(k))
+        out = fn(srv.state, ids, nows, grads, None)          # compile
+        jax.block_until_ready(out[0]["theta"])
+        s = out[0]                      # donated: thread across trials
+        dts = []
+        for _ in range(trials):
+            barrier.wait(timeout=600)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                s, *_ = fn(s, ids, nows, grads, None)
+            jax.block_until_ready(s["theta"])
+            dts.append(time.perf_counter() - t0)
+        conn.send(("ok", dts))
+        conn.close()
+    except BaseException as e:  # noqa: BLE001 - shipped to the parent
+        try:
+            conn.send(("error", repr(e)))
+            conn.close()
+        except Exception:  # noqa: BLE001
+            pass
+        raise SystemExit(1)
+
+
+def procs_capacity_row(algo_name: str, num_workers: int, k: int,
+                       shards: int, reps: int = 10, width: int = 4096,
+                       trials: int = 3):
+    """Messages/sec of S shard-server *processes* applying the same
+    coalesced batches to their row ranges — the ``backend="process"``
+    hot path without mailbox/worker noise, directly comparable to
+    ``sharded_capacity_row``'s threaded numbers.  Trials are
+    barrier-synced across processes; the per-trial time is the slowest
+    shard's (the shard servers advance in lockstep in the real runtime),
+    and the row records the best trial."""
+    ctx = mp.get_context("spawn")
+    barrier = ctx.Barrier(shards + 1)
+    conns, procs = [], []
+    try:
+        for sid in range(shards):
+            pr, pw = ctx.Pipe(duplex=False)
+            p = ctx.Process(target=_procs_shard_main,
+                            args=(pw, barrier, algo_name, num_workers, k,
+                                  reps, width, sid, shards, trials),
+                            name=f"bench-procs-shard-{sid}", daemon=True)
+            p.start()
+            pw.close()
+            conns.append(pr)
+            procs.append(p)
+        for _ in range(trials):
+            barrier.wait(timeout=600)
+        outs = []
+        for c, p in zip(conns, procs):
+            if not c.poll(600):
+                raise RuntimeError(f"procs sweep: {p.name} never "
+                                   f"reported")
+            kind, data = c.recv()
+            if kind != "ok":
+                raise RuntimeError(f"procs sweep: {p.name} failed: "
+                                   f"{data}")
+            outs.append(data)
+        for p in procs:
+            p.join(timeout=30)
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+    # slowest shard bounds each trial; best trial is the capacity number
+    dt = min(max(d[t] for d in outs)
+             for t in range(trials)) / reps
+    return {
+        "section": "procs", "algo": algo_name, "workers": num_workers,
+        "k": k, "shards": shards, "width": width,
         "us_per_msg": dt / k * 1e6,
         "master_updates_per_s": k / dt,
     }
@@ -463,6 +571,9 @@ def main(argv=None):
                     help="timed reps per memory-tier point (best of 3)")
     ap.add_argument("--grads", type=int, default=3000)
     ap.add_argument("--reps", type=int, default=200)
+    ap.add_argument("--skip-procs", action="store_true",
+                    help="skip the process-backend capacity sweep "
+                         "(an empty --shards list also skips it)")
     ap.add_argument("--skip-live", action="store_true")
     ap.add_argument("--skip-obs", action="store_true",
                     help="skip the staleness-profile section")
@@ -519,6 +630,15 @@ def main(argv=None):
                 shard_rows.append(sharded_capacity_row(
                     algo0, n0, k_hi, s, reps=shard_reps,
                     width=args.shard_width))
+    procs_rows = []
+    if "flat" in paths and args.shards and not args.skip_procs:
+        n0, k_hi = max(args.workers), max(args.coalesce)
+        shard_reps = max(3, args.reps // 20)
+        with trace.span("procs", "bench"):
+            for s in args.shards:
+                procs_rows.append(procs_capacity_row(
+                    algo0, n0, k_hi, s, reps=shard_reps,
+                    width=args.shard_width))
     memtier_rows = []
     pull_row = None
     if args.memtier_n:
@@ -553,6 +673,10 @@ def main(argv=None):
     if shard_rows:
         print_csv(shard_rows, ["section", "algo", "workers", "k", "shards",
                                "width", "rows", "us_per_msg",
+                               "master_updates_per_s"])
+    if procs_rows:
+        print_csv(procs_rows, ["section", "algo", "workers", "k",
+                               "shards", "width", "us_per_msg",
                                "master_updates_per_s"])
     if memtier_rows:
         print_csv(memtier_rows, ["section", "n", "k", "u", "path",
@@ -641,6 +765,27 @@ def main(argv=None):
             best_s = max(sweep, key=sweep.get)
             claims["sharded_best_shards"] = int(best_s)
             claims["sharded_best_over_S1_x"] = sweep[best_s] / sweep["1"]
+    if procs_rows:
+        # the process-backend acceptance sweep: S shard-server PROCESSES
+        # vs the threaded shard sweep at matching S — the GIL-escape
+        # margin, bounded above by the container's core count
+        sweep_p = {str(r["shards"]): r["master_updates_per_s"]
+                   for r in procs_rows}
+        claims["procs_sweep_updates_per_s"] = sweep_p
+        ss = sorted(int(s) for s in sweep_p)
+        claims["procs_monotone"] = all(
+            sweep_p[str(a)] <= sweep_p[str(b)]
+            for a, b in zip(ss, ss[1:]))
+        if shard_rows:
+            sweep_t = {str(r["shards"]): r["master_updates_per_s"]
+                       for r in shard_rows}
+            claims["procs_over_threaded_x_by_s"] = {
+                s: sweep_p[s] / sweep_t[s]
+                for s in sweep_p if s in sweep_t}
+            s_hi = str(max(ss))
+            if s_hi in sweep_t:
+                claims["procs_over_threaded_at_max_s_x"] = (
+                    sweep_p[s_hi] / sweep_t[s_hi])
     if memtier_rows:
         def _mt(n, path):
             return next(r["ms_per_batch"] for r in memtier_rows
@@ -697,9 +842,9 @@ def main(argv=None):
     print("claims:", claims)
     memtier_all = memtier_rows + ([pull_row] if pull_row else [])
     save_json(args.out, {"capacity": cap_rows, "send": send_rows,
-                         "sharded": shard_rows, "memtier": memtier_all,
-                         "live": live_rows, "obs": obs_rows,
-                         "claims": claims})
+                         "sharded": shard_rows, "procs": procs_rows,
+                         "memtier": memtier_all, "live": live_rows,
+                         "obs": obs_rows, "claims": claims})
     if args.metrics_out:
         save_json(args.metrics_out,
                   {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -713,8 +858,8 @@ def main(argv=None):
                                f"{errs[:5]}")
         print(f"[trace] {args.trace}: {len(obj['traceEvents'])} events, "
               f"VALID")
-    return (cap_rows + send_rows + shard_rows + memtier_all + live_rows
-            + obs_rows, claims)
+    return (cap_rows + send_rows + shard_rows + procs_rows + memtier_all
+            + live_rows + obs_rows, claims)
 
 
 if __name__ == "__main__":

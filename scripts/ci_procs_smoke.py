@@ -1,0 +1,34 @@
+"""CI smoke for the process cluster backend.
+
+Runs the launcher end-to-end with ``--backend process`` at S = 1 and
+S = 2: spawned shard-server + worker children over shared-memory rings
+must apply every gradient, report zero telemetry drops, and come back
+through the same stats surface as the threaded backend.
+
+Must be a real file (not a ``python - <<EOF`` heredoc): the spawn start
+method re-imports the parent's __main__ in every child, and a <stdin>
+main cannot be re-run — worse, a child dying during that prepare step
+deadlocks the parent inside Process.start() (it blocks writing the prep
+payload to a pipe whose only other reader is the dead child).
+"""
+import sys
+
+from repro.launch.cluster import main
+
+
+def smoke():
+    for shards in (1, 2):
+        s = main(["--backend", "process", "--mode", "free",
+                  "--workers", "2", "--grads", "60",
+                  "--coalesce", "2", "--shards", str(shards),
+                  "--eval-every", "30"])
+        assert s["backend"] == "process", s
+        assert s["applied"] == 60, s
+        assert s["shard_applied"] == [60] * shards, s
+        assert s["telemetry_dropped"] == 0, s
+        print(f"process backend ok (shards={shards}): "
+              f"{s['steady_updates_per_s']:.0f} steady up/s")
+
+
+if __name__ == "__main__":
+    sys.exit(smoke())

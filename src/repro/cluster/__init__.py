@@ -19,16 +19,24 @@ reordering).  ``ClusterConfig(shards=S)`` replaces the single master with
 S row-range shard servers over the same flat layout
 (``repro.cluster.sharded``) — workers push each gradient once and every
 shard consumes only its row slice.
+
+``ClusterConfig(backend="process")`` swaps the threads for OS processes:
+shard servers and workers become spawned children over preallocated
+shared-memory rings (``repro.cluster.procs``), escaping the GIL for the
+live-mode throughput path while the threaded backend stays the
+deterministic / test substrate.
 """
 from .faults import FaultInjector, FaultPlan
 from .mailbox import FanoutMailbox, GradMsg, Mailbox, Reply
 from .master import Master
+from .procs import RemoteChildError, ShmFanout, ShmMailbox
 from .runtime import ClusterConfig, run_cluster
 from .sharded import ShardedMaster
-from .worker import Worker
+from .worker import TurnGate, Worker
 
 __all__ = [
     "ClusterConfig", "run_cluster", "Master", "ShardedMaster", "Worker",
     "Mailbox", "FanoutMailbox", "GradMsg", "Reply", "FaultPlan",
-    "FaultInjector",
+    "FaultInjector", "ShmMailbox", "ShmFanout", "RemoteChildError",
+    "TurnGate",
 ]

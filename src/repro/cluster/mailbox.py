@@ -90,10 +90,11 @@ class _ReplyGroup:
     """
 
     __slots__ = ("parent", "shards", "_lock", "_views", "_left", "_failed",
-                 "_step0", "_rows_ok", "_tele_cb", "_tele_left", "_d2",
-                 "_g2", "_meta")
+                 "_step0", "_rows_ok", "_tele_cb", "_drop_cb", "_tele_left",
+                 "_tele_closed", "_d2", "_g2", "_meta")
 
-    def __init__(self, parent: GradMsg, shards: int, tele_cb=None):
+    def __init__(self, parent: GradMsg, shards: int, tele_cb=None,
+                 drop_cb=None):
         self.parent = parent
         self.shards = shards
         self._lock = threading.Lock()
@@ -103,7 +104,9 @@ class _ReplyGroup:
         self._step0 = 0
         self._rows_ok = True         # every shard honored its hot-row slice
         self._tele_cb = tele_cb
+        self._drop_cb = drop_cb
         self._tele_left = shards
+        self._tele_closed = False
         self._d2 = 0.0
         self._g2 = 0.0
         self._meta = None            # (worker, step, lag, t) from shard 0
@@ -131,6 +134,10 @@ class _ReplyGroup:
             self.parent.respond(None if failed else
                                 Reply(view=tuple(self._views),
                                       step=self._step0, rows=rows))
+            # the group is finished: shards that applied the message have
+            # already contributed their telemetry (apply precedes reply),
+            # shards that rejected it never will — settle the partials now
+            self._close_telemetry()
 
     def add_telemetry(self, sid: int, *, worker: int, step: int, lag: int,
                       t: float, d2: float, g2: float):
@@ -140,11 +147,30 @@ class _ReplyGroup:
             if sid == 0:
                 self._meta = (worker, step, lag, t)
             self._tele_left -= 1
-            done = self._tele_left == 0 and self._meta is not None
-        if done and self._tele_cb is not None:
-            worker, step, lag, t = self._meta
-            self._tele_cb(worker=worker, step=step, lag=lag, t=t,
-                          d2=self._d2, g2=self._g2)
+            done = self._tele_left == 0
+        if done:
+            self._close_telemetry()
+
+    def _close_telemetry(self):
+        """Flush the accumulated partials (every shard contributed and
+        shard 0's meta landed) or count the drop (the group finished with
+        partials that can never complete — a shard rejected the message,
+        or shard 0 never applied it).  Fires exactly once; groups with no
+        partials at all (pulls, telemetry-off runs) are not drops."""
+        with self._lock:
+            if self._tele_closed:
+                return
+            self._tele_closed = True
+            complete = self._tele_left == 0 and self._meta is not None
+            started = self._tele_left < self.shards
+            meta, d2, g2 = self._meta, self._d2, self._g2
+        if complete:
+            if self._tele_cb is not None:
+                worker, step, lag, t = meta
+                self._tele_cb(worker=worker, step=step, lag=lag, t=t,
+                              d2=d2, g2=g2)
+        elif started and self._drop_cb is not None:
+            self._drop_cb()
 
 
 class ShardMsg(GradMsg):
@@ -193,9 +219,10 @@ class FanoutMailbox:
     longer static)."""
 
     def __init__(self, mailboxes: list["Mailbox"], tele_cb=None,
-                 ranges=None, full_fanout: bool = False):
+                 ranges=None, full_fanout: bool = False, drop_cb=None):
         self.mailboxes = list(mailboxes)
         self._tele_cb = tele_cb
+        self._drop_cb = drop_cb
         self._lock = threading.Lock()
         self.ranges = (None if full_fanout or ranges is None
                        else tuple(ranges))
@@ -212,7 +239,8 @@ class FanoutMailbox:
 
     def put(self, msg: GradMsg, stop) -> bool:
         shards = len(self.mailboxes)
-        group = _ReplyGroup(msg, shards, tele_cb=self._tele_cb)
+        group = _ReplyGroup(msg, shards, tele_cb=self._tele_cb,
+                            drop_cb=self._drop_cb)
         if self.full_fanout:
             # rebalance wire mode: one full packed gradient, shared by
             # every part (read-only on the shards; each slices in-jit)

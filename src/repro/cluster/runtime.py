@@ -31,7 +31,7 @@ from .faults import FaultInjector, FaultPlan
 from .mailbox import Mailbox
 from .master import Master
 from .sharded import ShardedMaster
-from .worker import Worker
+from .worker import TurnGate, Worker
 
 MODES = ("deterministic", "paced", "free")
 
@@ -61,6 +61,15 @@ class ClusterConfig:
     shard_ranges: tuple | None = None
     rebalance: bool = False
     rebalance_threshold: float = 1.1
+    # execution backend: "thread" (default — deterministic/test substrate)
+    # or "process" (shard servers + workers as OS processes over
+    # shared-memory mailboxes; live modes, flat kernel path only — see
+    # repro.cluster.procs for the support matrix)
+    backend: str = "thread"
+    # pin the message schedule to strict round-robin worker order (live
+    # modes): makes a run schedule-deterministic on BOTH backends, which
+    # is what the cross-backend bit-exactness tests compare under
+    pin_schedule: bool = False
 
 
 def run_cluster(
@@ -94,6 +103,22 @@ def run_cluster(
         raise ValueError("need at least one worker and one gradient")
     if cfg.shards < 1:
         raise ValueError(f"need shards >= 1, got {cfg.shards}")
+    if cfg.backend not in ("thread", "process"):
+        raise ValueError(f"backend must be 'thread' or 'process', "
+                         f"got {cfg.backend!r}")
+    if cfg.pin_schedule and cfg.mode == "deterministic":
+        raise ValueError("pin_schedule is a live-mode pin (deterministic "
+                         "mode already serializes the schedule through "
+                         "the virtual clock)")
+    if cfg.pin_schedule and cfg.faults is not None \
+            and cfg.faults.any_dropout:
+        raise ValueError("pin_schedule cannot combine with dropout (an "
+                         "offline worker would wedge the turn gate)")
+    if cfg.backend == "process":
+        from .procs import run_cluster_procs
+        return run_cluster_procs(algo, grad_fn, params0, next_batch, cfg,
+                                 eval_fn=eval_fn, stats_out=stats_out,
+                                 metrics=metrics)
     if isinstance(algo, SSGD):
         raise ValueError(
             "ssgd needs the engine's synchronous barrier (per-message "
@@ -288,8 +313,11 @@ def run_cluster(
                 continue
             r0, r1 = int(hr[0]), int(hr[1])
             if not 0 <= r0 < r1 <= rows_total:
-                raise ValueError(f"hot_rows[{wid}]={hr} outside "
-                                 f"[0, {rows_total})")
+                # the upper bound is INCLUSIVE (r1 == rows_total is the
+                # full-height range); the message must say so
+                raise ValueError(f"hot_rows[{wid}]={hr} invalid: need "
+                                 f"0 <= r0 < r1 <= {rows_total} "
+                                 f"(r1 bound inclusive)")
             if rebalancing:
                 continue
             if sharded:
@@ -312,13 +340,15 @@ def run_cluster(
                     old.at[a:b].set(piece))
             hot_rows[wid] = (r0, r1)
 
+    gate = TurnGate(n, stop) if cfg.pin_schedule else None
     workers = [
         Worker(wid, master=master, mailbox=mailbox, grad_jit=grad_jit,
                next_batch=next_batch, stop=stop, mode=cfg.mode,
                init_view=init_views[wid], clock=clock, draw=draw,
                now_fn=now_fn, time_scale=cfg.time_scale, injector=injector,
                telemetry=cfg.record_telemetry, rpc_timeout=cfg.rpc_timeout,
-               hot_rows=hot_rows[wid], merge_view=merge_views[wid])
+               hot_rows=hot_rows[wid], merge_view=merge_views[wid],
+               gate=gate)
         for wid in range(n)
     ]
 
@@ -337,7 +367,26 @@ def run_cluster(
         for w in workers:
             w.start()
 
-        master_thread.join()
+        # the master join is bounded like the workers' below: the join IS
+        # the run, so the deadline starts only once the serve loop has no
+        # legitimate reason to keep running (stop raised, or every worker
+        # gone) — a wedged loop then surfaces as a diagnosable error with
+        # its pending messages rejected, instead of hanging the caller
+        m_deadline = None
+        while master_thread.is_alive():
+            master_thread.join(timeout=0.05)
+            if not master_thread.is_alive():
+                break
+            if m_deadline is None:
+                if stop.is_set() or not any(w.is_alive() for w in workers):
+                    m_deadline = (time.monotonic()
+                                  + max(cfg.rpc_timeout, 2.0))
+            elif time.monotonic() > m_deadline:
+                stop.set()
+                master.reject_pending()
+                err = (f" (master error: {master.error!r})"
+                       if master.error else "")
+                raise RuntimeError(f"master failed to shut down{err}")
         stop.set()
         if clock is not None:
             clock.stop()
@@ -391,6 +440,7 @@ def run_cluster(
         )
         if sharded:
             stats_out["shard_applied"] = master.shard_applied
+            stats_out["telemetry_dropped"] = master.tele_dropped
             if master.rebalancer is not None:
                 stats_out["rebalance_moves"] = master.rebalance_moves
                 stats_out["shard_ranges"] = master.current_ranges

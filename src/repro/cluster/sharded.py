@@ -621,10 +621,12 @@ class ShardedMaster:
                          injectors[s] if injectors is not None else None)
             for s, (r0, r1) in enumerate(self.ranges)
         ]
+        self.tele_dropped = 0
         self.frontdoor = FanoutMailbox(
             self.mailboxes,
             tele_cb=self._record_telemetry if record_telemetry else None,
-            ranges=self.ranges, full_fanout=self.rebalancer is not None)
+            ranges=self.ranges, full_fanout=self.rebalancer is not None,
+            drop_cb=self._drop_telemetry if record_telemetry else None)
 
     # -- worker-visible state -------------------------------------------
     @property
@@ -675,6 +677,16 @@ class ShardedMaster:
                 grad_norm=math.sqrt(g2),
                 staleness=float(lag) if self._sent_family
                 else float("nan"))
+
+    def _drop_telemetry(self):
+        """A fan-out group finished with partials that can never flush
+        (a shard rejected the message, or shard 0 never applied it) —
+        account for the dropped row instead of losing it silently."""
+        with self._hist_lock:
+            self.tele_dropped += 1
+        mx = self.shards_[0].metrics
+        if mx is not None:
+            mx.tele_dropped.add(1)
 
     def _eval_contribute(self, sid: int, step_ev: int, theta_rows, t_ev):
         if self._eval_jit is None:

@@ -34,6 +34,36 @@ from .mailbox import GradMsg, Mailbox
 from .master import Master
 
 
+class TurnGate:
+    """Round-robin message-schedule pin (``ClusterConfig.pin_schedule``).
+
+    Worker ``wid`` may push only when ``turn % n == wid`` and advances the
+    turn after its push completes, so the mailbox sees the exact sequence
+    0, 1, ..., n-1, 0, 1, ... regardless of thread scheduling.  This makes
+    live-mode runs schedule-deterministic — the process backend pins the
+    same order through a shared-memory turn counter, which is what the
+    cross-backend bit-exactness tests compare under."""
+
+    def __init__(self, n: int, stop: threading.Event):
+        self.n = n
+        self.stop = stop
+        self._turn = 0
+        self._cond = threading.Condition()
+
+    def acquire(self, wid: int) -> bool:
+        with self._cond:
+            while self._turn % self.n != wid:
+                if self.stop.is_set():
+                    return False
+                self._cond.wait(timeout=0.05)
+        return True
+
+    def advance(self):
+        with self._cond:
+            self._turn += 1
+            self._cond.notify_all()
+
+
 class Worker(threading.Thread):
     def __init__(self, wid: int, *, master: Master, mailbox: Mailbox,
                  grad_jit: Callable, next_batch: Callable,
@@ -46,7 +76,8 @@ class Worker(threading.Thread):
                  injector: FaultInjector | None = None,
                  telemetry: bool = True, rpc_timeout: float = 120.0,
                  hot_rows: tuple[int, int] | None = None,
-                 merge_view: Callable | None = None):
+                 merge_view: Callable | None = None,
+                 gate: TurnGate | None = None):
         super().__init__(name=f"ps-worker-{wid}", daemon=True)
         self.wid = wid
         self.master = master
@@ -69,6 +100,7 @@ class Worker(threading.Thread):
         # the range replies with a full view and rows=None)
         self.hot_rows = (hot_rows if merge_view is not None else None)
         self.merge_view = merge_view
+        self.gate = gate
         self._view, self._view_step = init_view
         self.error: BaseException | None = None
         self.grads_sent = 0
@@ -170,14 +202,21 @@ class Worker(threading.Thread):
                           else 0.0)
             if dt > 0.0 and self.stop.wait(dt * self.time_scale):
                 return
-            batch = self.next_batch(self.wid, counter)
-            counter += 1
-            tg = time.perf_counter() if trace.enabled else 0.0
-            grad = self.grad_jit(self._view, batch)
-            if trace.enabled:
-                trace.complete("grad", "worker", tg,
-                               time.perf_counter() - tg)
-            if not self._push(grad, self.now_fn()):
+            if self.gate is not None and not self.gate.acquire(self.wid):
+                return
+            try:
+                batch = self.next_batch(self.wid, counter)
+                counter += 1
+                tg = time.perf_counter() if trace.enabled else 0.0
+                grad = self.grad_jit(self._view, batch)
+                if trace.enabled:
+                    trace.complete("grad", "worker", tg,
+                                   time.perf_counter() - tg)
+                ok = self._push(grad, self.now_fn())
+            finally:
+                if self.gate is not None:
+                    self.gate.advance()
+            if not ok:
                 return
 
     def _await_rejoin(self, back_step: int) -> bool:

@@ -39,7 +39,7 @@ from ..core.gamma import GammaModel
 from ..core.schedules import Schedule
 from ..core.types import HyperParams
 from ..data.synthetic import ClassificationTask, LMTask
-from ..models.toy import make_classifier_fns
+from ..models.toy import ClassifierGradFn, make_classifier_fns
 
 
 def _parse_dropout(specs):
@@ -59,10 +59,13 @@ def _setup(args):
     if args.preset == "classifier":
         task = ClassificationTask(dim=args.dim, num_classes=10,
                                   batch_size=args.batch, seed=args.seed)
-        init, grad_fn, make_eval = make_classifier_fns(
-            [args.dim, args.width, args.width, 10])
+        dims = [args.dim, args.width, args.width, 10]
+        init, _, make_eval = make_classifier_fns(dims)
         params0 = init(jax.random.PRNGKey(args.seed))
-        return params0, grad_fn, task.batch, make_eval(task.eval_batch())
+        # ClassifierGradFn is the same jax.grad as make_classifier_fns'
+        # closure, but picklable — required by --backend process
+        return (params0, ClassifierGradFn(dims), task.batch,
+                make_eval(task.eval_batch()))
     # tiny LM preset (the transformer stand-in)
     import dataclasses as _dc
     from ..configs import get_config
@@ -94,6 +97,15 @@ def main(argv=None):
     ap.add_argument("--coalesce", type=int, default=4)
     ap.add_argument("--shards", type=int, default=1,
                     help="row-range master shards (flat kernel path only)")
+    ap.add_argument("--backend", default="thread",
+                    choices=["thread", "process"],
+                    help="process = shard servers + workers as OS "
+                         "processes over shared-memory rings (live "
+                         "modes, flat kernel path only)")
+    ap.add_argument("--pin-schedule", action="store_true",
+                    help="pin live-mode pushes to strict round-robin "
+                         "worker order (schedule-deterministic on both "
+                         "backends)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--warmup-frac", type=float, default=0.0)
@@ -143,7 +155,12 @@ def main(argv=None):
         coalesce=args.coalesce, shards=args.shards, exec_model=gm,
         time_scale=args.time_scale, faults=faults,
         record_telemetry=not args.no_telemetry,
-        use_kernel=False if args.no_kernel else None)
+        use_kernel=False if args.no_kernel else None,
+        backend=args.backend, pin_schedule=args.pin_schedule)
+    if args.backend == "process" and args.preset == "lm":
+        raise SystemExit("--backend process needs a picklable grad_fn; "
+                         "the lm preset builds a closure (use the "
+                         "classifier preset)")
 
     algo = make_algorithm(args.algo, hp, sched)
     stats: dict = {}

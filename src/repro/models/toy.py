@@ -66,6 +66,35 @@ def make_classifier_fns(dims, weight_decay: float = 0.0):
     return init, grad_fn, make_eval
 
 
+class ClassifierGradFn:
+    """Picklable gradient of the MLP classifier loss.
+
+    ``make_classifier_fns`` returns a ``jax.grad`` closure, which cannot
+    cross a process boundary; the process cluster backend pickles its
+    ``grad_fn`` into every worker, so this carries only ``(dims,
+    weight_decay)`` and rebuilds the traced gradient lazily per process.
+    """
+
+    def __init__(self, dims, weight_decay: float = 0.0):
+        self.dims = tuple(int(d) for d in dims)
+        self.weight_decay = float(weight_decay)
+        self._grad = None
+
+    def __getstate__(self):
+        return {"dims": self.dims, "weight_decay": self.weight_decay}
+
+    def __setstate__(self, state):
+        self.dims = state["dims"]
+        self.weight_decay = state["weight_decay"]
+        self._grad = None
+
+    def __call__(self, params, batch):
+        if self._grad is None:
+            self._grad = make_classifier_fns(self.dims,
+                                             self.weight_decay)[1]
+        return self._grad(params, batch)
+
+
 def quadratic_fns(dim: int = 50, cond: float = 100.0, seed: int = 0):
     """A deterministic ill-conditioned quadratic — handy for exact
     convergence-rate tests of the momentum algebra."""

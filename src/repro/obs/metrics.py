@@ -270,7 +270,8 @@ def serve_instruments(reg: MetricsRegistry):
 
     class _ServeMetrics:
         __slots__ = ("drain_k", "pulls", "overflow",
-                     "slab_rows_streamed", "slab_rows_total", "pull_rows")
+                     "slab_rows_streamed", "slab_rows_total", "pull_rows",
+                     "tele_dropped")
 
     m = _ServeMetrics()
     m.drain_k = reg.histogram("drain_k", DRAIN_K_EDGES)
@@ -279,6 +280,10 @@ def serve_instruments(reg: MetricsRegistry):
     m.slab_rows_streamed = reg.counter("slab_rows_streamed")
     m.slab_rows_total = reg.counter("slab_rows_total")
     m.pull_rows = reg.counter("pull_rows")
+    # fan-out telemetry groups that finished without flushing a History
+    # row (a shard rejected the message, or shard 0's meta never landed):
+    # their accumulated d2/g2 partials are dropped — counted, not silent
+    m.tele_dropped = reg.counter("telemetry_dropped")
     return m
 
 

@@ -37,6 +37,15 @@ def test_quick_cluster_exercises_shard_sweep():
     assert len(shards) >= 2 and 1 in shards
 
 
+def test_quick_cluster_exercises_procs_sweep():
+    """The cluster smoke must also run the process-backend capacity
+    sweep (it reuses --shards): the QUICK argv must not pass
+    --skip-procs, so the procs claims stay in the CI trajectory."""
+    argv = bench_run.QUICK["cluster"]
+    assert "--skip-procs" not in argv
+    assert len(_argv_values(argv, "--shards")) >= 2
+
+
 def test_quick_cluster_covers_sent_family():
     """The cluster smoke must sweep at least one sent-snapshot member
     (dc-asgd / dana-dc / ga-asgd): bench_cluster asserts the documented
@@ -93,6 +102,12 @@ def test_run_quick_kernels_and_cluster_appends_trajectory(tmp_path,
     # the sharded capacity sweep rides in the cluster suite's claims
     sweep = out["cluster"]["claims"]["shard_sweep_updates_per_s"]
     assert set(sweep) == {"1", "2"} and all(v > 0 for v in sweep.values())
+    # ...and so does the process-backend sweep, side by side with its
+    # ratio against the threaded numbers at matching S
+    procs = out["cluster"]["claims"]["procs_sweep_updates_per_s"]
+    assert set(procs) == {"1", "2"} and all(v > 0 for v in procs.values())
+    ratio = out["cluster"]["claims"]["procs_over_threaded_x_by_s"]
+    assert set(ratio) == {"1", "2"} and all(v > 0 for v in ratio.values())
     # the PR-7 memory-tier claims: present and non-degenerate (the
     # routed dispatch must not lose to the full-slab kernel at N = 8;
     # the prefetch kernel must win where the dense tiles shrink; slab
