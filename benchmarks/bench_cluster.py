@@ -54,6 +54,12 @@ Three measurements:
   algorithm (dana-zero vs asgd by default) so the artifact shows the
   actual staleness *distribution* the cluster produces — the quantity
   DANA is built to tame.
+* **pipeline** — the hot-path pipeline (this PR): the stacked-wire
+  microbench (one staged (k, R, 128) device transfer vs k transfers +
+  in-jit stack on shm-style host gradients), the worker pull-ahead
+  margin (free-mode steady updates/s at ``pipeline_depth`` 1 vs 0),
+  and the designed-staleness audit (the exact +1 lag shift a pinned
+  single-worker depth-1 run records).
 
 ``--trace PATH`` wraps the phases in tracer spans and records the live
 and staleness sections' cluster runs (worker/master/mailbox spans +
@@ -163,15 +169,16 @@ def master_capacity_row(algo_name: str, num_workers: int, k: int,
         fn = master._get_fused_flat(k, telemetry=False)
         bench_state = master._flat_state
         # flat wire format: workers push ALREADY-packed (R, 128) grads
-        # (their grad jit packs at their end), so that is what the
-        # master-thread hot pass consumes
+        # (their grad jit packs at their end); the serve loop stacks the
+        # batch into ONE (k, R, 128) device buffer before the fused pass
         grad = master._flat_algo.spec.pack(grad)
     else:
         fn = master._get_fused(k, telemetry=False)
         bench_state = state
     ids = jnp.asarray([j % num_workers for j in range(k)], jnp.int32)
     nows = jnp.zeros((k,), jnp.float32)
-    grads = tuple(grad for _ in range(k))
+    grads = (jnp.stack([grad] * k) if path == "flat"
+             else tuple(grad for _ in range(k)))
 
     # the flat fused pass DONATES its state (in-place kernel update), so
     # the state threads through continuously instead of resetting per
@@ -216,7 +223,7 @@ def sharded_capacity_row(algo_name: str, num_workers: int, k: int,
     plans = []                          # [fn, live_state, grads] per shard
     for srv in master.shards_:
         fn = srv._get_fused(k, telemetry=False)
-        grads = tuple(gbuf[srv.r0:srv.r1] for _ in range(k))
+        grads = jnp.stack([gbuf[srv.r0:srv.r1]] * k)    # stacked wire
         # donated state: carry the compile call's output forward
         out = fn(srv.state, ids, nows, grads, None)          # compile
         jax.block_until_ready(out[0]["theta"])
@@ -276,7 +283,7 @@ def _procs_shard_main(conn, barrier, algo_name, num_workers, k, reps,
         ids = jnp.asarray([j % num_workers for j in range(k)], jnp.int32)
         nows = jnp.zeros((k,), jnp.float32)
         fn = srv._get_fused(k, telemetry=False)
-        grads = tuple(gbuf[srv.r0:srv.r1] for _ in range(k))
+        grads = jnp.stack([gbuf[srv.r0:srv.r1]] * k)    # stacked wire
         out = fn(srv.state, ids, nows, grads, None)          # compile
         jax.block_until_ready(out[0]["theta"])
         s = out[0]                      # donated: thread across trials
@@ -546,6 +553,119 @@ def staleness_profile_row(algo_name: str, num_workers: int,
     }
 
 
+def pipeline_stacked_row(num_workers: int = 8, k: int = 8,
+                         reps: int = 60, width: int = 512) -> dict:
+    """Stacked-wire microbench (the process-backend receive path): k
+    host-resident (shm-style) numpy gradients into the fused pass via
+
+    * **tuple** — the PR-8 wire: k separate device transfers plus an
+      in-jit ``jnp.stack`` of the k buffers;
+    * **stacked** — this PR: one staged memcpy into a pinned host
+      buffer, then ONE contiguous (k, R, 128) device transfer.
+    """
+    params0, grad_fn, next_batch = _setup(width=width)
+    algo = make_algorithm("dana-zero", HP)
+    fa = FlatAlgorithm(algo)
+    flat = fa.init(params0, num_workers)
+    rows = int(flat["theta"].shape[0])
+    ids = jnp.asarray([j % num_workers for j in range(k)], jnp.int32)
+    nows = jnp.zeros((k,), jnp.float32)
+    gbuf = np.asarray(fa.spec.pack(jax.jit(grad_fn)(params0,
+                                                    next_batch(0, 0))))
+    host_grads = [np.array(gbuf) for _ in range(k)]  # k distinct "slots"
+
+    def fused_tuple(fl, i, t, grads):
+        g = jnp.stack(grads)
+        fl, hats, _ = fa.apply_batch(fl, i, g, t, telemetry=False)
+        return fl, hats
+
+    def fused_stacked(fl, i, t, g):
+        fl, hats, _ = fa.apply_batch(fl, i, g, t, telemetry=False)
+        return fl, hats
+
+    fns = {"tuple": jax.jit(fused_tuple, donate_argnums=(0,)),
+           "stacked": jax.jit(fused_stacked, donate_argnums=(0,))}
+    stage = np.empty((k, rows, 128), np.float32)
+
+    def _feed(name):
+        if name == "tuple":
+            return tuple(jnp.asarray(g) for g in host_grads)
+        for j, g in enumerate(host_grads):
+            np.copyto(stage[j], g)
+        return jnp.asarray(stage)
+
+    res = {}
+    for name, fn in fns.items():
+        s = jax.tree.map(jnp.copy, flat)
+        s, _ = fn(s, ids, nows, _feed(name))             # compile
+        jax.block_until_ready(s["theta"])
+        dt = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                s, _ = fn(s, ids, nows, _feed(name))
+            jax.block_until_ready(s["theta"])
+            dt = min(dt, (time.perf_counter() - t0) / reps)
+        res[name] = dt
+    return {
+        "section": "pipeline", "bench": "stacked_wire",
+        "workers": num_workers, "k": k, "rows": rows,
+        "us_per_batch_tuple": res["tuple"] * 1e6,
+        "us_per_batch_stacked": res["stacked"] * 1e6,
+        "stacked_over_tuple_x": res["tuple"] / res["stacked"],
+    }
+
+
+def pipeline_pullahead_row(algo_name: str, num_workers: int, k: int,
+                           total_grads: int) -> dict:
+    """Worker pull-ahead: end-to-end free-mode throughput of the
+    threaded cluster at pipeline_depth 0 (synchronous push-pull) vs 1
+    (the RPC round trip hidden behind the next gradient compute)."""
+    params0, grad_fn, next_batch = _setup()
+    res = {}
+    for depth in (0, 1):
+        algo = make_algorithm(algo_name, HP)
+        cfg = ClusterConfig(num_workers=num_workers,
+                            total_grads=total_grads, mode="free",
+                            coalesce=k, record_telemetry=False,
+                            pipeline_depth=depth)
+        stats: dict = {}
+        run_cluster(algo, grad_fn, params0, next_batch, cfg,
+                    stats_out=stats)
+        res[depth] = stats["steady_updates_per_s"]
+    return {
+        "section": "pipeline", "bench": "pullahead", "algo": algo_name,
+        "workers": num_workers, "k": k, "grads": total_grads,
+        "updates_per_s_depth0": res[0],
+        "updates_per_s_depth1": res[1],
+        "pullahead_over_sync_x": res[1] / res[0],
+    }
+
+
+def pipeline_staleness_row(algo_name: str = "dc-asgd",
+                           total_grads: int = 64) -> dict:
+    """The designed-staleness audit: one pinned single-worker free-mode
+    run per depth — at depth 1 every gradient is computed on the
+    previous reply's view, so the recorded lag (and the sent-snapshot
+    staleness that follows it) shifts by exactly +1 after the first
+    message."""
+    params0, grad_fn, next_batch = _setup()
+    means = {}
+    for depth in (0, 1):
+        algo = make_algorithm(algo_name, HP)
+        cfg = ClusterConfig(num_workers=1, total_grads=total_grads,
+                            mode="free", coalesce=1, pin_schedule=True,
+                            pipeline_depth=depth)
+        hist = run_cluster(algo, grad_fn, params0, next_batch, cfg)
+        means[depth] = float(np.mean(np.asarray(hist.lag)))
+    return {
+        "section": "pipeline", "bench": "staleness", "algo": algo_name,
+        "grads": total_grads,
+        "mean_lag_depth0": means[0], "mean_lag_depth1": means[1],
+        "staleness_shift_depth1": means[1] - means[0],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--algos", nargs="*", default=["dana-zero"],
@@ -575,6 +695,9 @@ def main(argv=None):
                     help="skip the process-backend capacity sweep "
                          "(an empty --shards list also skips it)")
     ap.add_argument("--skip-live", action="store_true")
+    ap.add_argument("--skip-pipeline", action="store_true",
+                    help="skip the hot-path pipeline section (stacked "
+                         "wire + worker pull-ahead + staleness shift)")
     ap.add_argument("--skip-obs", action="store_true",
                     help="skip the staleness-profile section")
     ap.add_argument("--out", default="results/bench_cluster.json")
@@ -653,6 +776,17 @@ def main(argv=None):
             for n in args.workers:
                 for k in args.coalesce:
                     live_rows.append(live_row(algo0, n, k, args.grads))
+    pipeline_rows = []
+    if not args.skip_pipeline:
+        n0, k_hi = max(args.workers), max(args.coalesce)
+        with trace.span("pipeline", "bench"):
+            pipeline_rows.append(pipeline_stacked_row(
+                n0, k=max(k_hi, 8), reps=max(10, args.reps // 10)))
+            pipeline_rows.append(pipeline_pullahead_row(
+                algo0 if "flat" in paths else "dana-zero", n0, k_hi,
+                args.grads))
+            pipeline_rows.append(pipeline_staleness_row(
+                total_grads=min(args.grads, 64)))
     obs_rows = []
     if not args.skip_obs:
         # the staleness profile: dana-zero (per-worker momentum) vs asgd
@@ -695,6 +829,11 @@ def main(argv=None):
                              "staleness_nonzero_buckets",
                              "staleness_mean", "staleness_p50",
                              "staleness_p99", "updates_per_s"])
+    if pipeline_rows:
+        print_csv(pipeline_rows, ["section", "bench", "workers", "k",
+                                  "stacked_over_tuple_x",
+                                  "pullahead_over_sync_x",
+                                  "staleness_shift_depth1"])
 
     def _cap(n, k, path, algo=algo0, sched=False):
         return next(r["master_updates_per_s"] for r in cap_rows
@@ -839,12 +978,32 @@ def main(argv=None):
             r["staleness_nonzero_buckets"] >= 2 for r in obs_rows)
         claims["staleness_p99_by_algo"] = {
             r["algo"]: r["staleness_p99"] for r in obs_rows}
+    if pipeline_rows:
+        by_bench = {r["bench"]: r for r in pipeline_rows}
+        # the stacked-wire margin: one staged (k, R, 128) transfer vs
+        # k transfers + in-jit stack on shm-style host gradients
+        claims["stacked_over_tuple_x"] = (
+            by_bench["stacked_wire"]["stacked_over_tuple_x"])
+        claims["stacked_wire_beats_tuple"] = (
+            by_bench["stacked_wire"]["stacked_over_tuple_x"] > 1.0)
+        # the pull-ahead margin: free-mode steady updates/s at depth 1
+        # vs the synchronous depth-0 push-pull
+        claims["pullahead_over_sync_x"] = (
+            by_bench["pullahead"]["pullahead_over_sync_x"])
+        claims["pullahead_beats_sync"] = (
+            by_bench["pullahead"]["pullahead_over_sync_x"] > 1.0)
+        # the designed-staleness audit: the +1 lag shift a depth-1
+        # single-worker pinned run records (the asynchrony the paper's
+        # look-ahead is built to tame, dialed in on purpose)
+        claims["staleness_shift_depth1"] = (
+            by_bench["staleness"]["staleness_shift_depth1"])
     print("claims:", claims)
     memtier_all = memtier_rows + ([pull_row] if pull_row else [])
     save_json(args.out, {"capacity": cap_rows, "send": send_rows,
                          "sharded": shard_rows, "procs": procs_rows,
                          "memtier": memtier_all, "live": live_rows,
-                         "obs": obs_rows, "claims": claims})
+                         "obs": obs_rows, "pipeline": pipeline_rows,
+                         "claims": claims})
     if args.metrics_out:
         save_json(args.metrics_out,
                   {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -859,7 +1018,7 @@ def main(argv=None):
         print(f"[trace] {args.trace}: {len(obj['traceEvents'])} events, "
               f"VALID")
     return (cap_rows + send_rows + shard_rows + procs_rows + memtier_all
-            + live_rows + obs_rows, claims)
+            + live_rows + obs_rows + pipeline_rows, claims)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,15 @@ def smoke():
         assert s["telemetry_dropped"] == 0, s
         print(f"process backend ok (shards={shards}): "
               f"{s['steady_updates_per_s']:.0f} steady up/s")
+    # worker pull-ahead over the shm rings: posted-but-unsettled pushes
+    # must all drain, every gradient applied, no telemetry dropped
+    s = main(["--backend", "process", "--mode", "free",
+              "--workers", "2", "--grads", "60", "--coalesce", "2",
+              "--pipeline-depth", "1", "--eval-every", "30"])
+    assert s["applied"] == 60, s
+    assert s["telemetry_dropped"] == 0, s
+    print(f"process backend ok (pipeline_depth=1): "
+          f"{s['steady_updates_per_s']:.0f} steady up/s")
 
 
 if __name__ == "__main__":

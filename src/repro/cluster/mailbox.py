@@ -7,7 +7,11 @@ master ``drain``s up to k messages at a time for a coalesced receive.
 
 Each message doubles as its own reply slot: the push is a fused push-pull
 RPC — the master answers with the post-update parameter view, exactly the
-``receive`` -> ``send`` sequence of the discrete-event engine.
+``receive`` -> ``send`` sequence of the discrete-event engine.  Because
+the reply slot travels WITH the message, worker pull-ahead
+(``ClusterConfig.pipeline_depth``) needs no protocol change: a worker
+keeps up to ``depth`` pushes in flight simply by deferring
+``wait_reply`` on their messages while it computes the next gradient.
 
 For the row-sharded multi-master (``repro.cluster.sharded``) the same
 protocol fans out: ``FanoutMailbox`` splits one worker message into S

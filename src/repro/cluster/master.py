@@ -182,7 +182,8 @@ class Master:
                  record_telemetry: bool = True,
                  eval_fn: Callable | None = None, eval_every: int = 100,
                  injector: FaultInjector | None = None,
-                 time_fn: Callable[[GradMsg], float] | None = None):
+                 time_fn: Callable[[GradMsg], float] | None = None,
+                 pipeline_depth: int = 0):
         self.algo = algo
         self._tree_state: dict | None = state
         self._flat_algo: FlatAlgorithm | None = None
@@ -244,6 +245,13 @@ class Master:
         # lag; snapshot-free members record NaN (no snapshot to age)
         fam = family_spec_for(algo)
         self._sent_family = fam is not None and fam.sent_key is not None
+        # worker pull-ahead depth (staleness accounting only — the
+        # workers implement the pipelining; see _flush_telemetry)
+        self._pipeline_depth = max(0, int(pipeline_depth))
+        # deferred telemetry: per-batch device arrays + host metadata,
+        # flushed to History at eval watermarks / cap / end of run
+        self._tele_spool: list = []
+        self._tele_cap = 64
         # memory-tier traffic model for the serve-loop counters: slab
         # worker count + rows one sender streams (2 r/w streams per slab)
         self.slab_info = None
@@ -292,12 +300,17 @@ class Master:
                                                 jnp.int32(i))
         return view, self._step
 
-    def warm(self):
+    def warm(self, hot_ranges: tuple = ()):
         """Pre-compile every fused-receive variant the drain policy can
         produce (powers of two up to the coalesce window) so no compile
-        lands mid-run.  Zero gradients, discarded output state."""
+        lands mid-run.  Zero gradients, discarded output state.
+
+        ``hot_ranges`` — the distinct ``ClusterConfig.hot_rows`` (r0, r1)
+        ranges workers declared: their row-sliced view closures
+        (``_view_rows_jit``) are compiled here too, so the first hot-row
+        pull never traces mid-run (snapshot-free families only — the
+        sent family always serves full-range pulls)."""
         if self.state_is_flat:
-            zero_grad = jnp.zeros_like(self._flat_state["theta"])
             view = self._flat_state["theta"]
         else:
             zero_grad = jax.tree.map(jnp.zeros_like, self.master_params())
@@ -306,9 +319,15 @@ class Master:
         while k <= self.coalesce:
             ids = jnp.zeros((k,), jnp.int32)
             nows = jnp.zeros((k,), jnp.float32)
-            grads = tuple(zero_grad for _ in range(k))
-            views = (tuple(view for _ in range(k))
-                     if self.record_telemetry else None)
+            if self.state_is_flat:
+                # stacked wire format: one (k, R, 128) buffer per batch
+                grads = jnp.zeros((k,) + view.shape, view.dtype)
+                views = (jnp.broadcast_to(view, grads.shape)
+                         if self.record_telemetry else None)
+            else:
+                grads = tuple(zero_grad for _ in range(k))
+                views = (tuple(view for _ in range(k))
+                         if self.record_telemetry else None)
             fn, st = self._fused_for(k, self.record_telemetry)
             if self.state_is_flat:
                 # the fused flat pass donates its state argument; warm
@@ -317,6 +336,10 @@ class Master:
             out = fn(st, ids, nows, grads, views)
             jax.block_until_ready(jax.tree.leaves(out[0])[0])
             k *= 2
+        if self.state_is_flat and not self._sent_family:
+            for r0, r1 in hot_ranges:
+                fn = self._view_rows_fn(int(r0), int(r1))
+                jax.block_until_ready(fn(self._flat_state, jnp.int32(0)))
 
     # -- fused coalesced receive ----------------------------------------
     def _fused_for(self, k: int, telemetry: bool):
@@ -327,10 +350,13 @@ class Master:
     def _get_fused_flat(self, k: int, telemetry: bool):
         """ONE batched flat kernel for the whole k-message drain.
 
-        Everything on the wire is already flat: ``grads`` and ``views``
-        are (R, 128) buffers (the workers' grad jit packs/unpacks at
-        their end) and the returned views are raw (R, 128) hat rows —
-        the master thread does no pytree work at all.
+        Everything on the wire is already flat, and the batch arrives
+        STACKED: ``g_flat`` (and ``views`` under telemetry) is one
+        (k, R, 128) buffer — the caller stacks outside the jit (a single
+        dispatch on the threaded backend; the process backend stages the
+        k shared-memory grads into one host buffer and ships ONE
+        transfer).  The returned views are raw (R, 128) hat rows — the
+        master thread does no pytree work at all.
         """
         key = ("flat", k, telemetry)
         fn = self._fused.get(key)
@@ -339,8 +365,7 @@ class Master:
         fa = self._flat_algo
         inv_sqrt_p = 1.0 / float(np.sqrt(fa.spec.n_elems))
 
-        def fused(flat, ids, nows, grads, views):
-            g_flat = jnp.stack(grads)
+        def fused(flat, ids, nows, g_flat, views):
             # per-message sent-snapshot staleness comes from the scalar
             # lane, read BEFORE apply_batch consumes the donated state
             # (None for snapshot-free members)
@@ -350,7 +375,7 @@ class Master:
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
             if telemetry:
-                d = pres - jnp.stack(views)  # zero in the padding region
+                d = pres - views             # zero in the padding region
                 gaps = jnp.sqrt(jnp.sum(d * d, axis=(1, 2))) * inv_sqrt_p
                 gnorms = jnp.sqrt(jnp.sum(g_flat * g_flat, axis=(1, 2)))
                 return flat, out_views, gaps, gnorms, stals
@@ -418,8 +443,16 @@ class Master:
         fn, st = self._fused_for(k, telemetry)
         ids = jnp.asarray([m.worker_id for m in work], jnp.int32)
         nows = jnp.asarray([m.t_send for m in work], jnp.float32)
-        grads = tuple(m.grad for m in work)
-        views = tuple(m.view for m in work) if telemetry else None
+        if self.state_is_flat:
+            # stacked wire format: ONE (k, R, 128) buffer per batch (one
+            # concatenate dispatch here; the process backend stages into
+            # a preallocated host buffer and ships a single transfer)
+            grads = jnp.stack([m.grad for m in work])
+            views = (jnp.stack([m.view for m in work]) if telemetry
+                     else None)
+        else:
+            grads = tuple(m.grad for m in work)
+            views = tuple(m.view for m in work) if telemetry else None
         t0 = self._step
         if telemetry:
             st, out_views, gaps, gnorms, stals = fn(st, ids, nows, grads,
@@ -432,36 +465,63 @@ class Master:
         else:
             self._tree_state = st
         self._step = t0 + k
-        if telemetry:           # one host transfer per batch, not 2k
-            gaps = np.asarray(gaps)
-            gnorms = np.asarray(gnorms)
-            if stals is not None:
-                stals = np.asarray(stals)
+        if telemetry:
+            # sync-free serve loop: keep gaps/gnorms/stals as DEVICE
+            # arrays and spool the per-message metadata — the host never
+            # blocks on this batch's results, so batch B+1 dispatches
+            # while the device still runs batch B.  The spool flushes to
+            # History at eval watermarks / the spool cap / end of run,
+            # replaying record() calls in identical order (bit-identical
+            # series; tested).
+            metas = [(self._time_fn(m), m.worker_id, m.view_step)
+                     for m in work]
+            self._tele_spool.append((t0, metas, gaps, gnorms, stals))
         evals = []
         for j, m in enumerate(work):
             self.applied += 1
             if self.applied == self._steady_mark:
                 self.steady_t = time.perf_counter()
             m.respond(Reply(view=out_views[j], step=t0 + j + 1))
-            if telemetry:
-                if stals is not None:            # flat path: lane-based
-                    stal = float(stals[j])
-                elif self._sent_family:          # tree path: == lag
-                    stal = float(t0 + j - m.view_step)
-                else:
-                    stal = float("nan")
-                self.history.record(
-                    time=self._time_fn(m), step=t0 + j + 1,
-                    worker=m.worker_id, lag=t0 + j - m.view_step,
-                    gap=float(gaps[j]), grad_norm=float(gnorms[j]),
-                    staleness=stal)
             if (self.applied % self.eval_every == 0
                     or self.applied == self.total):
                 evals.append((self._time_fn(m), t0 + j + 1))
+        if telemetry and (evals or len(self._tele_spool)
+                          >= self._tele_cap):
+            self._flush_telemetry()
         # eval uses the post-batch state; with coalescing k=1 (always true
         # in deterministic mode) this is exactly the engine's eval point.
         for t_ev, step_ev in evals:
             self._eval(t_ev, step_ev)
+
+    def _flush_telemetry(self):
+        """Drain the deferred telemetry spool into ``History`` — the only
+        point where the master thread syncs with the device for
+        telemetry (one host transfer per spooled batch, all off the
+        per-batch hot path)."""
+        spool, self._tele_spool = self._tele_spool, []
+        for t0, metas, gaps, gnorms, stals in spool:
+            gaps = np.asarray(gaps)
+            gnorms = np.asarray(gnorms)
+            if stals is not None:
+                stals = np.asarray(stals)
+            for j, (t_m, wid, vstep) in enumerate(metas):
+                if self._pipeline_depth and self._sent_family:
+                    # pull-ahead: the pushed grad was computed against an
+                    # OLDER reply than the one that last restamped this
+                    # worker's snapshot lane, so the lane undercounts by
+                    # the pipeline depth — the message lag is the true
+                    # snapshot age
+                    stal = float(t0 + j - vstep)
+                elif stals is not None:          # flat path: lane-based
+                    stal = float(stals[j])
+                elif self._sent_family:          # tree path: == lag
+                    stal = float(t0 + j - vstep)
+                else:
+                    stal = float("nan")
+                self.history.record(
+                    time=t_m, step=t0 + j + 1, worker=wid,
+                    lag=t0 + j - vstep, gap=float(gaps[j]),
+                    grad_norm=float(gnorms[j]), staleness=stal)
 
     def _eval(self, t, step):
         if self._eval_jit is None:
@@ -470,6 +530,18 @@ class Master:
         loss, metric = (out if isinstance(out, tuple)
                         else (out, float("nan")))
         self.history.record_eval(time=t, step=step, loss=loss, metric=metric)
+
+    def _view_rows_fn(self, r0: int, r1: int):
+        """The jitted row-sliced view closure for one static hot-row
+        range — cached per range, pre-compiled by ``warm`` for declared
+        ranges so no trace lands mid-run."""
+        fn = self._view_rows_jit.get((r0, r1))
+        if fn is None:
+            fa = self._flat_algo
+            fn = jax.jit(lambda fl, i, a=r0, b=r1:
+                         fa.view_rows(fl, i, a, b))
+            self._view_rows_jit[(r0, r1)] = fn
+        return fn
 
     def _pull_reply(self, m: GradMsg) -> int:
         if self.state_is_flat:
@@ -482,13 +554,8 @@ class Master:
                 # full-range send below (Reply.rows stays None and the
                 # worker replaces its whole view).
                 r0, r1 = int(m.rows[0]), int(m.rows[1])
-                fn = self._view_rows_jit.get((r0, r1))
-                if fn is None:
-                    fa = self._flat_algo
-                    fn = jax.jit(lambda fl, i, a=r0, b=r1:
-                                 fa.view_rows(fl, i, a, b))
-                    self._view_rows_jit[(r0, r1)] = fn
-                view = fn(self._flat_state, jnp.int32(m.worker_id))
+                view = self._view_rows_fn(r0, r1)(self._flat_state,
+                                                  jnp.int32(m.worker_id))
                 m.respond(Reply(view=view, step=self._step,
                                 rows=(r0, r1)))
                 return r1 - r0
@@ -506,7 +573,14 @@ class Master:
         try:
             run_serve_loop(self)
         finally:
-            self.stop.set()         # run over (or failed): cluster done
+            try:
+                if self.record_telemetry:
+                    self._flush_telemetry()
+            except BaseException as e:  # noqa: BLE001 - surfaced below
+                if self.error is None:
+                    self.error = e
+            finally:
+                self.stop.set()     # run over (or failed): cluster done
 
     def reject_pending(self):
         """Post-shutdown: unblock any worker still waiting on a reply."""

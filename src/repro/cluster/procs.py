@@ -52,6 +52,7 @@ import sys
 import tempfile
 import time
 import traceback
+from collections import deque
 
 import numpy as np
 
@@ -286,12 +287,14 @@ class ShmFanout:
         self.ctl = layout.ctl_i(buf)
         self.rings = [layout.ring(buf, s) for s in range(layout.shards)]
 
-    def rpc(self, wid: int, grads, views, view_step: int, t_send: float,
-            stop: _ShmStop, rpc_timeout: float):
-        """Fused push-pull across all shards.  Returns (views, step) —
-        range-ordered tuple of fresh per-shard view copies — or None on
-        shutdown / rejection.  Raises TimeoutError like
-        ``GradMsg.wait_reply``."""
+    def rpc_post(self, wid: int, grads, views, view_step: int,
+                 t_send: float, stop: _ShmStop):
+        """The push half of the RPC: reserve a global index, copy the
+        payload into every shard ring and publish — WITHOUT waiting for
+        the replies.  Returns an opaque (slot, gen) token for
+        ``rpc_await``, or None on shutdown.  Worker pull-ahead posts the
+        next push before settling the previous one, so the RPC round
+        trip hides behind the next gradient compute."""
         lay = self.layout
         cap = lay.cap
         with self.lock:
@@ -316,7 +319,16 @@ class ShmFanout:
             meta[M_VSTEP] = view_step
             ring["tsend"][slot] = t_send
             meta[M_REQ] = gen          # publish AFTER the payload
-        # wait for every shard's reply
+        return (slot, gen)
+
+    def rpc_await(self, token, wid: int, stop: _ShmStop,
+                  rpc_timeout: float):
+        """The pull half: wait for every shard's reply to a posted
+        token, copy the view slices out and free the slot.  Returns
+        (views, step) or None on shutdown / rejection; raises
+        TimeoutError like ``GradMsg.wait_reply``."""
+        lay = self.layout
+        slot, gen = token
         deadline = time.monotonic() + rpc_timeout
         stop_seen = None
         for s in range(lay.shards):
@@ -342,6 +354,18 @@ class ShmFanout:
         for s in range(lay.shards):   # free the slot for reuse
             self.rings[s]["meta"][slot][M_CON] = gen
         return (out_views, step) if ok else None
+
+    def rpc(self, wid: int, grads, views, view_step: int, t_send: float,
+            stop: _ShmStop, rpc_timeout: float):
+        """Fused push-pull across all shards (the synchronous depth-0
+        composition of ``rpc_post`` + ``rpc_await``).  Returns
+        (views, step) — range-ordered tuple of fresh per-shard view
+        copies — or None on shutdown / rejection.  Raises TimeoutError
+        like ``GradMsg.wait_reply``."""
+        token = self.rpc_post(wid, grads, views, view_step, t_send, stop)
+        if token is None:
+            return None
+        return self.rpc_await(token, wid, stop, rpc_timeout)
 
 
 def _attach(name: str):
@@ -424,6 +448,18 @@ class _ProcServer:
         self._ctl_f = ctl_f
         self.tele_rows = []            # (idx, wid, step, lag, t, d2, g2)
         self.eval_rows = []            # (watermark, t, theta rows copy)
+        # stacked-wire staging: shm grad/view slices are memcpy'd into
+        # these pinned host buffers so each batch costs ONE device
+        # transfer (k, rows, 128) instead of k transfers + in-jit stack
+        rows = int(state["theta"].shape[-2])
+        self._gstage = np.empty((self.coalesce, rows, 128), np.float32)
+        self._vstage = (np.empty_like(self._gstage) if telemetry
+                        else None)
+        # deferred telemetry spool: device-side d2/g2 plus host metas,
+        # converted to floats only at eval watermarks / run end so the
+        # steady-state serve loop never blocks on a device sync
+        self._tele_spool = []
+        self._tele_cap = 64
 
     # shared-cell mirrors (single writer: this process)
     @property
@@ -460,13 +496,15 @@ class _ProcServer:
             return fn
         fa = self.fa
 
-        def fused(flat, ids, nows, grads, views):
-            g = jnp.stack(grads)
+        def fused(flat, ids, nows, g, views):
+            # g and views arrive pre-stacked (k, rows, 128): the serve
+            # loop stages the shm grads into one pinned host buffer and
+            # ships ONE device transfer per batch instead of k
             flat, hats, pres = fa.apply_batch(flat, ids, g, nows,
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
             if telemetry:
-                d = pres - jnp.stack(views)
+                d = pres - views
                 return (flat, out_views, jnp.sum(d * d, axis=(1, 2)),
                         jnp.sum(g * g, axis=(1, 2)))
             return flat, out_views, None, None
@@ -478,16 +516,16 @@ class _ProcServer:
     def warm(self):
         import jax
         import jax.numpy as jnp
-        zero = jnp.zeros_like(self.state["theta"])
         view = self.state["theta"]
         k = 1
         while k <= self.coalesce:
             fn = self._get_fused(k, self.telemetry)
+            g = jnp.zeros((k,) + view.shape, view.dtype)
             out = fn(jax.tree.map(jnp.copy, self.state),
                      jnp.zeros((k,), jnp.int32),
                      jnp.zeros((k,), jnp.float32),
-                     tuple(zero for _ in range(k)),
-                     tuple(view for _ in range(k)) if self.telemetry
+                     g,
+                     jnp.broadcast_to(view, g.shape) if self.telemetry
                      else None)
             jax.block_until_ready(jax.tree.leaves(out[0])[0])
             k *= 2
@@ -499,35 +537,53 @@ class _ProcServer:
         fn = self._get_fused(k, telemetry)
         ids = jnp.asarray([m.worker_id for m in work], jnp.int32)
         nows = jnp.asarray([m.t_send for m in work], jnp.float32)
-        grads = tuple(m.grad for m in work)
-        views = tuple(m.view for m in work) if telemetry else None
+        # stage the zero-copy shm slices into the pinned host buffer:
+        # one contiguous (k, rows, 128) transfer replaces k small ones
+        for j, m in enumerate(work):
+            np.copyto(self._gstage[j], m.grad)
+            if telemetry:
+                np.copyto(self._vstage[j], m.view)
+        grads = jnp.asarray(self._gstage[:k])
+        views = jnp.asarray(self._vstage[:k]) if telemetry else None
         t0 = self._step
         st, out_views, d2, g2 = fn(self.state, ids, nows, grads, views)
         self.state = st
         self._step = t0 + k
         if telemetry:
-            d2 = np.asarray(d2)
-            g2 = np.asarray(g2)
+            # spool device-side; metas capture everything the flush
+            # needs so the shipped rows are byte-identical to eager ones
+            self._tele_spool.append(
+                (t0, [(m.idx, m.worker_id, m.view_step, m.t_send)
+                      for m in work], d2, g2))
         from .mailbox import Reply
         evals = []
         for j, m in enumerate(work):
             self.applied += 1
             if self.sid == 0 and self.applied == self._steady_mark:
                 self._ctl_f[F_STEADY] = time.monotonic()
-            if telemetry:
-                self.tele_rows.append(
-                    (m.idx, m.worker_id, t0 + j + 1,
-                     t0 + j - m.view_step, m.t_send,
-                     float(d2[j]), float(g2[j])))
             m.respond(Reply(view=out_views[j], step=t0 + j + 1))
             if self.has_eval and (self.applied % self.eval_every == 0
                                   or self.applied == self.total):
                 evals.append((m.t_send, self.applied))
+        if telemetry and (evals or len(self._tele_spool) >= self._tele_cap):
+            self._flush_telemetry()
         for t_ev, step_ev in evals:
             # np.array(copy): np.asarray can alias the donated device
             # buffer on CPU, which the next apply would overwrite
             self.eval_rows.append((step_ev, t_ev,
                                    np.array(self.state["theta"])))
+
+    def _flush_telemetry(self):
+        """Convert the spooled device partials to tele_rows floats (the
+        only host sync on the telemetry path)."""
+        for t0, metas, d2, g2 in self._tele_spool:
+            d2 = np.asarray(d2)
+            g2 = np.asarray(g2)
+            for j, (idx, wid, vstep, t_send) in enumerate(metas):
+                self.tele_rows.append(
+                    (idx, wid, t0 + j + 1, t0 + j - vstep, t_send,
+                     float(d2[j]), float(g2[j])))
+        self._tele_spool.clear()
 
     def _pull_reply(self, m) -> int:
         import jax.numpy as jnp
@@ -575,6 +631,12 @@ def server_main(conn, shm_name, layout, sid, job):
         server.warm()
         conn.send(("ready", None))
         run_serve_loop(server)
+        if server.telemetry:
+            try:
+                server._flush_telemetry()
+            except BaseException as e:  # noqa: BLE001 - keep 1st error
+                if server.error is None:
+                    server.error = e
 
         def _reject_until_shutdown():
             # reject stragglers until the parent confirms every worker
@@ -690,7 +752,9 @@ def worker_main(conn, shm_name, layout, lock, wid, job):
             now_fn = (lambda: time.monotonic() - t0)
         pin = job["pin_schedule"]
         total = job["total"]
+        depth = job.get("pipeline_depth", 0)
         applied_cells = ctl_i[C_CTL + S:C_CTL + 2 * S]
+        pending = deque()   # pull-ahead: posted-but-unsettled tokens
         grads_sent = 0
         counter = 0
         while (not stop.is_set()
@@ -705,16 +769,48 @@ def worker_main(conn, shm_name, layout, lock, wid, job):
                 batch = next_batch(wid, counter)
                 counter += 1
                 grads = grad_jit(views, batch)
-                out = fanout.rpc(wid, grads, views if job["telemetry"]
-                                 else None, view_step, now_fn(), stop,
-                                 job["rpc_timeout"])
+                if depth == 0:
+                    out = fanout.rpc(wid, grads,
+                                     views if job["telemetry"] else None,
+                                     view_step, now_fn(), stop,
+                                     job["rpc_timeout"])
+                else:
+                    # pull-ahead: publish the push and move on; the
+                    # reply is collected only once more than `depth`
+                    # RPCs are outstanding
+                    tok = fanout.rpc_post(
+                        wid, grads, views if job["telemetry"] else None,
+                        view_step, now_fn(), stop)
             finally:
                 if pin:
                     ctl_i[C_TURN] += 1
-            if out is None:
+            if depth == 0:
+                if out is None:
+                    break
+                views, view_step = out
+                grads_sent += 1
+                continue
+            if tok is None:
                 break
-            views, view_step = out
-            grads_sent += 1
+            pending.append(tok)
+            ok = True
+            while ok and len(pending) > depth:
+                out = fanout.rpc_await(pending.popleft(), wid, stop,
+                                       job["rpc_timeout"])
+                if out is None:
+                    ok = False
+                else:
+                    views, view_step = out
+                    grads_sent += 1
+            if not ok:
+                break
+        # settle stragglers so every applied grad is counted (end-of-run
+        # rejections resolve to None)
+        while pending:
+            out = fanout.rpc_await(pending.popleft(), wid, stop,
+                                   job["rpc_timeout"])
+            if out is not None:
+                grads_sent += 1
         conn.send(("done", {"grads_sent": grads_sent}))
         conn.close()
     except BaseException:  # noqa: BLE001 - shipped to the parent
@@ -789,6 +885,15 @@ def validate_process_config(algo, cfg):
     if cfg.pin_schedule and cfg.faults is not None \
             and cfg.faults.any_dropout:
         raise ValueError("pin_schedule cannot combine with dropout")
+    if cfg.pipeline_depth > 0:
+        cap = cfg.mailbox_capacity or max(4, 2 * cfg.num_workers)
+        need = (cfg.pipeline_depth + 1) * cfg.num_workers
+        if need > cap:
+            raise ValueError(
+                f"pipeline_depth={cfg.pipeline_depth} can keep "
+                f"{need} RPCs in flight but the shm ring holds only "
+                f"{cap} slots; raise mailbox_capacity to at least "
+                f"{need}")
 
 
 def run_cluster_procs(algo, grad_fn, params0, next_batch, cfg,
@@ -870,7 +975,7 @@ def run_cluster_procs(algo, grad_fn, params0, next_batch, cfg,
         exec_model=cfg.exec_model, time_scale=cfg.time_scale,
         telemetry=telemetry, rpc_timeout=cfg.rpc_timeout,
         pin_schedule=cfg.pin_schedule, total=cfg.total_grads,
-        jax_cache=jax_cache)
+        pipeline_depth=cfg.pipeline_depth, jax_cache=jax_cache)
 
     servers, workers = [], []
     server_conns, worker_conns = [], []

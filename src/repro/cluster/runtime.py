@@ -70,6 +70,16 @@ class ClusterConfig:
     # modes): makes a run schedule-deterministic on BOTH backends, which
     # is what the cross-backend bit-exactness tests compare under
     pin_schedule: bool = False
+    # worker pull-ahead (live modes): each worker keeps up to this many
+    # pushes in flight, computing its next gradient against the newest
+    # reply it HAS — the RPC round trip overlaps gradient compute at the
+    # cost of exactly `depth` extra designed staleness (the paper's
+    # pipeline-induced-momentum regime).  0 = today's synchronous
+    # push-pull, bit-exact; deterministic mode requires 0 (the virtual
+    # clock serializes every RPC).  pin_schedule composes with depth=1:
+    # the message ORDER stays round-robin-pinned, only the view each
+    # gradient is computed against ages by one reply.
+    pipeline_depth: int = 0
 
 
 def run_cluster(
@@ -114,6 +124,14 @@ def run_cluster(
             and cfg.faults.any_dropout:
         raise ValueError("pin_schedule cannot combine with dropout (an "
                          "offline worker would wedge the turn gate)")
+    if cfg.pipeline_depth < 0:
+        raise ValueError(f"pipeline_depth must be >= 0, "
+                         f"got {cfg.pipeline_depth}")
+    if cfg.pipeline_depth > 0 and cfg.mode == "deterministic":
+        raise ValueError("pipeline_depth > 0 requires a live mode "
+                         "(deterministic mode serializes every RPC "
+                         "through the virtual clock, so pull-ahead "
+                         "would deadlock it); use paced or free")
     if cfg.backend == "process":
         from .procs import run_cluster_procs
         return run_cluster_procs(algo, grad_fn, params0, next_batch, cfg,
@@ -206,7 +224,7 @@ def run_cluster(
             total_grads=cfg.total_grads, coalesce=coalesce,
             use_kernel=use_kernel, record_telemetry=cfg.record_telemetry,
             eval_fn=eval_fn, eval_every=cfg.eval_every, injector=injector,
-            time_fn=time_fn)
+            time_fn=time_fn, pipeline_depth=cfg.pipeline_depth)
 
     # -- observability wiring (None-guarded: zero hot-path cost when off)
     publisher = None
@@ -234,10 +252,10 @@ def run_cluster(
                        "busy_s/master": lambda: master.busy_s}
         publisher = SnapshotPublisher(sources, registry=metrics)
 
-    # warm-up pulls, in worker order on one thread (engine semantics)
+    # warm-up pulls, in worker order on one thread (engine semantics);
+    # master.warm() runs AFTER the hot-row ranges are validated below,
+    # so the declared row-sliced view closures pre-compile too
     init_views = [master.initial_view(i) for i in range(n)]
-    if not deterministic:
-        master.warm()      # compile fused variants before the clock starts
 
     clock = None
     draw = None
@@ -340,6 +358,12 @@ def run_cluster(
                     old.at[a:b].set(piece))
             hot_rows[wid] = (r0, r1)
 
+    if not deterministic:
+        # compile fused variants AND the declared hot-row view closures
+        # before the clock starts — no trace lands mid-run (tested)
+        master.warm(hot_ranges=tuple(sorted(
+            {hr for hr in hot_rows if hr is not None})))
+
     gate = TurnGate(n, stop) if cfg.pin_schedule else None
     workers = [
         Worker(wid, master=master, mailbox=mailbox, grad_jit=grad_jit,
@@ -348,7 +372,7 @@ def run_cluster(
                now_fn=now_fn, time_scale=cfg.time_scale, injector=injector,
                telemetry=cfg.record_telemetry, rpc_timeout=cfg.rpc_timeout,
                hot_rows=hot_rows[wid], merge_view=merge_views[wid],
-               gate=gate)
+               gate=gate, pipeline_depth=cfg.pipeline_depth)
         for wid in range(n)
     ]
 

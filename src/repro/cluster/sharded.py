@@ -344,15 +344,18 @@ class _ShardServer:
             return fn
         fa = self.fa
 
-        def fused(flat, ids, nows, grads, views):
-            g = jnp.stack(grads)
+        def fused(flat, ids, nows, g, views):
+            # stacked wire format: g (and views) arrive as ONE
+            # (k, rows, 128) buffer, stacked outside the jit (see
+            # Master._get_fused_flat); under rebalancing the stack is
+            # full-height and this shard's current rows slice off here
             if rows is not None:
                 g = g[:, rows[0]:rows[1]]
             flat, hats, pres = fa.apply_batch(flat, ids, g, nows,
                                               telemetry=telemetry)
             out_views = tuple(hats[j] for j in range(k))
             if telemetry:
-                d = pres - jnp.stack(views)
+                d = pres - views
                 # partial sums only: the owner adds the S shard partials
                 # and takes the sqrt once per message
                 return (flat, out_views, jnp.sum(d * d, axis=(1, 2)),
@@ -364,7 +367,7 @@ class _ShardServer:
         self._fused[key] = fn
         return fn
 
-    def warm(self):
+    def warm(self, hot_ranges: tuple = ()):
         if self.owner.rebalancer is not None:
             # rebalance wire mode: full packed gradients on the wire
             zero = jnp.zeros((self.owner.spec.rows,
@@ -385,15 +388,23 @@ class _ShardServer:
         k = 1
         while k <= self.coalesce:
             fn = self._get_fused(k, self.telemetry)
-            # the fused pass donates its state argument; warm on a copy
+            # stacked wire format; the fused pass donates its state
+            # argument, so warm on a copy
+            g = jnp.zeros((k,) + zero.shape, zero.dtype)
             out = fn(jax.tree.map(jnp.copy, self.state),
                      jnp.zeros((k,), jnp.int32),
-                     jnp.zeros((k,), jnp.float32),
-                     tuple(zero for _ in range(k)),
-                     tuple(view for _ in range(k)) if self.telemetry
-                     else None)
+                     jnp.zeros((k,), jnp.float32), g,
+                     jnp.broadcast_to(view, (k,) + view.shape)
+                     if self.telemetry else None)
             jax.block_until_ready(jax.tree.leaves(out[0])[0])
             k *= 2
+        if not self.owner._sent_family:
+            # shard-local hot-row view closures (see Master.warm): the
+            # fan-out slices a declared (r0, r1) to this shard's range,
+            # so warm exactly the sliced keys pull replies will see
+            for r0, r1 in hot_ranges:
+                fn = self._view_rows_fn(int(r0), int(r1))
+                jax.block_until_ready(fn(self.state, jnp.int32(0)))
 
     def _apply_gap(self, work: list):
         """Gap-aware shard apply: the whole drained chunk, two norm
@@ -441,20 +452,28 @@ class _ShardServer:
         fn = self._get_fused(k, telemetry)
         ids = jnp.asarray([m.worker_id for m in work], jnp.int32)
         nows = jnp.asarray([m.t_send for m in work], jnp.float32)
-        grads = tuple(m.grad for m in work)
-        views = tuple(m.view for m in work) if telemetry else None
+        grads = jnp.stack([m.grad for m in work])    # stacked wire format
+        views = (jnp.stack([m.view for m in work]) if telemetry else None)
         t0 = self._step
         st, out_views, d2, g2 = fn(self.state, ids, nows, grads, views)
         if self.owner.rebalancer is not None:
-            # rebalancing steers by busy_s, but JAX dispatch is async —
-            # without a sync the heavy shard's compute finishes outside
-            # its timed window and busy_s measures only dispatch.  Sync
-            # here (inside run_serve_loop's busy_s interval) so the
-            # gauge is proportional to this shard's actual row load.
+            # SYNC AUDIT (survives): rebalancing steers by busy_s, but
+            # JAX dispatch is async — without a sync the heavy shard's
+            # compute finishes outside its timed window and busy_s
+            # measures only dispatch.  Sync here (inside run_serve_loop's
+            # busy_s interval) so the gauge is proportional to this
+            # shard's actual row load.
             jax.block_until_ready(st["theta"])
         self.state = st
         self._step = t0 + k
-        if telemetry:               # one host transfer per batch per shard
+        if telemetry:
+            # SYNC AUDIT (survives): unlike the single master's deferred
+            # spool, the S>1 partial sums must convert to floats HERE —
+            # the _ReplyGroup contract flushes a telemetry row the moment
+            # the last shard contributes and BEFORE the worker unblocks,
+            # so deferring the host transfer would close groups without
+            # their partials (a silent tele_dropped).  One transfer per
+            # batch per shard, same as before.
             d2 = np.asarray(d2)
             g2 = np.asarray(g2)
         evals = []
@@ -483,19 +502,23 @@ class _ShardServer:
         if self.owner.rebalancer is not None:
             self.owner.rebalancer.at_watermark(self)
 
+    def _view_rows_fn(self, r0: int, r1: int):
+        fn = self._view_rows_jit.get((r0, r1))
+        if fn is None:
+            fa = self.fa
+            fn = jax.jit(lambda fl, i, a=r0, b=r1:
+                         fa.view_rows(fl, i, a, b))
+            self._view_rows_jit[(r0, r1)] = fn
+        return fn
+
     def _pull_reply(self, m: GradMsg) -> int:
         if m.rows is not None and not self.owner._sent_family:
             # hot-row pull over this shard's local-row intersection
             # (possibly empty); sent-snapshot members need the full-range
             # send below (it refreshes the worker's snapshot rows)
             r0, r1 = int(m.rows[0]), int(m.rows[1])
-            fn = self._view_rows_jit.get((r0, r1))
-            if fn is None:
-                fa = self.fa
-                fn = jax.jit(lambda fl, i, a=r0, b=r1:
-                             fa.view_rows(fl, i, a, b))
-                self._view_rows_jit[(r0, r1)] = fn
-            view = fn(self.state, jnp.int32(m.worker_id))
+            view = self._view_rows_fn(r0, r1)(self.state,
+                                              jnp.int32(m.worker_id))
             m.respond(Reply(view=view, step=self._step, rows=(r0, r1)))
             return r1 - r0
         view, self.state = self._send_jit(self.state,
@@ -659,9 +682,19 @@ class ShardedMaster:
             views.append(view)
         return tuple(views), self.step
 
-    def warm(self):
-        for srv in self.shards_:
-            srv.warm()
+    def warm(self, hot_ranges: tuple = ()):
+        for srv, (s0, s1) in zip(self.shards_, self.ranges):
+            if hot_ranges and self.rebalancer is None:
+                # mirror FanoutMailbox's part_rows slicing exactly, so
+                # the warmed cache keys match the shard-local ranges
+                # pull replies will carry at run time
+                local = tuple(
+                    (max(h0, s0) - s0,
+                     max(min(h1, s1), max(h0, s0)) - s0)
+                    for h0, h1 in hot_ranges)
+            else:
+                local = ()
+            srv.warm(hot_ranges=local)
 
     # -- cross-shard aggregation (off the hot path) ----------------------
     def _record_telemetry(self, *, worker, step, lag, t, d2, g2):

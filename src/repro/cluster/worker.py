@@ -15,6 +15,16 @@ The push is a fused push-pull RPC: the reply carries the post-update view
 (the engine's receive->send semantics), so a worker never computes two
 gradients on the same view.
 
+``pipeline_depth`` (live modes) turns the RPC into a pull-ahead
+pipeline: the worker keeps up to ``depth`` pushes in flight and computes
+its next gradient against the newest reply it HAS — the RPC round trip
+overlaps with gradient compute instead of being dead time, at the cost
+of exactly ``depth`` extra designed staleness (the paper's
+asynchrony-begets-momentum regime, which DANA's look-ahead is built to
+tame).  ``depth=0`` is today's fully synchronous push-pull, bit-exact.
+Each ``GradMsg`` is its own reply slot (see ``mailbox``), so pull-ahead
+needs no protocol change — the worker just defers ``wait_reply``.
+
 The worker is oblivious to the master's layout: view and gradient are
 whatever its ``grad_jit`` produces/consumes — a pytree (tree master), a
 flat (R, 128) buffer (flat master), or a range-ordered tuple of row
@@ -25,6 +35,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from typing import Any, Callable
 
 from ..obs import trace
@@ -77,7 +88,8 @@ class Worker(threading.Thread):
                  telemetry: bool = True, rpc_timeout: float = 120.0,
                  hot_rows: tuple[int, int] | None = None,
                  merge_view: Callable | None = None,
-                 gate: TurnGate | None = None):
+                 gate: TurnGate | None = None,
+                 pipeline_depth: int = 0):
         super().__init__(name=f"ps-worker-{wid}", daemon=True)
         self.wid = wid
         self.master = master
@@ -101,6 +113,12 @@ class Worker(threading.Thread):
         self.hot_rows = (hot_rows if merge_view is not None else None)
         self.merge_view = merge_view
         self.gate = gate
+        # pull-ahead: up to this many pushes stay in flight (live modes;
+        # deterministic mode serializes through the virtual clock and
+        # always runs depth 0)
+        self.pipeline_depth = (0 if mode == "deterministic"
+                               else max(0, pipeline_depth))
+        self._pending: deque[GradMsg] = deque()
         self._view, self._view_step = init_view
         self.error: BaseException | None = None
         self.grads_sent = 0
@@ -117,6 +135,41 @@ class Worker(threading.Thread):
             self.stop.set()
             if self.clock is not None:
                 self.clock.stop()
+
+    # -- pipelined RPC halves (pipeline_depth > 0) -----------------------
+    def _post(self, grad, t_send: float) -> GradMsg | None:
+        """Enqueue one push without waiting for its reply (the pull-ahead
+        half-RPC); returns the in-flight message, or None on shutdown."""
+        msg = GradMsg(self.wid, grad,
+                      self._view if (self.telemetry and grad is not None)
+                      else None,
+                      self._view_step, t_send)
+        if not self.mailbox.put(msg, self.stop):
+            return None
+        if trace.enabled:
+            trace.instant("rpc_post", "worker", worker=self.wid)
+        return msg
+
+    def _await(self, msg: GradMsg) -> bool:
+        """Settle one in-flight push: wait for its reply and adopt the
+        fresher view."""
+        t0 = time.perf_counter() if trace.enabled else 0.0
+        reply = msg.wait_reply(self.rpc_timeout)
+        if trace.enabled:
+            trace.complete("rpc_await", "worker", t0,
+                           time.perf_counter() - t0)
+        if reply is None:
+            return False
+        self._view, self._view_step = reply.view, reply.step
+        if msg.grad is not None:
+            self.grads_sent += 1
+        return True
+
+    def _drain_pending(self) -> bool:
+        ok = True
+        while self._pending:
+            ok = self._await(self._pending.popleft()) and ok
+        return ok
 
     # -- one RPC ---------------------------------------------------------
     def _push(self, grad, t_send: float) -> bool:
@@ -178,6 +231,15 @@ class Worker(threading.Thread):
 
     # -- paced / free modes ----------------------------------------------
     def _run_live(self):
+        try:
+            self._live_loop()
+        finally:
+            # settle any still-in-flight pull-ahead pushes so applied
+            # grads are counted (end-of-run rejections resolve to None
+            # and the master's shutdown path unblocks stragglers)
+            self._drain_pending()
+
+    def _live_loop(self):
         counter = 0
         while (not self.stop.is_set()
                and self.master.applied < self.master.total):
@@ -189,6 +251,10 @@ class Worker(threading.Thread):
                     if trace.enabled:
                         trace.instant("dropout", "faults", worker=self.wid,
                                       back_step=back)
+                    # an offline worker abandons its pipeline first: the
+                    # in-flight pushes settle, then the stale view is
+                    # discarded by the rejoin pull
+                    self._drain_pending()
                     if not self._await_rejoin(back):
                         return
                     if trace.enabled:
@@ -212,10 +278,21 @@ class Worker(threading.Thread):
                 if trace.enabled:
                     trace.complete("grad", "worker", tg,
                                    time.perf_counter() - tg)
-                ok = self._push(grad, self.now_fn())
+                if self.pipeline_depth == 0:
+                    ok = self._push(grad, self.now_fn())
+                else:
+                    # pull-ahead: post now, settle the OLDEST in-flight
+                    # push only once more than `depth` are outstanding —
+                    # the RPC round trip hides behind the next gradient
+                    msg = self._post(grad, self.now_fn())
+                    ok = msg is not None
+                    if ok:
+                        self._pending.append(msg)
             finally:
                 if self.gate is not None:
                     self.gate.advance()
+            while ok and len(self._pending) > self.pipeline_depth:
+                ok = self._await(self._pending.popleft())
             if not ok:
                 return
 

@@ -702,6 +702,13 @@ class FlatAlgorithm:
         nows (k,) f32 message timestamps (the rate-weighted member's
         telemetry; zeros when absent).
         Returns (flat', hats (k,R,128), thetas_pre or None).
+
+        The stacked ``g_flat`` IS the wire format: every serve loop
+        (single, sharded, process) stacks its drained batch into one
+        contiguous (k, R, 128) buffer on the host side — the process
+        backend stages shm ring slices into a pinned buffer and ships
+        ONE device transfer per batch — so no fused closure ever
+        re-stacks k separate arrays inside jit.
         """
         k = g_flat.shape[0]
         if (self.fam.gap_aware and self.spec is not None

@@ -102,6 +102,12 @@ def main(argv=None):
                     help="process = shard servers + workers as OS "
                          "processes over shared-memory rings (live "
                          "modes, flat kernel path only)")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="worker pull-ahead depth (live modes): keep up "
+                         "to this many pushes in flight per worker — "
+                         "hides the RPC round trip at the cost of that "
+                         "much extra designed staleness (0 = "
+                         "synchronous push-pull)")
     ap.add_argument("--pin-schedule", action="store_true",
                     help="pin live-mode pushes to strict round-robin "
                          "worker order (schedule-deterministic on both "
@@ -156,7 +162,8 @@ def main(argv=None):
         time_scale=args.time_scale, faults=faults,
         record_telemetry=not args.no_telemetry,
         use_kernel=False if args.no_kernel else None,
-        backend=args.backend, pin_schedule=args.pin_schedule)
+        backend=args.backend, pin_schedule=args.pin_schedule,
+        pipeline_depth=args.pipeline_depth)
     if args.backend == "process" and args.preset == "lm":
         raise SystemExit("--backend process needs a picklable grad_fn; "
                          "the lm preset builds a closure (use the "

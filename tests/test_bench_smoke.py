@@ -69,6 +69,13 @@ def test_quick_cluster_covers_memtier_sweep():
     assert 8 in ns and max(ns) >= 48
 
 
+def test_quick_cluster_covers_pipeline_section():
+    """The cluster smoke must run the hot-path pipeline section: the
+    QUICK argv must not pass --skip-pipeline, so the stacked-wire,
+    pull-ahead, and staleness-shift claims stay in the CI trajectory."""
+    assert "--skip-pipeline" not in bench_run.QUICK["cluster"]
+
+
 def test_quick_cluster_covers_dana_hetero():
     """The cluster smoke must sweep dana-hetero: its rate-weighted send
     is the PR-5 weighted-slab reduction path (receive batch + send
@@ -117,6 +124,13 @@ def test_run_quick_kernels_and_cluster_appends_trajectory(tmp_path,
     assert cl["prefetch_over_full_slab_x"] > 1.0
     assert cl["slab_traffic_scales_with_u"]
     assert cl["skewed_pull_saving_x"] > 1.0
+    # the PR-9 hot-path pipeline claims: present and non-degenerate —
+    # finite positive speedup ratios, and the pull-ahead staleness dial
+    # at depth 1 shifts the pinned single-worker lag by ~+1 (exactly
+    # (G-1)/G over G messages; the unit tests pin the exact series)
+    assert cl["stacked_over_tuple_x"] > 0.0
+    assert cl["pullahead_over_sync_x"] > 0.0
+    assert 0.5 < cl["staleness_shift_depth1"] <= 1.0
     trail = json.loads(traj.read_text())
     assert isinstance(trail, list) and len(trail) == 1
     entry = trail[0]

@@ -151,7 +151,7 @@ def test_kernel_routing_matches_algorithm_path():
                                                    None)
     s_f, v_f, _, _ = m_flat._get_fused_flat(k, False)(
         m_flat._flat_state, ids, nows,
-        tuple(spec.pack(g) for g in grads), None)   # flat wire format
+        jnp.stack([spec.pack(g) for g in grads]), None)  # stacked wire
     v_f = tuple(spec.unpack(v) for v in v_f)
     s_f = m_flat._flat_algo.tree_state(s_f)
     for s_other in (s_k, s_f):

@@ -323,7 +323,8 @@ def _check_flat_vs_tree(name, ids_l, schedule=None, k_batch=None,
         s_t, vt, _, _ = m_tree._get_fused(k, False)(s_t, ids, nows,
                                                     chunk, None)
         s_f, vf, _, _ = m_flat._get_fused_flat(k, False)(
-            s_f, ids, nows, tuple(spec.pack(g) for g in chunk), None)
+            s_f, ids, nows, jnp.stack([spec.pack(g) for g in chunk]),
+            None)
         v_t.extend(vt)
         v_f.extend(spec.unpack(v) for v in vf)
     tree_f = m_flat._flat_algo.tree_state(s_f)
@@ -406,8 +407,8 @@ def test_flat_fused_telemetry_matches_tree():
                                                        grads, views)
     _, _, gaps_f, gn_f, _ = m_flat._get_fused_flat(k, True)(
         m_flat._flat_state, ids, nows,
-        tuple(spec.pack(g) for g in grads),
-        tuple(spec.pack(v) for v in views))
+        jnp.stack([spec.pack(g) for g in grads]),
+        jnp.stack([spec.pack(v) for v in views]))
     np.testing.assert_allclose(np.asarray(gaps_f), np.asarray(gaps_t),
                                rtol=1e-5, atol=1e-7)
     np.testing.assert_allclose(np.asarray(gn_f), np.asarray(gn_t),
@@ -639,7 +640,7 @@ def test_flat_fused_donates_and_aliases_buffers():
     ptr_v = st["v"].unsafe_buffer_pointer()
     ids = jnp.asarray([0, 1, 2, 3], jnp.int32)
     nows = jnp.zeros((4,), jnp.float32)
-    grads = tuple(spec.pack(g) for g in _grads(4, seed=31))
+    grads = jnp.stack([spec.pack(g) for g in _grads(4, seed=31)])
     out_state, _, _, _ = fn(st, ids, nows, grads, None)
     assert out_state["theta"].unsafe_buffer_pointer() == ptr_theta
     assert out_state["v"].unsafe_buffer_pointer() == ptr_v
@@ -658,7 +659,7 @@ def test_pull_views_survive_donation():
     m._flat_state, _, _, _ = fn(
         m._flat_state, jnp.asarray([0], jnp.int32),
         jnp.zeros((1,), jnp.float32),
-        (spec.pack(_grads(1, seed=5)[0]),), None)
+        spec.pack(_grads(1, seed=5)[0])[None], None)
     np.testing.assert_array_equal(np.asarray(view), before)
 
 

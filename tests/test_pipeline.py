@@ -1,0 +1,188 @@
+"""Hot-path pipeline tests: stacked wire batches, the deferred
+telemetry flush, hot-row warm-up, and worker pull-ahead.
+
+The contracts under test:
+
+* **deferred flush bit-identity** — spooling telemetry device-side and
+  flushing at eval watermarks must not change a single History row:
+  under a pinned schedule the threaded and process backends still agree
+  exactly at ``pipeline_depth=0``.
+* **hot-row warm-up** — declared ``ClusterConfig.hot_rows`` ranges get
+  their ``view_rows`` closures compiled by ``warm``; serving a hot-row
+  pull afterwards must not trace anything new (a mid-run retrace is a
+  multi-ms stall on the serve hot path).
+* **pull-ahead staleness dial** — at ``pipeline_depth=1`` a pinned
+  single-worker run records lag 0, 1, 1, ..., 1: exactly +1 designed
+  staleness after the first message, on both backends, and the
+  sent-snapshot staleness series follows it.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, Mailbox, Master, run_cluster)
+from repro.core import GammaModel, HyperParams, make_algorithm
+from repro.core.metrics import History
+from repro.data.synthetic import ClassificationTask
+from repro.models.toy import ClassifierGradFn, make_classifier_fns
+
+HP = HyperParams(lr=0.05, momentum=0.9)
+TASK = ClassificationTask(dim=8, num_classes=4, batch_size=8, seed=3)
+INIT, _, MAKE_EVAL = make_classifier_fns([8, 16, 4])
+PARAMS0 = INIT(jax.random.PRNGKey(0))
+GRAD_FN = ClassifierGradFn([8, 16, 4])      # picklable: both backends
+EVAL_FN = MAKE_EVAL(TASK.eval_batch(32))
+
+
+def _cfg(backend, *, grads=24, workers=2, **kw):
+    return ClusterConfig(num_workers=workers, total_grads=grads,
+                         eval_every=8, mode="free",
+                         exec_model=GammaModel(seed=5), backend=backend,
+                         rpc_timeout=60.0, **kw)
+
+
+def _run(name, backend, **kw):
+    stats = {}
+    algo = make_algorithm(name, HP)
+    hist = run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch,
+                       _cfg(backend, **kw), EVAL_FN, stats_out=stats)
+    return hist, stats
+
+
+def _leaves(params):
+    return [np.asarray(x) for x in jax.tree.leaves(params)]
+
+
+# ---------------------------------------------------------------------------
+# deferred telemetry flush: History rows identical across backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["dana-zero", "dc-asgd"])
+def test_deferred_flush_bit_identity(name):
+    """Both serve loops now spool telemetry device-side and flush at
+    eval watermarks; under the round-robin pin the two backends must
+    still produce IDENTICAL schedule telemetry and bit-exact params at
+    depth 0 — any reorder, drop, or recompute in the deferred flush
+    would break this."""
+    ht, st = _run(name, "thread", pin_schedule=True, pipeline_depth=0)
+    hp, sp = _run(name, "process", pin_schedule=True, pipeline_depth=0)
+    assert hp.worker == ht.worker
+    assert hp.lag == ht.lag
+    assert hp.step == ht.step
+    np.testing.assert_allclose(hp.gap, ht.gap, rtol=1e-6)
+    np.testing.assert_allclose(hp.grad_norm, ht.grad_norm, rtol=1e-6)
+    # sent-snapshot member: the staleness series rides the same flush
+    if name == "dc-asgd":
+        assert ht.staleness == [float(l) for l in ht.lag]
+        assert hp.staleness == [float(l) for l in hp.lag]
+    for a, b in zip(_leaves(ht.final_params), _leaves(hp.final_params)):
+        np.testing.assert_array_equal(a, b)
+    assert st["applied"] == sp["applied"] == 24
+
+
+# ---------------------------------------------------------------------------
+# hot-row warm-up: no retrace after warm
+# ---------------------------------------------------------------------------
+def test_hot_row_warm_pins_jit_cache():
+    """``Master.warm(hot_ranges=...)`` must compile the declared
+    hot-row view closures up front; the first real hot-row pull then
+    hits the cache — zero new traces on the serve hot path."""
+    algo = make_algorithm("dana-zero", HP)
+    master = Master(algo, algo.init(PARAMS0, 4), mailbox=Mailbox(),
+                    history=History(), stop=threading.Event(),
+                    total_grads=100, coalesce=4, use_kernel=True,
+                    record_telemetry=False)
+    master.warm(hot_ranges=((0, 8),))
+    assert (0, 8) in master._view_rows_jit
+    fn = master._view_rows_fn(0, 8)
+    assert fn._cache_size() == 1                 # warmed, exactly once
+    n_view, n_fused = len(master._view_rows_jit), len(master._fused)
+    out = fn(master._flat_state, jnp.int32(1))
+    jax.block_until_ready(out)
+    assert out.shape[-2] == 8
+    assert fn._cache_size() == 1                 # served from cache
+    assert len(master._view_rows_jit) == n_view
+    assert len(master._fused) == n_fused
+
+
+def test_hot_row_warm_through_runtime():
+    """End-to-end: a threaded run with declared hot_rows completes and
+    the hot-row replies still merge correctly (the warm path changed the
+    compile schedule, not the protocol)."""
+    hist, stats = _run("dana-zero", "thread", workers=2, grads=24,
+                       hot_rows=((0, 8), (0, 8)))
+    assert stats["applied"] == 24
+
+
+# ---------------------------------------------------------------------------
+# worker pull-ahead
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_pullahead_staleness_shift(backend):
+    """The designed-staleness dial, measured exactly: one pinned
+    worker, coalesce 1.  depth 0 -> every gradient computed on the
+    fresh reply (lag 0 everywhere); depth 1 -> gradient i is computed
+    on reply i-2's view (lag 1 after the first message): the recorded
+    lag series shifts by exactly +1."""
+    G = 16
+    h0, s0 = _run("dc-asgd", backend, workers=1, grads=G, coalesce=1,
+                  pin_schedule=True, pipeline_depth=0)
+    h1, s1 = _run("dc-asgd", backend, workers=1, grads=G, coalesce=1,
+                  pin_schedule=True, pipeline_depth=1)
+    assert h0.lag == [0] * G
+    assert h1.lag == [0] + [1] * (G - 1)
+    # the sent-snapshot staleness series follows the lag shift (the
+    # lane restamps per reply under pull-ahead, so the recorders fall
+    # back to lag for the sent family)
+    assert h1.staleness == [float(l) for l in h1.lag]
+    assert s0["applied"] == s1["applied"] == G
+
+
+def test_pullahead_free_run_completes_threaded():
+    """Multi-worker free-mode pull-ahead: every posted push settles
+    (the drain path), every gradient is applied and counted."""
+    hist, stats = _run("dana-zero", "thread", workers=3, grads=30,
+                       pipeline_depth=1)
+    assert stats["applied"] == 30
+    assert sum(stats["grads_per_worker"].values()) == 30
+
+
+def test_pullahead_free_run_completes_process():
+    hist, stats = _run("dana-zero", "process", workers=2, grads=24,
+                       pipeline_depth=1)
+    assert stats["applied"] == 24
+    assert sum(stats["grads_per_worker"].values()) == 24
+
+
+# ---------------------------------------------------------------------------
+# configuration surface
+# ---------------------------------------------------------------------------
+def test_pipeline_depth_rejects_deterministic():
+    algo = make_algorithm("dana-zero", HP)
+    cfg = ClusterConfig(num_workers=2, total_grads=8,
+                        mode="deterministic",
+                        exec_model=GammaModel(seed=5), pipeline_depth=1)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg)
+
+
+def test_pipeline_depth_rejects_negative():
+    algo = make_algorithm("dana-zero", HP)
+    cfg = ClusterConfig(num_workers=2, total_grads=8, mode="free",
+                        exec_model=GammaModel(seed=5),
+                        pipeline_depth=-1)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg)
+
+
+def test_pipeline_depth_rejects_undersized_shm_ring():
+    """The process backend needs (depth+1) slots per worker in the shm
+    ring; an explicit mailbox_capacity below that must fail fast, not
+    deadlock the ring."""
+    algo = make_algorithm("dana-zero", HP)
+    cfg = _cfg("process", workers=2, pipeline_depth=1,
+               mailbox_capacity=2)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg)

@@ -81,7 +81,8 @@ def _drive_single(name, n):
         fn = master._get_fused_flat(k, False)
         st, views, _, _ = fn(st, jnp.asarray(ids, jnp.int32),
                              jnp.zeros((k,), jnp.float32),
-                             tuple(spec.pack(g) for g in _grads(k, seed)),
+                             jnp.stack([spec.pack(g)
+                                        for g in _grads(k, seed)]),
                              None)
         out.extend(views)
     master._flat_state = st
@@ -110,7 +111,8 @@ def _drive_sharded(name, n, shards, perm_shard=None, perm=None):
                 srv.state,
                 jnp.asarray([ids[j] for j in order], jnp.int32),
                 jnp.zeros((k,), jnp.float32),
-                tuple(g_flat[j][srv.r0:srv.r1] for j in order), None)
+                jnp.stack([g_flat[j][srv.r0:srv.r1] for j in order]),
+                None)
             srv.state = st
             per_shard.append(views)
         out.extend(
