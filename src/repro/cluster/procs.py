@@ -287,14 +287,39 @@ class ShmFanout:
         self.ctl = layout.ctl_i(buf)
         self.rings = [layout.ring(buf, s) for s in range(layout.shards)]
 
+    def _reply_ready(self, token) -> bool:
+        """True when every shard has published its reply for ``token`` —
+        its ``rpc_await`` will complete without spinning."""
+        slot, gen = token
+        return all(int(self.rings[s]["meta"][slot][M_REP]) == gen
+                   for s in range(self.layout.shards))
+
     def rpc_post(self, wid: int, grads, views, view_step: int,
-                 t_send: float, stop: _ShmStop):
+                 t_send: float, stop: _ShmStop, *, pending=None,
+                 on_settle=None, rpc_timeout=None):
         """The push half of the RPC: reserve a global index, copy the
         payload into every shard ring and publish — WITHOUT waiting for
         the replies.  Returns an opaque (slot, gen) token for
         ``rpc_await``, or None on shutdown.  Worker pull-ahead posts the
         next push before settling the previous one, so the RPC round
-        trip hides behind the next gradient compute."""
+        trip hides behind the next gradient compute.
+
+        ``pending`` (the caller's FIFO deque of posted-but-unsettled
+        tokens) is REQUIRED for deadlock freedom whenever the caller
+        keeps tokens in flight across posts: slots are assigned by a
+        global counter, so the reserved slot's previous occupant can be
+        one of the caller's OWN pending tokens — which only the caller's
+        ``rpc_await`` can consume — or another blocked worker's, closing
+        a wait cycle.  While spinning for the slot to free, the post
+        therefore settles the caller's pending tokens oldest-first as
+        soon as their replies are ready (a non-blocking check, so a
+        reply held up by an unpublished earlier slot never converts this
+        spin into an await), reporting each result through
+        ``on_settle(out)``.  A blocked poster thus never sits on
+        consumable tokens, which unwinds self-collisions and
+        cross-worker cycles alike.  ``rpc_timeout`` (seconds) bounds the
+        spin so a genuinely wedged slot raises TimeoutError instead of
+        hanging."""
         lay = self.layout
         cap = lay.cap
         with self.lock:
@@ -302,12 +327,25 @@ class ShmFanout:
             self.ctl[C_RSV] = idx + 1
         slot, gen = idx % cap, idx // cap + 1
         # wait for the slot's previous occupant to be fully consumed
+        deadline = (time.monotonic() + rpc_timeout
+                    if rpc_timeout is not None else None)
         spins = 0
         for s in range(lay.shards):
             meta = self.rings[s]["meta"][slot]
             while int(meta[M_CON]) != gen - 1:
                 if stop.is_set():
                     return None        # slot stays unpublished: see module doc
+                if pending and self._reply_ready(pending[0]):
+                    out = self.rpc_await(pending.popleft(), wid, stop,
+                                         rpc_timeout or 1.0)
+                    if on_settle is not None:
+                        on_settle(out)
+                    continue
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"worker {wid}: ring slot {slot} not freed in "
+                        f"{rpc_timeout}s (previous occupant never "
+                        f"consumed)")
                 spins = _pause(spins)
         for s in range(lay.shards):
             ring = self.rings[s]
@@ -362,7 +400,8 @@ class ShmFanout:
         (views, step) — range-ordered tuple of fresh per-shard view
         copies — or None on shutdown / rejection.  Raises TimeoutError
         like ``GradMsg.wait_reply``."""
-        token = self.rpc_post(wid, grads, views, view_step, t_send, stop)
+        token = self.rpc_post(wid, grads, views, view_step, t_send, stop,
+                              rpc_timeout=rpc_timeout)
         if token is None:
             return None
         return self.rpc_await(token, wid, stop, rpc_timeout)
@@ -630,13 +669,17 @@ def server_main(conn, shm_name, layout, sid, job):
             metrics=serve_instruments(reg), ctl_i=ctl_i, ctl_f=ctl_f)
         server.warm()
         conn.send(("ready", None))
-        run_serve_loop(server)
-        if server.telemetry:
-            try:
-                server._flush_telemetry()
-            except BaseException as e:  # noqa: BLE001 - keep 1st error
-                if server.error is None:
-                    server.error = e
+        try:
+            run_serve_loop(server)
+        finally:
+            # best-effort spool flush even when the serve loop raises,
+            # mirroring Master.serve: spooled telemetry outlives errors
+            if server.telemetry:
+                try:
+                    server._flush_telemetry()
+                except BaseException as e:  # noqa: BLE001 - keep 1st error
+                    if server.error is None:
+                        server.error = e
 
         def _reject_until_shutdown():
             # reject stragglers until the parent confirms every worker
@@ -756,6 +799,18 @@ def worker_main(conn, shm_name, layout, lock, wid, job):
         applied_cells = ctl_i[C_CTL + S:C_CTL + 2 * S]
         pending = deque()   # pull-ahead: posted-but-unsettled tokens
         grads_sent = 0
+        live = True
+
+        def _adopt(out):
+            # settle bookkeeping shared by the in-order awaits and the
+            # ready-settles rpc_post performs while blocked on a slot
+            nonlocal views, view_step, grads_sent, live
+            if out is None:
+                live = False        # end-of-run rejection / shutdown
+            else:
+                views, view_step = out
+                grads_sent += 1
+
         counter = 0
         while (not stop.is_set()
                and int(applied_cells.min()) < total):
@@ -777,10 +832,16 @@ def worker_main(conn, shm_name, layout, lock, wid, job):
                 else:
                     # pull-ahead: publish the push and move on; the
                     # reply is collected only once more than `depth`
-                    # RPCs are outstanding
+                    # RPCs are outstanding.  Passing `pending` lets a
+                    # blocked post settle ready replies in place — the
+                    # global slot counter can park this worker behind
+                    # its OWN unconsumed token (or another blocked
+                    # worker's), which only these settles can free
                     tok = fanout.rpc_post(
                         wid, grads, views if job["telemetry"] else None,
-                        view_step, now_fn(), stop)
+                        view_step, now_fn(), stop,
+                        pending=pending, on_settle=_adopt,
+                        rpc_timeout=job["rpc_timeout"])
             finally:
                 if pin:
                     ctl_i[C_TURN] += 1
@@ -793,16 +854,10 @@ def worker_main(conn, shm_name, layout, lock, wid, job):
             if tok is None:
                 break
             pending.append(tok)
-            ok = True
-            while ok and len(pending) > depth:
-                out = fanout.rpc_await(pending.popleft(), wid, stop,
-                                       job["rpc_timeout"])
-                if out is None:
-                    ok = False
-                else:
-                    views, view_step = out
-                    grads_sent += 1
-            if not ok:
+            while live and len(pending) > depth:
+                _adopt(fanout.rpc_await(pending.popleft(), wid, stop,
+                                        job["rpc_timeout"]))
+            if not live:
                 break
         # settle stragglers so every applied grad is counted (end-of-run
         # rejections resolve to None)

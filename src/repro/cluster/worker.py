@@ -233,7 +233,16 @@ class Worker(threading.Thread):
     def _run_live(self):
         try:
             self._live_loop()
-        finally:
+        except BaseException:
+            # settle best-effort, but a secondary drain failure (e.g.
+            # wait_reply timing out against an already-wedged master)
+            # must not replace the loop's own error in worker.error
+            try:
+                self._drain_pending()
+            except BaseException:  # noqa: BLE001 - root cause wins
+                self._pending.clear()
+            raise
+        else:
             # settle any still-in-flight pull-ahead pushes so applied
             # grads are counted (end-of-run rejections resolve to None
             # and the master's shutdown path unblocks stragglers)

@@ -157,6 +157,141 @@ def test_pullahead_free_run_completes_process():
 
 
 # ---------------------------------------------------------------------------
+# shm-ring pull-ahead deadlock freedom
+# ---------------------------------------------------------------------------
+def _make_shm_ring(rows=8, workers=2, cap=4):
+    from multiprocessing import shared_memory
+
+    from repro.cluster.procs import (ShmFanout, ShmLayout, ShmMailbox,
+                                     _ShmStop)
+    layout = ShmLayout([(0, rows)], num_workers=workers, cap=cap,
+                       telemetry=False)
+    shm = shared_memory.SharedMemory(create=True, size=layout.total)
+    ctl_i = layout.ctl_i(shm.buf)
+    ctl_i[:] = 0
+    layout.ctl_f(shm.buf)[:] = 0.0
+    stop = _ShmStop(ctl_i)
+    fanout = ShmFanout(layout, shm.buf, threading.Lock())
+    mailbox = ShmMailbox(layout, shm.buf, 0)
+    return shm, fanout, mailbox, stop
+
+
+def _close_shm(shm):
+    try:
+        shm.close()                 # numpy views may still pin the buffer
+    except BufferError:
+        pass
+    shm.unlink()
+
+
+def test_rpc_post_settles_own_blocking_token():
+    """Ring slots are assigned by a GLOBAL counter, so a worker that
+    falls ``cap`` reservations behind reserves a slot whose previous
+    occupant is its OWN unsettled pull-ahead token — only its own
+    ``rpc_await`` can free it.  ``rpc_post`` must settle the caller's
+    ready pending tokens while it spins, instead of self-deadlocking
+    (the n=2, depth=1, cap=4 default-config repro)."""
+    from collections import deque
+
+    from repro.cluster.mailbox import Reply
+    shm, fanout, mailbox, stop = _make_shm_ring()
+    try:
+        grad = [np.zeros((8, 128), np.float32)]
+        view = np.zeros((8, 128), np.float32)
+
+        def serve_all():
+            for m in mailbox.drain_nowait():
+                m.respond(Reply(view=view, step=1))
+
+        # worker 0 posts idx 0 and leaves it in flight (pull-ahead)
+        tok0 = fanout.rpc_post(0, grad, None, 0, 0.0, stop)
+        serve_all()
+        # worker 1 cycles the rest of the ring: idx 1..3 settled
+        for _ in range(3):
+            t = fanout.rpc_post(1, grad, None, 0, 0.0, stop)
+            serve_all()
+            assert fanout.rpc_await(t, 1, stop, 5.0) is not None
+        # worker 0's next post reserves idx 4 -> slot 0, blocked on its
+        # OWN tok0; the ready-settle path must drain it and proceed
+        pending = deque([tok0])
+        settled = []
+        tok4 = fanout.rpc_post(0, grad, None, 0, 0.0, stop,
+                               pending=pending, on_settle=settled.append,
+                               rpc_timeout=30.0)
+        assert tok4 is not None
+        assert not pending
+        assert len(settled) == 1 and settled[0] is not None
+        serve_all()
+        assert fanout.rpc_await(tok4, 0, stop, 5.0) is not None
+    finally:
+        _close_shm(shm)
+
+
+def test_rpc_post_times_out_on_wedged_slot():
+    """A slot whose occupant genuinely never frees (no server reply, so
+    the caller's pending token can't be settled either) must surface as
+    TimeoutError from the bounded spin, not an unbounded hang."""
+    from collections import deque
+    shm, fanout, mailbox, stop = _make_shm_ring()
+    try:
+        grad = [np.zeros((8, 128), np.float32)]
+        toks = [fanout.rpc_post(0, grad, None, 0, 0.0, stop)
+                for _ in range(4)]
+        with pytest.raises(TimeoutError, match="slot"):
+            fanout.rpc_post(0, grad, None, 0, 0.0, stop,
+                            pending=deque(toks), on_settle=lambda o: None,
+                            rpc_timeout=0.5)
+    finally:
+        _close_shm(shm)
+
+
+def test_drain_failure_does_not_mask_loop_error():
+    """If ``_live_loop`` dies with in-flight pull-ahead pushes, the
+    best-effort settle in ``_run_live`` may itself time out (nobody is
+    serving); ``worker.error`` must still record the ORIGINAL loop
+    error, not the secondary drain TimeoutError."""
+    from repro.cluster.worker import Worker
+
+    class _StubMaster:
+        applied, total, step = 0, 100, 0
+
+    boom = RuntimeError("boom")
+    calls = {"n": 0}
+
+    def next_batch(wid, counter):
+        if calls["n"] >= 1:
+            raise boom              # 2nd iteration: one push in flight
+        calls["n"] += 1
+        return None
+
+    w = Worker(0, master=_StubMaster(), mailbox=Mailbox(),
+               grad_jit=lambda v, b: v, next_batch=next_batch,
+               stop=threading.Event(), mode="free",
+               init_view=(np.zeros((4,), np.float32), 0),
+               rpc_timeout=0.2, pipeline_depth=1)
+    w.run()
+    assert w.error is boom
+    assert not w._pending
+
+
+def test_pullahead_paced_skewed_process_completes():
+    """End-to-end version of the reviewer repro: 2 paced workers with
+    heterogeneous gamma draws, depth=1, default 4-slot ring — the global
+    slot counter repeatedly parks the slow worker behind its own
+    in-flight token.  The run must complete, not wedge."""
+    stats = {}
+    algo = make_algorithm("dana-zero", HP)
+    cfg = ClusterConfig(num_workers=2, total_grads=24, eval_every=8,
+                        mode="paced", time_scale=1e-4,
+                        exec_model=GammaModel(seed=7), backend="process",
+                        rpc_timeout=60.0, pipeline_depth=1)
+    run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch, cfg, EVAL_FN,
+                stats_out=stats)
+    assert stats["applied"] == 24
+    assert sum(stats["grads_per_worker"].values()) == 24
+
+
+# ---------------------------------------------------------------------------
 # configuration surface
 # ---------------------------------------------------------------------------
 def test_pipeline_depth_rejects_deterministic():
