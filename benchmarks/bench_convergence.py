@@ -3,25 +3,35 @@
 Records the loss-vs-master-updates curve per algorithm at N workers and
 checks the paper's relative claim: DANA-DC >= DANA-Slim > the rest in
 convergence speed (area under the eval-loss curve).
+
+PR 10 grows this into the accuracy-at-scale benchmark on a REAL model:
+
+* ``--lm-*``: an async cluster sweep (workers x algorithms, including
+  the staleness-aware ``sa-asgd``) on the tiny-but-real transformer LM,
+  run through the LIVE cluster runtime on BOTH backends (``thread`` and
+  ``process``), recording final-loss-vs-N per algorithm.
+* ``--pack-*``: the worker-side pack-overhead micro-bench on the same
+  real LM pytree — the fused backward->wire emit (``FlatSpec.pack_fused``
+  inside the grad jit, one dispatch) against the cold tree-walk path
+  (a grad dispatch returning the 15-leaf pytree, then a separate
+  ``FlatSpec.pack`` dispatch).  The fused path must be bit-exact and
+  cheaper per step; both numbers land in the claims.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
+import jax
 import numpy as np
 
-from .common import PAPER_ALGOS, classifier_setup, print_csv, run_algo, \
-    save_json
+from .common import PAPER_ALGOS, classifier_setup, lm_setup, print_csv, \
+    run_algo, save_json
+
+LM_ALGOS = ("dana-zero", "dc-asgd", "sa-asgd")
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--grads", type=int, default=2000)
-    ap.add_argument("--algos", nargs="*", default=list(PAPER_ALGOS))
-    ap.add_argument("--out", default="results/bench_convergence.json")
-    args = ap.parse_args(argv)
-
+def _engine_section(args):
     setup = classifier_setup()
     curves = {}
     rows = []
@@ -46,8 +56,158 @@ def main(argv=None):
               if not a.startswith("dana")]
     claims = {"dana_fastest_convergence":
               bool(others and dana_auc <= min(others) * 1.02)}
+    return rows, curves, claims
+
+
+def _lm_cluster_section(args):
+    """Final-loss-vs-workers for a real LM over the live cluster."""
+    from repro.cluster import ClusterConfig, run_cluster
+    from repro.core.algorithms import make_algorithm
+    from repro.core.gamma import GammaModel
+    from repro.core.types import HyperParams
+
+    params0, grad_fn, next_batch, eval_fn = lm_setup(
+        seed=args.seed, batch_size=args.lm_batch)
+    loss0 = float(eval_fn(params0))
+    print(f"# lm cluster sweep: initial eval loss {loss0:.4f}", flush=True)
+    rows = []
+    for backend in args.lm_backends:
+        for n in args.lm_workers:
+            for name in args.lm_algos:
+                algo = make_algorithm(
+                    name, HyperParams(lr=args.lm_lr, momentum=0.9))
+                cfg = ClusterConfig(
+                    num_workers=n, total_grads=args.lm_grads,
+                    eval_every=max(args.lm_grads // 4, 1), mode="free",
+                    coalesce=2, backend=backend, record_telemetry=False,
+                    exec_model=GammaModel.homogeneous(seed=args.seed))
+                t0 = time.time()
+                hist = run_cluster(algo, grad_fn, params0, next_batch,
+                                   cfg, eval_fn)
+                rows.append({"backend": backend, "algo": name,
+                             "workers": n, "grads": args.lm_grads,
+                             "loss0": loss0,
+                             "final_loss": hist.final_loss(),
+                             "wall_s": time.time() - t0})
+                print(f"# lm {backend} {name} N={n}: "
+                      f"final={hist.final_loss():.4f} "
+                      f"({time.time() - t0:.1f}s)", flush=True)
+    print_csv(rows, ["backend", "algo", "workers", "grads", "loss0",
+                     "final_loss", "wall_s"])
+    # per backend: how many algorithms have a full final-loss-vs-N curve
+    # (>= 2 cluster sizes)?  The acceptance bar is >= 2 on BOTH backends.
+    curve_counts = {}
+    for b in args.lm_backends:
+        per_algo = {}
+        for r in rows:
+            if r["backend"] == b:
+                per_algo.setdefault(r["algo"], set()).add(r["workers"])
+        curve_counts[b] = sum(1 for ws in per_algo.values() if len(ws) >= 2)
+    claims = {
+        "lm_loss_decreases":
+            bool(rows and all(r["final_loss"] < loss0 for r in rows)),
+        "lm_two_algo_curves_per_backend": curve_counts,
+        "lm_both_backends":
+            bool({"thread", "process"} <= set(args.lm_backends)
+                 and all(curve_counts[b] >= 2
+                         for b in ("thread", "process"))),
+    }
+    return rows, claims
+
+
+def _pack_overhead_section(args):
+    """Fused backward->wire emit vs the cold tree-walk pack path."""
+    from repro.core.flat import FlatSpec
+
+    params0, grad_fn, next_batch, _ = lm_setup(
+        seed=args.seed, batch_size=args.pack_batch)
+    tokens = next_batch(0, 0)
+    spec = FlatSpec.from_tree(params0)
+
+    grad_jit = jax.jit(lambda p, t: grad_fn(p, t))
+    pack_jit = jax.jit(spec.pack)          # tree-walk reference
+    fused_jit = jax.jit(lambda p, t: spec.pack_fused(grad_fn(p, t)))
+
+    # warmup / compile + bit-exactness of the whole backward->wire path
+    g = grad_jit(params0, tokens)
+    jax.block_until_ready(g)
+    w_tree = np.asarray(pack_jit(g))
+    w_fused = np.asarray(fused_jit(params0, tokens))
+    bit_exact = bool(np.array_equal(w_tree, w_fused))
+
+    def med(fn):
+        ts = []
+        for _ in range(args.pack_reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    t_grad = med(lambda: grad_jit(params0, tokens))
+    t_tree = med(lambda: pack_jit(grad_jit(params0, tokens)))
+    t_fused = med(lambda: fused_jit(params0, tokens))
+    # pack overhead = whatever the step costs beyond the bare backward
+    over_tree = max(t_tree - t_grad, 0.0)
+    over_fused = max(t_fused - t_grad, 0.0)
+    row = {"rows": spec.rows, "leaves": len(spec.sizes),
+           "batch": args.pack_batch, "reps": args.pack_reps,
+           "grad_ms": t_grad * 1e3, "tree_walk_ms": t_tree * 1e3,
+           "fused_ms": t_fused * 1e3,
+           "pack_overhead_tree_us": over_tree * 1e6,
+           "pack_overhead_fused_us": over_fused * 1e6}
+    print_csv([row], list(row))
+    claims = {
+        "fused_pack_bit_exact": bit_exact,
+        "fused_pack_faster": bool(t_fused < t_tree),
+        "fused_pack_step_speedup": round(t_tree / max(t_fused, 1e-12), 4),
+        "fused_pack_overhead_us": round(over_fused * 1e6, 1),
+        "tree_walk_pack_overhead_us": round(over_tree * 1e6, 1),
+    }
+    return row, claims
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--grads", type=int, default=2000)
+    ap.add_argument("--algos", nargs="*", default=list(PAPER_ALGOS))
+    ap.add_argument("--seed", type=int, default=0)
+    # -- real-LM cluster sweep (accuracy at scale) ------------------------
+    ap.add_argument("--lm-workers", nargs="*", type=int, default=[2, 4],
+                    help="cluster sizes for the real-LM sweep "
+                         "(empty = skip the sweep)")
+    ap.add_argument("--lm-grads", type=int, default=120)
+    ap.add_argument("--lm-algos", nargs="*", default=list(LM_ALGOS))
+    ap.add_argument("--lm-backends", nargs="*", default=["thread",
+                                                         "process"],
+                    choices=["thread", "process"])
+    ap.add_argument("--lm-batch", type=int, default=4)
+    ap.add_argument("--lm-lr", type=float, default=0.05)
+    # -- worker-side pack-overhead micro-bench ----------------------------
+    ap.add_argument("--pack-reps", type=int, default=50,
+                    help="timing reps for the pack-overhead bench "
+                         "(0 = skip)")
+    # batch 2 keeps the backward cheap enough that the per-leaf host
+    # round trips of the tree-walk path are a measurable fraction
+    ap.add_argument("--pack-batch", type=int, default=2)
+    ap.add_argument("--out", default="results/bench_convergence.json")
+    args = ap.parse_args(argv)
+
+    rows, curves, claims = _engine_section(args)
+    out = {"rows": rows, "curves": curves}
+
+    if args.lm_workers:
+        lm_rows, lm_claims = _lm_cluster_section(args)
+        out["lm_rows"] = lm_rows
+        claims.update(lm_claims)
+    if args.pack_reps > 0:
+        pack_row, pack_claims = _pack_overhead_section(args)
+        out["pack_overhead"] = pack_row
+        claims.update(pack_claims)
+
     print("claims:", claims)
-    save_json(args.out, {"rows": rows, "curves": curves, "claims": claims})
+    out["claims"] = claims
+    save_json(args.out, out)
     return rows, claims
 
 

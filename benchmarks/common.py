@@ -46,23 +46,17 @@ def classifier_setup(seed: int = 0, dim: int = 32, num_classes: int = 10,
 def lm_setup(seed: int = 0, vocab: int = 128, seq: int = 64,
              batch_size: int = 8, d_model: int = 64):
     """The ImageNet/transformer stand-in: tiny transformer LM on the
-    synthetic markov task (uses the reduced qwen2-family model)."""
-    import jax.numpy as jnp
-    from repro.configs import get_config
-    from repro.models.api import build_model
-    import dataclasses
-    cfg = get_config("qwen2-1.5b").reduced()
-    cfg = dataclasses.replace(cfg, vocab_size=vocab, d_model=d_model,
-                              num_heads=4, num_kv_heads=2, head_dim=32,
-                              d_ff=4 * d_model)
-    model = build_model(cfg)
+    synthetic markov task (the reduced qwen2-family model, through the
+    picklable ModelGradFn so the SAME setup drives both cluster
+    backends)."""
+    from repro.models.api import ModelGradFn
+    grad_fn = ModelGradFn("qwen2-1.5b", overrides=dict(
+        vocab_size=vocab, d_model=d_model, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=4 * d_model), mesh_shape=(1, 1))
+    model = grad_fn.build_model()
     task = LMTask(vocab_size=vocab, seq_len=seq, batch_size=batch_size,
                   seed=seed)
-    params0 = model.init(jax.random.PRNGKey(seed))
-
-    def grad_fn(params, tokens):
-        return jax.grad(lambda p: model.loss(p, {"tokens": tokens}))(params)
-
+    params0 = grad_fn.init(jax.random.PRNGKey(seed))
     ev = task.eval_batch(8)
 
     def eval_fn(params):

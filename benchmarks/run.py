@@ -73,7 +73,14 @@ QUICK = {
     "kernels": ["--sizes", "4096", "--batch-rows", "64",
                 "--batch-k", "4", "--out", ""],
     "gap": ["--grads", "150", "--out", ""],
+    # the real-LM accuracy-at-scale smoke must keep BOTH live backends
+    # and >= 2 cluster sizes per algorithm so the lm_both_backends claim
+    # (and the fused pack-overhead claims) stay in the CI trajectory
     "convergence": ["--grads", "150", "--algos", "dana-zero",
+                    "--lm-grads", "60", "--lm-workers", "2", "4",
+                    "--lm-algos", "dana-zero", "sa-asgd",
+                    "--lm-backends", "thread", "process",
+                    "--lm-batch", "4", "--pack-reps", "15",
                     "--out", ""],
     "scaling": ["--grads", "150", "--workers", "2",
                 "--algos", "dana-zero", "--out", ""],

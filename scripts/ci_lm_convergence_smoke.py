@@ -1,0 +1,47 @@
+"""CI smoke for the real-model cluster convergence + fused-pack claims.
+
+Reruns ONLY the PR-10 sections of the convergence bench — the tiny real
+LM swept over workers x {dana-zero, sa-asgd} on BOTH live backends, and
+the worker-side pack-overhead micro-bench — for a few hundred updates,
+then asserts the claims are non-degenerate: every run's final eval loss
+beats the initial loss, both backends record a final-loss-vs-N curve
+for at least two algorithms, and the fused backward->wire emit is
+bit-exact and no slower than the cold tree-walk path.
+
+Must be a real file (not a ``python - <<EOF`` heredoc): the process
+backend's spawn start method re-imports the parent's __main__ in every
+child, and a <stdin> main cannot be re-run (see ci_procs_smoke.py).
+"""
+import os
+import sys
+
+# the benchmarks package lives at the repo root (PYTHONPATH only adds
+# src/); spawn children re-run this, so they resolve it too
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks import bench_convergence  # noqa: E402
+
+
+def smoke():
+    _, claims = bench_convergence.main(
+        ["--grads", "150", "--algos", "dana-zero",
+         "--lm-grads", "120", "--lm-workers", "2", "4",
+         "--lm-algos", "dana-zero", "sa-asgd",
+         "--lm-backends", "thread", "process",
+         "--lm-batch", "4", "--pack-reps", "20", "--out", ""])
+    assert claims["lm_loss_decreases"], claims
+    assert claims["lm_both_backends"], claims
+    counts = claims["lm_two_algo_curves_per_backend"]
+    assert counts["thread"] >= 2 and counts["process"] >= 2, claims
+    assert claims["fused_pack_bit_exact"], claims
+    assert claims["fused_pack_faster"], claims
+    assert claims["fused_pack_step_speedup"] > 1.0, claims
+    print("lm convergence + fused-pack claims ok:",
+          {k: claims[k] for k in
+           ("lm_loss_decreases", "lm_both_backends",
+            "fused_pack_bit_exact", "fused_pack_step_speedup")})
+
+
+if __name__ == "__main__":
+    sys.exit(smoke())

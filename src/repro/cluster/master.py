@@ -240,11 +240,13 @@ class Master:
         # bundle (attached by run_cluster when a registry is passed)
         self.obs_cat = "master"
         self.metrics = None
-        # sent-snapshot members (dc-asgd, dana-dc, ga-asgd) refresh a
-        # worker's snapshot on every send, so per-update staleness ==
-        # lag; snapshot-free members record NaN (no snapshot to age)
+        # stateful-send members (dc-asgd, dana-dc, ga-asgd, sa-asgd)
+        # restamp a worker's snapshot/lane on every send, so per-update
+        # staleness == lag — and pure-view fast paths (warm hot-range
+        # closures, hot-row pulls) must fall back to the full send;
+        # stateless-send members record NaN (no stamp to age)
         fam = family_spec_for(algo)
-        self._sent_family = fam is not None and fam.sent_key is not None
+        self._sent_family = fam is not None and fam.stateful_send
         # worker pull-ahead depth (staleness accounting only — the
         # workers implement the pipelining; see _flush_telemetry)
         self._pipeline_depth = max(0, int(pipeline_depth))

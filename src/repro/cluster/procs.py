@@ -34,7 +34,8 @@ process with live XLA threads deadlocks.  Children therefore re-import
 and re-jit (warm-up happens before workers start, so compile time never
 lands mid-run) — which is also why ``grad_fn`` / ``next_batch`` must be
 picklable for this backend (closures are rejected with a pointed
-error; see ``repro.models.toy.ClassifierGradFn``).
+error; see ``repro.models.toy.ClassifierGradFn`` and the
+real-model ``repro.models.api.ModelGradFn``).
 
 Scope (enforced by ``run_cluster``): live modes only, kernel-eligible
 algorithms on the flat path, no dropout / hot-row pulls / rebalancing /
@@ -767,9 +768,13 @@ def worker_main(conn, shm_name, layout, lock, wid, job):
         spec = FlatSpec.from_tree(job["params0"])
         subs = [spec.subspec(r0, r1) for r0, r1 in layout.ranges]
 
+        # the fused backward->wire emit (one jit: gather -> unpack ->
+        # backward -> pack_fused -> per-shard scatter).  No donation
+        # here: views arrive as fresh host copies out of the shm ring,
+        # so there is no device buffer to reuse
         def _sharded_grad(fv, batch):
-            g = spec.pack(grad_fn(spec.unpack(spec.concat_rows(fv)),
-                                  batch))
+            g = spec.pack_fused(
+                grad_fn(spec.unpack(spec.concat_rows(fv)), batch))
             return tuple(sub.take(g) for sub in subs)
 
         grad_jit = jax.jit(_sharded_grad)
@@ -906,8 +911,9 @@ def _check_picklable(grad_fn, next_batch):
                 f"backend='process' requires a picklable {label} "
                 f"(children re-import and re-jit under spawn); got "
                 f"{fn!r}: {e}.  Use a module-level function or a "
-                f"callable class like repro.models.toy.ClassifierGradFn "
-                f"instead of a closure.") from e
+                f"callable class (repro.models.toy.ClassifierGradFn, "
+                f"repro.models.api.ModelGradFn) instead of a "
+                f"closure.") from e
 
 
 def validate_process_config(algo, cfg):
@@ -1012,7 +1018,7 @@ def run_cluster_procs(algo, grad_fn, params0, next_batch, cfg,
     eval_boundary = cfg.eval_every if eval_fn is not None else 0
     eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
     inv_sqrt_p = 1.0 / math.sqrt(spec.n_elems)
-    sent_family = fam.sent_key is not None
+    sent_family = fam.stateful_send
 
     jax_cache = os.environ.get(
         "REPRO_JAX_CACHE_DIR",

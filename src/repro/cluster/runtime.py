@@ -272,6 +272,16 @@ def run_cluster(
         ]
         draw = (lambda wid: samplers[wid](wid))
 
+    # fused backward->wire donation: the worker's view buffer feeds ONE
+    # jit (unpack -> backward -> pack_fused), so the (R, 128) view can be
+    # donated into it — flat views are always fresh copies (``_view_flat``
+    # / reply buffers), never master state.  The view must not outlive
+    # the call: telemetry attaches it to the GradMsg, pull-ahead computes
+    # extra gradients against a cached view, and hot-row merges patch the
+    # old view — those runs keep the copying path.
+    donate = ((0,) if (not cfg.record_telemetry
+                       and cfg.pipeline_depth == 0
+                       and cfg.hot_rows is None) else ())
     if sharded and master.rebalancer is not None:
         # rebalance wire format: shard ranges move at run time, so the
         # worker ships the FULL packed gradient (the fan-out hands every
@@ -281,10 +291,10 @@ def run_cluster(
         spec = master.spec
 
         def _rebalance_grad(fv, batch):
-            return spec.pack(grad_fn(spec.unpack(spec.concat_rows(fv)),
-                                     batch))
+            return spec.pack_fused(
+                grad_fn(spec.unpack(spec.concat_rows(fv)), batch))
 
-        grad_jit = jax.jit(_rebalance_grad)
+        grad_jit = jax.jit(_rebalance_grad, donate_argnums=donate)
         if publisher is not None:
             # the rebalancer's busy_s signal prefers the published
             # series (the PR-6 observability path) over the live gauges
@@ -298,19 +308,22 @@ def run_cluster(
         subs = master.subs
 
         def _sharded_grad(fv, batch):
-            g = spec.pack(grad_fn(spec.unpack(spec.concat_rows(fv)),
-                                  batch))
+            g = spec.pack_fused(
+                grad_fn(spec.unpack(spec.concat_rows(fv)), batch))
             return tuple(sub.take(g) for sub in subs)
 
-        grad_jit = jax.jit(_sharded_grad)
+        grad_jit = jax.jit(_sharded_grad, donate_argnums=donate)
     elif master.state_is_flat:
-        # flat wire format: the worker unpacks its (R, 128) view and packs
-        # its gradient inside ITS OWN jit — the pytree<->flat traffic runs
-        # on the (parallel) worker threads, never on the master hot path
+        # flat wire format: the worker unpacks its (R, 128) view and
+        # emits its packed gradient inside ITS OWN jit (the fused
+        # backward->wire pack) — the pytree<->flat traffic runs on the
+        # (parallel) worker threads, never on the master hot path
         spec = master._flat_algo.spec
-        grad_jit = jax.jit(lambda fv, batch: spec.pack(
-            grad_fn(spec.unpack(fv), batch)))
+        grad_jit = jax.jit(lambda fv, batch: spec.pack_fused(
+            grad_fn(spec.unpack(fv), batch)), donate_argnums=donate)
     else:
+        # tree path: views ALIAS master state (send returns theta0
+        # itself), so donation is never safe here
         grad_jit = jax.jit(grad_fn)
     # hot-row pulls: one jitted merge closure per declaring worker, built
     # against the STATIC layout (skipped under rebalancing — ranges move,

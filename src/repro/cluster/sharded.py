@@ -627,10 +627,10 @@ class ShardedMaster:
         self._eval_jit = jax.jit(eval_fn) if eval_fn is not None else None
         self._time_fn = time_fn or (lambda m: m.t_send)
         self._inv_sqrt_p = 1.0 / math.sqrt(self.spec.n_elems)
-        # sent-snapshot members refresh the applying worker's snapshot on
-        # every send, so per-update staleness == lag (same bookkeeping
-        # the single master uses on its tree path)
-        self._sent_family = self._flat_algo.fam.sent_key is not None
+        # stateful-send members restamp the applying worker's
+        # snapshot/lane on every send, so per-update staleness == lag
+        # (same bookkeeping the single master uses on its tree path)
+        self._sent_family = self._flat_algo.fam.stateful_send
         self._hist_lock = threading.Lock()
         self._eval_slots: dict = {}     # step -> {"thetas": {sid: rows}, "t"}
         self._steady_mark = max(1, total_grads // 5)

@@ -30,6 +30,17 @@ whatever its ``grad_jit`` produces/consumes — a pytree (tree master), a
 flat (R, 128) buffer (flat master), or a range-ordered tuple of row
 slices (sharded master, where ``mailbox`` is the ``FanoutMailbox`` front
 and one push fans out to every shard).
+
+Donation contract (flat path): the runtime's fused grad jits unpack the
+received view into model params, run the backward and emit the (R, 128)
+wire in ONE jit, and may DONATE the view buffer to it
+(``cluster.runtime`` gates this on telemetry off + ``pipeline_depth=0``
++ no ``hot_rows``).  Those are exactly the three behaviors below that
+re-touch a view after ``grad`` runs — attaching it to the ``GradMsg``
+telemetry, recomputing against a cached reply in the pull-ahead
+pipeline, and ``merge_view`` patching hot rows — so under the gate the
+view is dead the moment ``grad`` is called and XLA may reuse its
+storage for the wire buffer.
 """
 from __future__ import annotations
 

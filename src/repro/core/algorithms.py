@@ -238,6 +238,44 @@ class ASGD(Algorithm):
         return state
 
 
+class SAASGD(ASGD):
+    """Staleness-aware ASGD (Zhang et al.): lr / tau per message.
+
+    The master stamps the step each worker's view was sent at
+    (``sent_t``, one f32 scalar per worker — the scalar twin of
+    dc-asgd's ``sent`` snapshot slab) and divides the learning rate for
+    worker i's gradient by its staleness tau = t - sent_t[i] (floored at
+    1, so synchronous pushes run at full lr).  The flat path keeps
+    ``sent_t`` in the ``wscal`` scalar lane and folds the division into
+    the PR 4 per-message ``lrs`` vector, so no kernel change is needed.
+    """
+
+    name = "sa-asgd"
+
+    def init(self, params, num_workers):
+        s = self._base_state(params, num_workers)
+        s["sent_t"] = jnp.zeros((num_workers,), jnp.float32)
+        return s
+
+    def send(self, state, i):
+        view, state = super().send(state, i)
+        state = dict(state)
+        state["sent_t"] = state["sent_t"].at[i].set(
+            jnp.asarray(state["t"], jnp.float32))
+        return view, state
+
+    def receive(self, state, i, grad, now=0.0):
+        lr, _ = self._lr_and_correction(state)
+        tau = jnp.maximum(
+            jnp.asarray(state["t"], jnp.float32) - state["sent_t"][i], 1.0)
+        lr = lr / tau
+        state = dict(state)
+        state["theta0"] = tree_axpy(-lr, grad, state["theta0"])
+        state["t"] = state["t"] + 1
+        state["lr_prev"] = lr
+        return state
+
+
 class NagASGD(Algorithm):
     """Single shared momentum vector at the master (NAG-ASGD)."""
 
@@ -595,8 +633,8 @@ class YellowFin(Algorithm):
 
 REGISTRY: dict[str, type[Algorithm]] = {
     cls.name: cls for cls in
-    [ASGD, NagASGD, MultiASGD, DCASGD, LWP, DanaZero, DanaSlim, DanaDC,
-     DanaHetero, SSGD, YellowFin]
+    [ASGD, SAASGD, NagASGD, MultiASGD, DCASGD, LWP, DanaZero, DanaSlim,
+     DanaDC, DanaHetero, SSGD, YellowFin]
 }
 
 

@@ -101,6 +101,10 @@ class FamilySpec:
     rate_weighted: bool = False  # dana-hetero: rate lane + weighted hats
     rate_ema: float = 0.8        # interval EMA coefficient
     uses_vscale: bool = True     # lazy Goyal rescale (False: Nadam pair)
+    staleness_lr: bool = False   # sa-asgd: lr / tau per message (scalar
+    #                              lane only, no snapshot slab; the PR 4
+    #                              per-message lrs carry the division so
+    #                              the kernel is untouched)
 
     @property
     def elementwise(self) -> bool:
@@ -108,6 +112,14 @@ class FamilySpec:
         sharding and the batched Pallas lowering rest on.  The hetero
         weighted hat IS per-row (the N-way mix happens within a row)."""
         return not self.gap_aware
+
+    @property
+    def stateful_send(self) -> bool:
+        """True iff a send WRITES master state (the sent-snapshot slab
+        and/or the staleness lane stamp), so pure-view fast paths — warm
+        hot-range closures, hot-row pulls — must fall back to
+        ``send_flat`` and callers must keep the returned state."""
+        return self.sent_key is not None or self.staleness_lr
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,11 +158,16 @@ def family_spec_for(algo) -> FamilySpec | None:
     """FamilySpec for ``algo``, or None if it must take the tree path."""
     from ...core.algorithms import (ASGD, DanaDC, DanaHetero, DanaNadam,
                                     DanaSlim, DanaZero, DCASGD, GapAware,
-                                    LWP, MultiASGD, NadamASGD, NagASGD)
+                                    LWP, MultiASGD, NadamASGD, NagASGD,
+                                    SAASGD)
     t = type(algo)
     if t is ASGD:
         return FamilySpec(None, None, None, nesterov=False,
                           shared_momentum=True, gamma=0.0)
+    if t is SAASGD:
+        return FamilySpec(None, None, None, nesterov=False,
+                          shared_momentum=True, gamma=0.0,
+                          staleness_lr=True)
     if t is DanaZero:
         return FamilySpec("v", "v0", None, nesterov=False,
                           shared_momentum=False)
@@ -228,7 +245,7 @@ def shard_bitexact(algo) -> bool:
 # asserts eligibility_matrix() against it so regressions fail loudly
 FLAT_ELIGIBLE = ("asgd", "dana-dc", "dana-hetero", "dana-nadam",
                  "dana-slim", "dana-zero", "dc-asgd", "ga-asgd", "lwp",
-                 "multi-asgd", "nadam-asgd", "nag-asgd")
+                 "multi-asgd", "nadam-asgd", "nag-asgd", "sa-asgd")
 # the subset whose SEND constructs a look-ahead view through the
 # weighted-slab reduction kernel (everyone else sends theta itself)
 SEND_KERNEL = ("dana-dc", "dana-hetero", "dana-nadam", "dana-zero",
@@ -293,6 +310,10 @@ def pack_state(algo, state: dict, spec: FlatSpec | None = None):
         # staleness lane: every snapshot is as old as the adoption point
         flat["wscal"] = _SENT_LANE.init(
             flat["sent"].shape[0], **{SENT_STEP: state["t"]})
+    elif fam.staleness_lr:
+        # scalar-only staleness: sent_t rides the lane, no snapshot slab
+        flat["wscal"] = _SENT_LANE.init(
+            state["sent_t"].shape[0], **{SENT_STEP: state["sent_t"]})
     if fam.rate_weighted:
         flat["rate"] = RATE_LANE.pack({RATE_INTERVAL: state["interval"],
                                        RATE_LAST_T: state["last_t"]})
@@ -357,6 +378,8 @@ def unpack_state(algo, flat: dict, spec: FlatSpec) -> dict:
         state[fam.u2_key] = spec.unpack(flat["u2"])
     if fam.sent_key is not None:
         state[fam.sent_key] = spec.unpack_stacked(flat["sent"])
+    if fam.staleness_lr:
+        state["sent_t"] = _SENT_LANE.get(flat["wscal"], SENT_STEP)
     if fam.rate_weighted:
         state["interval"] = RATE_LANE.get(flat["rate"], RATE_INTERVAL)
         state["last_t"] = RATE_LANE.get(flat["rate"], RATE_LAST_T)
@@ -488,7 +511,7 @@ class FlatAlgorithm:
         self.hp = algo.hp
         self.schedule = algo.schedule
         self.use_pallas = use_pallas
-        self.lane = _SENT_LANE if fam.sent_key is not None else None
+        self.lane = (_SENT_LANE if fam.stateful_send else None)
         self.spec: FlatSpec | None = None
 
     # -- Algorithm API ---------------------------------------------------
@@ -608,17 +631,19 @@ class FlatAlgorithm:
 
     def send_flat(self, flat: dict, i=0):
         """(view rows, updated flat): the wire-format send.  For the
-        sent-snapshot family this writes worker i's slab row (the
+        stateful-send family this stamps the staleness lane with t and —
+        when a snapshot slab exists — writes worker i's slab row (the
         look-ahead view for dana-dc, theta otherwise — mirroring each
-        algorithm's send) and stamps the staleness lane with t."""
+        algorithm's send); sa-asgd carries the lane stamp alone."""
         i = jnp.asarray(i, jnp.int32)
         view = self._view_flat(flat, i)
-        if self.fam.sent_key is None:
+        if self.lane is None:
             return view, flat
-        sval = view if self.fam.sent_view else flat["theta"]
         new = dict(flat)
-        new["sent"] = jax.lax.dynamic_update_index_in_dim(
-            flat["sent"], sval, i, axis=0)
+        if self.fam.sent_key is not None:
+            sval = view if self.fam.sent_view else flat["theta"]
+            new["sent"] = jax.lax.dynamic_update_index_in_dim(
+                flat["sent"], sval, i, axis=0)
         new["wscal"] = self.lane.set_at(flat["wscal"], SENT_STEP, i,
                                         flat["t"])
         return view, new
@@ -724,6 +749,13 @@ class FlatAlgorithm:
             nows = jnp.zeros((k,), jnp.float32)
         lrs, lrs_next, gammas, cgs, vscales, hcs = \
             self._msg_scalars(flat, k)
+        if self.fam.staleness_lr:
+            # Zhang et al.: lr_j / tau_j, tau floored at 1 (synchronous
+            # pushes run at full rate).  Folding the division into the
+            # per-message lrs keeps the kernel untouched and matches the
+            # tree path's per-receive division bit-for-bit.
+            lrs = lrs / jnp.maximum(self.batch_staleness(flat, wids, k),
+                                    1.0)
         weights = rate_lane = None
         if self.fam.rate_weighted:
             weights, rate_lane = self._rate_trajectory(flat, wids, nows, k)
@@ -751,6 +783,7 @@ class FlatAlgorithm:
             new["u2"] = u2
         if sent is not None:
             new["sent"] = sent
+        if self.lane is not None:
             wscal = flat["wscal"]
             for j in range(k):                   # k static, <= coalesce
                 wscal = self.lane.set_at(wscal, SENT_STEP, wids[j],

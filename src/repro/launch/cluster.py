@@ -66,19 +66,18 @@ def _setup(args):
         # closure, but picklable — required by --backend process
         return (params0, ClassifierGradFn(dims), task.batch,
                 make_eval(task.eval_batch()))
-    # tiny LM preset (the transformer stand-in)
-    import dataclasses as _dc
-    from ..configs import get_config
-    from ..models.api import build_model
-    cfg = get_config("qwen2-1.5b").reduced()
-    cfg = _dc.replace(cfg, vocab_size=128, d_model=64, num_heads=4,
-                      num_kv_heads=2, head_dim=32, d_ff=256)
-    model = build_model(cfg)
-    task = LMTask(vocab_size=128, seq_len=64, batch_size=args.batch,
+    # real-model preset: any registered config name, reduced to smoke
+    # scale by default.  ModelGradFn carries (config name, overrides)
+    # instead of a built model, so it pickles into process-backend
+    # workers, each of which rebuilds its model on its own host mesh.
+    from ..models.api import ModelGradFn, TINY_LM_OVERRIDES
+    over = dict(TINY_LM_OVERRIDES) if args.model == "qwen2-1.5b" else {}
+    grad_fn = ModelGradFn(args.model, overrides=over, mesh_shape=(1, 1))
+    model = grad_fn.build_model()
+    vocab = model.cfg.vocab_size
+    task = LMTask(vocab_size=vocab, seq_len=64, batch_size=args.batch,
                   seed=args.seed)
-    params0 = model.init(jax.random.PRNGKey(args.seed))
-    grad_fn = (lambda p, toks:
-               jax.grad(lambda q: model.loss(q, {"tokens": toks}))(p))
+    params0 = grad_fn.init(jax.random.PRNGKey(args.seed))
     ev = task.eval_batch(8)
     return params0, grad_fn, task.batch, (lambda p:
                                           model.loss(p, {"tokens": ev}))
@@ -90,6 +89,10 @@ def main(argv=None):
                     choices=sorted(REGISTRY))
     ap.add_argument("--preset", default="classifier",
                     choices=["classifier", "lm"])
+    ap.add_argument("--model", default="qwen2-1.5b",
+                    help="config name for --preset lm (any registered "
+                         "ArchConfig; reduced to smoke scale, with the "
+                         "tiny-LM overrides for the default config)")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--grads", type=int, default=1000)
     ap.add_argument("--mode", default="free",
@@ -164,11 +167,6 @@ def main(argv=None):
         use_kernel=False if args.no_kernel else None,
         backend=args.backend, pin_schedule=args.pin_schedule,
         pipeline_depth=args.pipeline_depth)
-    if args.backend == "process" and args.preset == "lm":
-        raise SystemExit("--backend process needs a picklable grad_fn; "
-                         "the lm preset builds a closure (use the "
-                         "classifier preset)")
-
     algo = make_algorithm(args.algo, hp, sched)
     stats: dict = {}
     registry = None

@@ -132,3 +132,94 @@ class Model:
 
 def build_model(cfg: ArchConfig) -> Model:
     return Model(cfg)
+
+
+# a tiny-but-real reduction used by the cluster quickstart, the
+# convergence bench and the process-backend e2e tests: real attention /
+# mlp / embedding leaves (ragged shapes, the full pack surface) at CPU
+# smoke-test cost
+TINY_LM_OVERRIDES = dict(vocab_size=128, d_model=64, num_heads=4,
+                         num_kv_heads=2, head_dim=32, d_ff=256)
+
+
+class ModelGradFn:
+    """Picklable gradient of a real model's LM loss.
+
+    The process cluster backend pickles its ``grad_fn`` into every
+    worker, so a ``jax.grad`` closure over a built model cannot cross
+    the boundary (see ``repro.models.toy.ClassifierGradFn`` for the toy
+    twin).  This carries only ``(config_name, reduced, overrides,
+    mesh_shape)`` and rebuilds the model + traced gradient lazily per
+    process — each worker therefore owns its OWN device mesh and
+    sharding placement, constructed after spawn.
+
+    ``mesh_shape`` is a ``launch.mesh.make_host_mesh`` shape over
+    ("data", "model"); with more than one device the rebuilt gradient is
+    jitted with ``launch.sharding.param_pspecs`` placement for params
+    and gradient (per-worker tensor parallelism), and on a single-device
+    host the mesh degenerates to plain local placement with no
+    constraint overhead.
+
+    ``batch`` is the raw (B, S) int32 token array the synthetic
+    ``LMTask`` emits (the cluster runtime's wire convention for the lm
+    preset); it is wrapped into ``Model.loss``'s batch dict here.
+    """
+
+    def __init__(self, config_name: str, *, reduced: bool = True,
+                 overrides: dict | None = None,
+                 mesh_shape: tuple[int, int] | None = None):
+        self.config_name = str(config_name)
+        self.reduced = bool(reduced)
+        self.overrides = dict(overrides or {})
+        self.mesh_shape = tuple(mesh_shape) if mesh_shape else None
+        self._grad = None
+
+    def __getstate__(self):
+        return {"config_name": self.config_name, "reduced": self.reduced,
+                "overrides": self.overrides,
+                "mesh_shape": self.mesh_shape}
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._grad = None
+
+    # -- lazy per-process construction -----------------------------------
+    def build_config(self) -> ArchConfig:
+        from ..configs import get_config
+        cfg = get_config(self.config_name)
+        if self.reduced:
+            cfg = cfg.reduced()
+        return dataclasses.replace(cfg, **self.overrides)
+
+    def build_model(self) -> Model:
+        return build_model(self.build_config())
+
+    def init(self, key):
+        return self.build_model().init(key)
+
+    def _build(self):
+        cfg = self.build_config()
+        model = build_model(cfg)
+
+        def loss(params, tokens):
+            return model.loss(params, {"tokens": tokens})
+
+        grad = jax.grad(loss)
+        if self.mesh_shape is not None:
+            from ..launch.mesh import make_host_mesh
+            from ..launch.sharding import param_pspecs, to_shardings
+            mesh = make_host_mesh(self.mesh_shape)
+            if mesh.size > 1:
+                # per-worker tensor-parallel placement: params arrive /
+                # gradients leave sharded over this worker's own mesh
+                shaped = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+                sh = to_shardings(mesh,
+                                  param_pspecs(cfg, shaped, mesh))
+                grad = jax.jit(grad, in_shardings=(sh, None),
+                               out_shardings=sh)
+        return grad
+
+    def __call__(self, params, batch):
+        if self._grad is None:
+            self._grad = self._build()
+        return self._grad(params, batch)

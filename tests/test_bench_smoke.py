@@ -85,6 +85,29 @@ def test_quick_cluster_covers_dana_hetero():
     assert "dana-hetero" in algos
 
 
+def test_quick_convergence_covers_real_lm_both_backends():
+    """The convergence smoke must run the real-LM accuracy-at-scale
+    sweep on BOTH live backends with >= 2 cluster sizes and >= 2
+    algorithms (one of them the staleness-aware sa-asgd), so the
+    lm_loss_decreases / lm_both_backends claims stay non-degenerate in
+    the CI trajectory."""
+    argv = bench_run.QUICK["convergence"]
+    assert set(_argv_values(argv, "--lm-backends")) == {"thread",
+                                                        "process"}
+    workers = [int(w) for w in _argv_values(argv, "--lm-workers")]
+    assert len(set(workers)) >= 2
+    algos = _argv_values(argv, "--lm-algos")
+    assert len(set(algos)) >= 2 and "sa-asgd" in algos
+
+
+def test_quick_convergence_covers_pack_overhead():
+    """The convergence smoke must keep the fused backward->wire pack
+    micro-bench on (pack-reps > 0): its bit-exactness and speedup
+    claims are the PR-10 hot-path regression guard."""
+    argv = bench_run.QUICK["convergence"]
+    assert int(_argv_values(argv, "--pack-reps")[0]) > 0
+
+
 def test_bench_scaling_out_empty_writes_nothing(tmp_path, monkeypatch):
     """bench_scaling must treat --out "" as 'no artifact', not fall
     through to its default path (the --quick contract)."""

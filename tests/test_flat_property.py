@@ -61,6 +61,12 @@ def check_roundtrip_and_ranges(tree, row_align, shards):
     # pack -> unpack identity (shapes, dtypes, values)
     _assert_trees_equal(tree, spec.unpack(buf))
 
+    # the fused leaf-offset emit (the worker hot path) is bit-exact vs
+    # the tree-walk pack for ANY shapes / dtypes / alignment — padding
+    # rows, dtype promotion and ragged leaves included
+    np.testing.assert_array_equal(np.asarray(spec.pack_fused(tree)),
+                                  np.asarray(buf))
+
     # norm preservation: padding contributes exactly zero
     tree_sq = sum(float(np.sum(np.square(np.asarray(l, np.float64))))
                   for l in jax.tree.leaves(tree))

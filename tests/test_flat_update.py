@@ -98,7 +98,7 @@ def test_eligible_set_is_the_flat_family():
     assert ELIGIBLE == sorted(FLAT_ELIGIBLE) == [
         "asgd", "dana-dc", "dana-hetero", "dana-nadam", "dana-slim",
         "dana-zero", "dc-asgd", "ga-asgd", "lwp", "multi-asgd",
-        "nadam-asgd", "nag-asgd"]
+        "nadam-asgd", "nag-asgd", "sa-asgd"]
     # the matrix is CLOSED over the asynchronous registry: only the
     # elastic-replica pair (whose sends are per-worker replicas, not a
     # master-state view), yellowfin's closed-loop autotuner, and the
@@ -296,6 +296,7 @@ def _fam_keys(algo):
             + ([fam.sum_key] if fam.sum_key else [])
             + ([fam.u2_key] if fam.u2_key else [])
             + ([fam.sent_key] if fam.sent_key else [])
+            + (["sent_t"] if fam.staleness_lr else [])
             + (["interval", "last_t"] if fam.rate_weighted else [])
             + (["avg_step"] if fam.gap_aware else []))
 

@@ -1,0 +1,141 @@
+"""Real models on the cluster: the fused backward->wire pack path and
+the picklable ``ModelGradFn`` that carries a real transformer LM into
+process-backend workers.
+
+Three contracts from PR 10:
+
+* ``FlatSpec.pack_fused`` (the leaf-offset emit the worker grad jits
+  use) is bit-exact vs the tree-walk ``FlatSpec.pack`` on a REAL model
+  pytree — ragged attention/mlp/embedding leaves, padding rows and all
+  — inside jit, where the hot path runs it;
+* ``ModelGradFn`` pickles across the process boundary and rebuilds the
+  same gradient bit-for-bit (the process backend's requirement);
+* a tiny real LM trains end-to-end through ``run_cluster`` on BOTH
+  backends, including the staleness-aware ``sa-asgd`` member and the
+  donated (telemetry-off) hot path.
+"""
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, run_cluster
+from repro.core import GammaModel, HyperParams, make_algorithm
+from repro.core.flat import LANES, FlatSpec
+from repro.data.synthetic import LMTask
+from repro.models.api import TINY_LM_OVERRIDES, ModelGradFn
+
+GRAD_FN = ModelGradFn("qwen2-1.5b", overrides=TINY_LM_OVERRIDES,
+                      mesh_shape=(1, 1))
+MODEL = GRAD_FN.build_model()
+TASK = LMTask(vocab_size=MODEL.cfg.vocab_size, seq_len=32, batch_size=4,
+              seed=7)
+PARAMS0 = GRAD_FN.init(jax.random.PRNGKey(0))
+EVAL_TOKENS = TASK.eval_batch(8)
+
+
+def _eval_fn(params):
+    return MODEL.loss(params, {"tokens": EVAL_TOKENS})
+
+
+# ---------------------------------------------------------------------------
+# fused pack on a real model pytree
+# ---------------------------------------------------------------------------
+def test_pack_fused_real_model_bit_exact():
+    g = GRAD_FN(PARAMS0, TASK.batch(0, 0))
+    spec = FlatSpec.from_tree(PARAMS0)
+    assert len(spec.sizes) >= 10      # a real pytree, not a toy
+    assert spec.padded > spec.n_elems  # padding rows are in play
+    ref = spec.pack(g)
+    fused = jax.jit(spec.pack_fused)(g)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+    # padding region stays exactly zero (load-bearing: update rules map
+    # zero rows to zero)
+    np.testing.assert_array_equal(
+        np.asarray(fused).reshape(-1)[spec.n_elems:],
+        np.zeros(spec.padded - spec.n_elems, np.float32))
+    # round trip restores every leaf's shape, dtype and values
+    back = spec.unpack(fused)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_pack_fused_whole_backward_in_one_jit():
+    """The worker hot path: grad -> wire in ONE jit equals the cold
+    two-dispatch path (a grad jit emitting the 15-leaf pytree, then a
+    separate tree-walk pack dispatch).  Both sides jit the backward:
+    eager-mode gradients reassociate differently under XLA fusion, and
+    the contract under test is the PACK, not the autodiff."""
+    spec = FlatSpec.from_tree(PARAMS0)
+    tokens = TASK.batch(0, 0)
+    fused = jax.jit(lambda p, t: spec.pack_fused(GRAD_FN(p, t)))
+    wire = fused(PARAMS0, tokens)
+    assert wire.shape == (spec.rows, LANES) and wire.dtype == jnp.float32
+    g = jax.jit(lambda p, t: GRAD_FN(p, t))(PARAMS0, tokens)
+    cold = jax.jit(spec.pack)(g)
+    np.testing.assert_array_equal(np.asarray(wire), np.asarray(cold))
+
+
+# ---------------------------------------------------------------------------
+# ModelGradFn across the process boundary
+# ---------------------------------------------------------------------------
+def test_model_grad_fn_pickles_bit_exact():
+    blob = pickle.dumps(GRAD_FN)
+    clone = pickle.loads(blob)
+    assert clone._grad is None        # traced gradient never crosses
+    tokens = TASK.batch(1, 3)
+    a = GRAD_FN(PARAMS0, tokens)
+    b = clone(PARAMS0, tokens)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_model_grad_fn_single_device_mesh_degenerates():
+    # mesh_shape (1, 1) on a one-device host must not add sharding
+    # constraints: same grads as the meshless build
+    plain = ModelGradFn("qwen2-1.5b", overrides=TINY_LM_OVERRIDES)
+    tokens = TASK.batch(0, 1)
+    a = GRAD_FN(PARAMS0, tokens)
+    b = plain(PARAMS0, tokens)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# tiny real LM end-to-end on both backends
+# ---------------------------------------------------------------------------
+def _lm_cfg(backend, **kw):
+    kw.setdefault("record_telemetry", False)   # donated hot path
+    return ClusterConfig(num_workers=2, total_grads=24, eval_every=8,
+                         mode="free", coalesce=2,
+                         exec_model=GammaModel(seed=5), backend=backend,
+                         **kw)
+
+
+@pytest.mark.parametrize("algo_name", ["dana-zero", "sa-asgd"])
+def test_thread_backend_tiny_lm_converges(algo_name):
+    algo = make_algorithm(algo_name, HyperParams(lr=0.05, momentum=0.9))
+    stats = {}
+    hist = run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch,
+                       _lm_cfg("thread"), _eval_fn, stats_out=stats)
+    assert stats["applied"] == 24
+    loss0 = float(_eval_fn(PARAMS0))
+    assert np.isfinite(hist.final_loss())
+    assert hist.final_loss() < loss0
+
+
+def test_process_backend_tiny_lm_e2e():
+    algo = make_algorithm("sa-asgd", HyperParams(lr=0.05, momentum=0.9))
+    stats = {}
+    hist = run_cluster(algo, GRAD_FN, PARAMS0, TASK.batch,
+                       _lm_cfg("process", rpc_timeout=120.0), _eval_fn,
+                       stats_out=stats)
+    assert stats["backend"] == "process"
+    assert stats["applied"] == 24
+    loss0 = float(_eval_fn(PARAMS0))
+    assert np.isfinite(hist.final_loss())
+    assert hist.final_loss() < loss0
